@@ -1,0 +1,47 @@
+"""Fig. 10 — robustness to confidence errors: calibrated confidence vs
+actual accuracy across the bitrate ladder (binned reliability curve)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, shared_benchmark, shared_calibrator, timed
+from repro.devibench.pipeline import _answer, _encode_at
+
+
+def run(quick: bool = True):
+    bench = shared_benchmark(quick)
+    cal = shared_calibrator(quick)
+    recs = (bench.test + bench.validation)[: 40 if quick else 200]
+
+    def collect():
+        confs, correct = [], []
+        for rec in recs:
+            sc = bench.scene(rec)
+            frame = sc.render(rec.t_frame)
+            for kbps in (200.0, 700.0, 1700.0):
+                rx = _encode_at(frame, kbps)
+                ans, margin = _answer(sc, rec, rx)
+                confs.append(cal(margin))
+                correct.append(float(ans == rec.answer))
+        return np.asarray(confs), np.asarray(correct)
+
+    (confs, correct), us = timed(collect)
+    # reliability: accuracy within confidence bins
+    bins = [(0.0, 0.33), (0.33, 0.66), (0.66, 1.01)]
+    rows = []
+    accs = []
+    for lo, hi in bins:
+        m = (confs >= lo) & (confs < hi)
+        acc = float(correct[m].mean()) if m.any() else float("nan")
+        accs.append(acc)
+        rows.append(Row(f"fig10.accuracy@conf[{lo:.2f},{hi:.2f})", us,
+                        f"acc={acc:.2f},n={int(m.sum())}"))
+    # alignment: higher-confidence bins must be more accurate
+    mono = all(a <= b + 0.05 for a, b in zip(accs, accs[1:])
+               if not (np.isnan(a) or np.isnan(b)))
+    corr = float(np.corrcoef(confs, correct)[0, 1])
+    rows.append(Row("fig10.confidence_accuracy_corr", us,
+                    f"pearson={corr:.2f},monotone={mono}"))
+    print(f"[fig10] confidence-accuracy corr={corr:.2f}, bins={accs} "
+          "(paper: scores generally align with accuracy)")
+    return rows

@@ -1,0 +1,67 @@
+"""Framework kernel microbenchmarks.
+
+CPU-interpret timings are NOT perf claims (TPU is the target — see the
+roofline analysis for those); this bench validates the kernels run and
+prints the derived arithmetic-intensity figures used in §Perf.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_decode import ops as fd_ops
+from repro.kernels.qp_codec.ops import qp_codec_frame
+
+
+def _time(fn, *args, reps=3, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(quick: bool = True):
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # flash attention: B=1, S=256, Hq=8, Hk=2, d=64
+    B, S, Hq, Hk, d = 1, 256, 8, 2, 64
+    q = jax.random.normal(key, (B, S, Hq, d), jnp.bfloat16)
+    k = jax.random.normal(key, (B, S, Hk, d), jnp.bfloat16)
+    v = jax.random.normal(key, (B, S, Hk, d), jnp.bfloat16)
+    us = _time(fa_ops.flash_attention, q, k, v, bq=64, bk=64, interpret=True)
+    flops = 4 * B * S * S * Hq * d  # QK^T + PV
+    hbm = (q.size + 2 * k.size) * 2 + q.size * 2
+    rows.append(Row("kernel.flash_attention.interp", us,
+                    f"AI={flops / hbm:.0f}flops/byte"))
+
+    # flash decode: B=4, KV 4k
+    Sk = 2048 if quick else 32768
+    q1 = jax.random.normal(key, (4, 1, Hq, d), jnp.bfloat16)
+    kc = jax.random.normal(key, (4, Sk, Hk, d), jnp.bfloat16)
+    vc = jax.random.normal(key, (4, Sk, Hk, d), jnp.bfloat16)
+    us = _time(fd_ops.flash_decode, q1, kc, vc, jnp.full((4,), Sk),
+               bk=512, interpret=True)
+    flops = 4 * 4 * Sk * Hq * d
+    hbm = 2 * kc.size * 2
+    rows.append(Row("kernel.flash_decode.interp", us,
+                    f"AI={flops / hbm:.2f}flops/byte(memory-bound)"))
+
+    # qp codec: 256x256 frame
+    frame = jax.random.uniform(key, (256, 256))
+    qp = jnp.full((32, 32), 30.0)
+    us = _time(qp_codec_frame, frame, qp, bs=256, interpret=True)
+    rows.append(Row("kernel.qp_codec.interp", us,
+                    f"blocks={32 * 32},fused_dct_quant_rate"))
+
+    for r in rows:
+        print(f"[kernels] {r.csv()}")
+    return rows

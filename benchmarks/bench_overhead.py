@@ -1,0 +1,56 @@
+"""Fig. 14/15 — overhead: uplink bandwidth usage reduction and the
+monetary-cost model of running Artic's feedback loop."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, shared_calibrator, timed
+from repro.core.session import SessionConfig, run_session
+from repro.net.traces import fluctuating_trace
+from repro.video.scenes import make_scene
+
+# $/min cost model from the paper §7.5
+COST_MLLM_API = 0.303
+COST_RTC_API = 0.01
+COST_ZECO = 0.071       # grounding feedback tokens
+COST_RECAP = 0.0137     # confidence feedback tokens
+
+
+def run(quick: bool = True):
+    cal = shared_calibrator(quick)
+    duration = 40.0 if quick else 90.0
+    rows = []
+    usage = {}
+    for cc in ("gcc", "bbr"):
+        u = {}
+        for name, flags in (("webrtc", dict(use_recap=False, use_zeco=False)),
+                            ("artic", dict(use_recap=True, use_zeco=True))):
+            vals, us_tot = [], 0.0
+            for seed in ([0] if quick else [0, 1, 2]):
+                sc = make_scene("retail", False, seed=seed)
+                tr = fluctuating_trace(duration, switches_per_min=2,
+                                       seed=seed)
+                m, us = timed(run_session, sc, [], tr, SessionConfig(
+                    duration=duration, cc_kind=cc, **flags), cal)
+                vals.append(m.bandwidth_used)
+                us_tot += us
+            u[name] = float(np.mean(vals))
+        usage[cc] = u
+        red = 100 * (1 - u["artic"] / max(u["webrtc"], 1.0))
+        rows.append(Row(f"fig14.bandwidth.{cc}", us_tot,
+                        f"webrtc={u['webrtc'] / 1e6:.2f}Mbps,"
+                        f"artic={u['artic'] / 1e6:.2f}Mbps,"
+                        f"reduction={red:.1f}%"))
+        print(f"[fig14/{cc}] uplink usage {u['webrtc'] / 1e6:.2f} -> "
+              f"{u['artic'] / 1e6:.2f} Mbps ({red:.1f}% reduction; "
+              "paper: 46.84%/69.77% for GCC/BBR)")
+
+    base_cost = COST_MLLM_API + COST_RTC_API
+    artic_cost = base_cost + COST_ZECO + COST_RECAP
+    rise = 100 * (artic_cost / base_cost - 1)
+    rows.append(Row("fig15.monetary_cost", 0.0,
+                    f"baseline=${base_cost:.4f}/min,"
+                    f"artic=${artic_cost:.4f}/min,rise={rise:.2f}%"))
+    print(f"[fig15] ${base_cost:.4f} -> ${artic_cost:.4f}/min "
+          f"(+{rise:.2f}%; paper: +27.13%)")
+    return rows

@@ -1,0 +1,39 @@
+"""Shared benchmark plumbing: timing, CSV rows, cached DeViBench build."""
+from __future__ import annotations
+
+import functools
+import os
+import time
+from typing import Callable, Dict, List
+
+QUICK = os.environ.get("BENCH_QUICK", "1") != "0"
+
+
+class Row:
+    def __init__(self, name: str, us_per_call: float, derived: str):
+        self.name = name
+        self.us = us_per_call
+        self.derived = derived
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us:.1f},{self.derived}"
+
+
+def timed(fn: Callable, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+@functools.lru_cache()
+def shared_benchmark(quick: bool = True):
+    from repro.devibench import pipeline as dvb
+    return dvb.generate(n_scenes_per_cat=1 if quick else 3,
+                        questions_per_obj=2 if quick else 4,
+                        seed=0, n_frames=20 if quick else 60)
+
+
+@functools.lru_cache()
+def shared_calibrator(quick: bool = True):
+    from repro.devibench.pipeline import fit_confidence_calibrator
+    return fit_confidence_calibrator(shared_benchmark(quick))

@@ -1,0 +1,49 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (harness contract) and a
+human summary per figure.  BENCH_QUICK=0 runs the full-size versions.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks.common import QUICK
+
+
+def main() -> None:
+    from benchmarks import (bench_confidence, bench_devibench, bench_e2e,
+                            bench_kernels, bench_measurement, bench_overhead,
+                            bench_recapabr, bench_saturation,
+                            bench_zecostream)
+    modules = [
+        ("fig2_measurement", bench_measurement),
+        ("fig3_saturation", bench_saturation),
+        ("fig9_recapabr", bench_recapabr),
+        ("fig10_confidence", bench_confidence),
+        ("fig11_zecostream", bench_zecostream),
+        ("fig13_e2e", bench_e2e),
+        ("fig14_15_overhead", bench_overhead),
+        ("table2_devibench", bench_devibench),
+        ("kernels", bench_kernels),
+    ]
+    all_rows = []
+    failures = []
+    for name, mod in modules:
+        print(f"\n=== {name} ===", flush=True)
+        try:
+            all_rows.extend(mod.run(QUICK))
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+
+    print("\nname,us_per_call,derived")
+    for r in all_rows:
+        print(r.csv())
+    if failures:
+        print(f"\nFAILED benchmarks: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Fig. 13-style four-system comparison on one harsh mobility trace.
+
+    WebRTC | +ReCapABR | +ZeCoStream | Artic   x   {GCC, BBR}
+
+Run:  PYTHONPATH=src python examples/artic_vs_webrtc.py
+"""
+import numpy as np
+
+from repro.core.session import QASample, SessionConfig, run_session
+from repro.net.traces import mobility_trace
+from repro.video.scenes import make_scene
+
+SYSTEMS = {
+    "WebRTC": dict(use_recap=False, use_zeco=False),
+    "WebRTC+ReCapABR": dict(use_recap=True, use_zeco=False),
+    "WebRTC+ZeCoStream": dict(use_recap=False, use_zeco=True),
+    "Artic": dict(use_recap=True, use_zeco=True),
+}
+
+
+def main():
+    duration = 60.0
+    scene = make_scene("street", moving=True, seed=1, code_period_frames=40)
+    trace = mobility_trace("driving", duration, seed=1)
+    qa = [QASample(t_ask=4.5 + 4.0 * i, obj_idx=i % len(scene.objects),
+                   answer_window=3.4)
+          for i in range(int(duration / 4) - 2)]
+
+    print(f"{'system':20s} {'acc':>6s} {'avg ms':>8s} {'p95 ms':>8s} "
+          f"{'Mbps':>6s} {'drops':>6s}")
+    for cc in ("gcc", "bbr"):
+        print(f"--- {cc.upper()} ---")
+        for name, flags in SYSTEMS.items():
+            m = run_session(scene, qa, trace, SessionConfig(
+                duration=duration, cc_kind=cc, **flags))
+            print(f"{name:20s} {m.accuracy:6.2f} {m.avg_latency_ms:8.0f} "
+                  f"{m.p95_latency_ms:8.0f} {m.bandwidth_used / 1e6:6.2f} "
+                  f"{m.dropped_frames:6d}")
+
+
+if __name__ == "__main__":
+    main()

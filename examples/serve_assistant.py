@@ -1,0 +1,107 @@
+"""Serve the MLLM video assistant with the real JAX model in the loop.
+
+End-to-end driver of the serving stack (the paper's deployment kind):
+
+ 1. continuous-batching engine serves a queue of text requests over the
+    artic-assistant backbone (slot reuse, per-slot lengths);
+ 2. a streaming *video session*: codec-degraded frames become patch
+    embeddings appended to the MLLM context (chunked prefill); a question
+    is decoded; the logit-derived confidence C_t and a gradient-saliency
+    grounding box are produced — the two Artic feedback signals — at two
+    different encoding bitrates, showing C_t tracking degradation.
+
+Run:  PYTHONPATH=src python examples/serve_assistant.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.core.confidence import raw_score_from_telemetry
+from repro.core.grounding import saliency_boxes
+from repro.models import transformer as tfm
+from repro.serving.engine import Engine, Request
+from repro.video import codec
+from repro.video.scenes import make_scene
+
+
+def batched_serving(cfg, params):
+    print("=== continuous batching: 6 requests through 2 slots ===")
+    eng = Engine(cfg, params, max_batch=2, max_len=96)
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for i in range(6):
+        eng.submit(Request(uid=i,
+                           tokens=rng.integers(0, cfg.vocab, 12, dtype=np.int32),
+                           max_new_tokens=8))
+    done = eng.run_until_drained()
+    dt = time.time() - t0
+    print(f"served {len(done)} requests / {eng.stats.tokens_out} tokens "
+          f"in {dt:.1f}s ({eng.stats.tokens_out / dt:.1f} tok/s, "
+          f"{eng.stats.steps} engine ticks)")
+    for r in done[:3]:
+        conf = raw_score_from_telemetry(
+            [np.exp(l) for l in r.logprobs], r.entropies, cfg.vocab)
+        print(f"  req {r.uid}: {len(r.output)} tokens, confidence {conf:.2f}")
+
+
+def video_session(cfg, params):
+    print("\n=== Artic video session with the real MLLM ===")
+    scene = make_scene("retail", False, seed=0, h=128, w=128)
+    patch = 16
+    gy, gx = 128 // patch, 128 // patch
+    key = jax.random.PRNGKey(0)
+    # frozen random patch projection = the stubbed vision frontend
+    proj = jax.random.normal(key, (patch * patch, cfg.d_model)) * 0.05
+
+    def frame_to_embeds(frame):
+        f = jnp.asarray(frame, jnp.float32)
+        patches = f.reshape(gy, patch, gx, patch).transpose(0, 2, 1, 3)
+        patches = patches.reshape(gy * gx, patch * patch)
+        return (patches - 0.5) @ proj
+
+    question = jnp.arange(1, 9, dtype=jnp.int32)[None, :]  # stub question ids
+
+    for kbps in (2000.0, 150.0):
+        frame = scene.render(0)
+        qp, enc = codec.rate_control(
+            jnp.asarray(frame), np.zeros((16, 16), np.float32),
+            jnp.float32(kbps * 100))
+        rx = codec.decode(enc)
+
+        def answer_conf(embeds):
+            cache = tfm.init_cache(cfg, 1, 256)
+            _, cache = tfm.prefill_extend(params, cache,
+                                          {"embeds": embeds[None]}, cfg)
+            logits, cache = tfm.prefill_extend(params, cache,
+                                               {"tokens": question}, cfg)
+            logp = jax.nn.log_softmax(logits[0, -1].astype(jnp.float32))
+            top = jnp.max(jnp.exp(logp))
+            ent = -jnp.sum(jnp.exp(logp) * logp)
+            return top, ent, logits
+
+        embeds = frame_to_embeds(rx)
+        top, ent, _ = answer_conf(embeds)
+        # gradient saliency w.r.t. patch embeddings (one VJP)
+        g = jax.grad(lambda e: answer_conf(e)[0])(embeds)
+        boxes = saliency_boxes(np.asarray(g), (gy, gx), (128, 128))
+        conf = raw_score_from_telemetry([float(top)], [float(ent)], cfg.vocab)
+        print(f"  {kbps:6.0f} kbps: confidence C_t={conf:.3f}, "
+              f"grounding box={np.round(boxes[0], 0) if boxes else None}")
+    print("  (random-init weights -> C_t is flat; with a trained model "
+          "C_t tracks degradation, cf. benchmarks/bench_confidence.py. "
+          "This demo exercises the plumbing: logits->C_t telemetry and "
+          "the one-VJP saliency box that feeds ZeCoStream's QP map.)")
+
+
+def main():
+    cfg = registry.get_config("artic-assistant")
+    params = tfm.init(jax.random.PRNGKey(0), cfg)
+    batched_serving(cfg, params)
+    video_session(cfg, params)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""The paper's own MLLM video assistant backbone (examples/ scale).
+
+A small qwen2-vl-style decoder that ingests video-patch embeddings from
+the Artic codec pipeline plus text tokens, and produces responses,
+confidence feedback and grounding boxes.  This is the model the runnable
+examples train/serve on CPU; the production archs swap in via --arch.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="artic-assistant", family="dense",
+    n_layers=4, d_model=256, n_heads=8, n_kv_heads=4, head_dim=32,
+    d_ff=1024, vocab=4096,
+    qk_norm=True, rope_theta=1e5, mrope_sections=(4, 6, 6),
+    dtype="float32", param_dtype="float32",
+).validate()

@@ -1,0 +1,13 @@
+"""mamba2-780m [ssm] — SSD (state-space duality). [arXiv:2405.21060]
+
+Attention-free: n_heads here is the SSD head count d_inner/headdim = 48.
+Sub-quadratic => runs the long_500k shape.
+"""
+from repro.models.config import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-780m", family="ssm",
+    n_layers=48, d_model=1536, n_heads=48, n_kv_heads=48, head_dim=64,
+    d_ff=0, vocab=50280,
+    ssm=SSMConfig(d_state=128, expand=2, headdim=64, ngroups=1, chunk=256),
+).validate()

@@ -1,0 +1,15 @@
+"""musicgen-medium [audio] — decoder-only over EnCodec tokens. [arXiv:2306.05284]
+
+Backbone only; the EnCodec frontend is a stub — inputs are 4 parallel
+codebook token streams (delay-pattern interleaving lives in repro.data).
+24 heads do not divide the 16-way `model` axis: attention projections fall
+back to replication (mlp stays TP) — see DESIGN.md §4.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium", family="dense",
+    n_layers=48, d_model=1536, n_heads=24, n_kv_heads=24, head_dim=64,
+    d_ff=6144, vocab=2048, num_codebooks=4,
+    rope_theta=1e4,
+).validate()

@@ -1,0 +1,13 @@
+"""qwen2-vl-72b [vlm] — M-RoPE, dynamic resolution. [arXiv:2409.12191; hf]
+
+Backbone only; the vision frontend is a stub — input_specs() provides
+precomputed patch embeddings plus (t, h, w) M-RoPE position ids.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-72b", family="dense",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+    d_ff=29568, vocab=152064,
+    rope_theta=1e6, mrope_sections=(16, 24, 24), remat_policy="full",
+).validate()

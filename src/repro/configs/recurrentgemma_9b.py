@@ -1,0 +1,14 @@
+"""recurrentgemma-9b [hybrid] — RG-LRU + local attention 1:2. [arXiv:2402.19427]
+
+38 layers = 12 x (rec, rec, attn) groups + 2 tail rec layers.  MQA (kv=1),
+2048-token local window. Sub-quadratic => runs the long_500k shape.
+"""
+from repro.models.config import ModelConfig, RGLRUConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b", family="hybrid",
+    n_layers=38, d_model=4096, n_heads=16, n_kv_heads=1, head_dim=256,
+    d_ff=12288, vocab=256000,
+    local_window=2048, rope_theta=1e4,
+    rglru=RGLRUConfig(lru_width=4096, pattern=("rec", "rec", "attn")),
+).validate()

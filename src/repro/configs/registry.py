@@ -1,0 +1,34 @@
+"""Architecture registry: ``--arch <id>`` -> ModelConfig."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+ARCHS: Dict[str, str] = {
+    "qwen3-0.6b": "qwen3_0_6b",
+    "llama3-405b": "llama3_405b",
+    "mistral-large-123b": "mistral_large_123b",
+    "deepseek-7b": "deepseek_7b",
+    "dbrx-132b": "dbrx_132b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "mamba2-780m": "mamba2_780m",
+    "musicgen-medium": "musicgen_medium",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    # the paper's own assistant model (small VLM used by examples/)
+    "artic-assistant": "artic_assistant",
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; choices: {sorted(ARCHS)}")
+    mod = importlib.import_module(f"repro.configs.{ARCHS[name]}")
+    return mod.CONFIG
+
+
+def list_archs(include_extra: bool = False) -> List[str]:
+    names = [n for n in ARCHS if n != "artic-assistant"]
+    return names + (["artic-assistant"] if include_extra else [])

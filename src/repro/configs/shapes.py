@@ -1,0 +1,97 @@
+"""Assigned input-shape sets and ShapeDtypeStruct input specs per cell.
+
+Every (arch x shape) cell is defined here; `input_specs` builds the exact
+pytree of jax.ShapeDtypeStruct stand-ins the dry-run lowers against (no
+device allocation).  Modality frontends are stubs per the assignment:
+the VLM cell feeds precomputed patch embeddings + M-RoPE ids, the audio
+cell feeds EnCodec codebook token streams.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+# archs whose attention is O(S^2) with a full-seq KV skip long_500k
+SUBQUADRATIC_FAMILIES = ("ssm", "hybrid")
+
+
+def supported(cfg: ModelConfig, shape_name: str) -> Tuple[bool, str]:
+    s = SHAPES[shape_name]
+    if s.name == "long_500k" and cfg.family not in SUBQUADRATIC_FAMILIES:
+        return False, ("pure full-attention arch: 512k dense-attention KV "
+                       "decode skipped per shape-table rule (DESIGN.md §6)")
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def _token_batch(cfg: ModelConfig, batch: int, seq: int, labels: bool):
+    if cfg.mrope_sections is not None:
+        # vision-frontend stub: precomputed patch embeddings + (t,h,w) ids
+        b: Dict[str, Any] = {
+            "embeds": _sds((batch, seq, cfg.d_model), cfg.dtype),
+            "mrope_positions": _sds((3, batch, seq), jnp.int32),
+        }
+        if labels:
+            b["labels"] = _sds((batch, seq), jnp.int32)
+        return b
+    if cfg.num_codebooks > 1:
+        b = {"tokens": _sds((batch, cfg.num_codebooks, seq), jnp.int32)}
+        if labels:
+            b["labels"] = _sds((batch, cfg.num_codebooks, seq), jnp.int32)
+        return b
+    b = {"tokens": _sds((batch, seq), jnp.int32)}
+    if labels:
+        b["labels"] = _sds((batch, seq), jnp.int32)
+    return b
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    """ShapeDtypeStruct pytree for the decode cache (via eval_shape)."""
+    return jax.eval_shape(lambda: tfm.init_cache(cfg, batch, max_len))
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict[str, Any]:
+    """Returns {"batch": ...} for train/prefill and additionally
+    {"cache": ...} for decode shapes."""
+    s = SHAPES[shape_name]
+    ok, why = supported(cfg, shape_name)
+    if not ok:
+        raise ValueError(f"{cfg.name} x {shape_name}: {why}")
+    if s.kind == "train":
+        return {"batch": _token_batch(cfg, s.batch, s.seq, labels=True)}
+    if s.kind == "prefill":
+        return {"batch": _token_batch(cfg, s.batch, s.seq, labels=False)}
+    # decode: one new token against a cache of length seq. Sub-quadratic
+    # archs keep O(1)/O(window) state; attention archs a full KV cache.
+    cache_len = s.seq if cfg.family in ("dense", "moe") else s.seq
+    batch = _token_batch(cfg, s.batch, 1, labels=False)
+    if "embeds" in batch:
+        # decode continues with text tokens (response generation)
+        batch = {"tokens": _sds((s.batch, 1), jnp.int32),
+                 "mrope_positions": _sds((3, s.batch, 1), jnp.int32)}
+    return {"batch": batch, "cache": cache_specs(cfg, s.batch, cache_len)}

@@ -1,0 +1,72 @@
+"""Response-confidence feedback C_t (paper §4.2).
+
+The paper prompts the MLLM to self-report a confidence score via
+in-context learning.  Our serving stack owns the model, so the default
+("logit") mode derives C_t from telemetry the sampler already produces —
+mean top-1 probability and normalized entropy of the answer span — at
+zero extra FLOPs (a beyond-paper engineering win, DESIGN.md §3).  The
+"oracle" mode consumes the DeViBench glyph-detector margin.  Both go
+through a Platt calibration fit on the DeViBench validation split, which
+is what the paper's §6.2 validation set is for.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+
+def raw_score_from_telemetry(top1_probs: Sequence[float],
+                             entropies: Sequence[float],
+                             vocab: int) -> float:
+    """Uncalibrated confidence in [0,1] from answer-span sampler telemetry."""
+    if len(top1_probs) == 0:
+        return 0.0
+    p = float(np.mean(top1_probs))
+    h = float(np.mean(entropies)) / max(math.log(vocab), 1e-6)
+    return float(np.clip(0.5 * (p + (1.0 - h)), 0.0, 1.0))
+
+
+@dataclasses.dataclass
+class PlattCalibrator:
+    """sigmoid(a * score + b) fit by Newton-damped logistic regression."""
+
+    a: float = 6.0
+    b: float = -3.0
+
+    def fit(self, scores: np.ndarray, correct: np.ndarray,
+            iters: int = 200, lr: float = 0.5) -> "PlattCalibrator":
+        s = np.asarray(scores, np.float64)
+        y = np.asarray(correct, np.float64)
+        a, b = self.a, self.b
+        for _ in range(iters):
+            z = a * s + b
+            p = 1.0 / (1.0 + np.exp(-z))
+            ga = np.mean((p - y) * s)
+            gb = np.mean(p - y)
+            a -= lr * ga * 8.0
+            b -= lr * gb * 2.0
+        self.a, self.b = float(a), float(b)
+        return self
+
+    def __call__(self, score: float) -> float:
+        return float(1.0 / (1.0 + np.exp(-(self.a * score + self.b))))
+
+
+@dataclasses.dataclass
+class ConfidenceHead:
+    mode: str = "oracle"           # oracle | logit
+    calibrator: Optional[PlattCalibrator] = None
+
+    def __post_init__(self):
+        if self.calibrator is None:
+            self.calibrator = PlattCalibrator()
+
+    def from_margin(self, margin: float) -> float:
+        return self.calibrator(margin)
+
+    def from_telemetry(self, top1_probs, entropies, vocab: int) -> float:
+        return self.calibrator(
+            raw_score_from_telemetry(top1_probs, entropies, vocab))

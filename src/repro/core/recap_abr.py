@@ -1,0 +1,59 @@
+"""ReCapABR — Response-Capability-aware Adaptive Bitrate (paper §4).
+
+Implements Eq. (1)-(2) exactly:
+
+    delta_t = (tau - C_t) / tau                       # normalized gap
+    w_t     = delta_t * |delta_t|^(gamma-1)           # Eq. 1
+    R_{t+1} = min(B_t, R_t + w_t * (B_t - R_t))       # Eq. 2
+
+tau=0.8 and gamma=2 are the validation-set-tuned defaults (§6.2).  When
+C_t > tau the weight goes negative and the bitrate voluntarily backs off
+below the CC estimate — the "maximum margin" headroom that absorbs
+bandwidth drops (Fig. 9).  When congestion pushes B_t below R_t the min()
+caps immediately.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class ReCapABR:
+    tau: float = 0.8
+    gamma: float = 2.0
+    min_rate: float = 150e3     # never starve the encoder entirely
+    init_rate: float = 1e6
+
+    def __post_init__(self):
+        self.rate = self.init_rate
+        self.last_confidence = None
+
+    def weight(self, confidence: float) -> float:
+        """Eq. 1."""
+        delta = (self.tau - confidence) / self.tau
+        return delta * abs(delta) ** (self.gamma - 1.0)
+
+    def update(self, confidence: float, bw_estimate: float) -> float:
+        """Eq. 2: next-step bitrate from confidence + CC estimate."""
+        self.last_confidence = confidence
+        w = self.weight(confidence)
+        r = min(bw_estimate, self.rate + w * (bw_estimate - self.rate))
+        self.rate = max(r, self.min_rate)
+        return self.rate
+
+
+@dataclasses.dataclass
+class CCOnlyABR:
+    """The WebRTC baseline: bitrate blindly follows the CC estimate."""
+
+    init_rate: float = 1e6
+    min_rate: float = 150e3
+
+    def __post_init__(self):
+        self.rate = self.init_rate
+        self.last_confidence = None
+
+    def update(self, confidence: float, bw_estimate: float) -> float:
+        del confidence
+        self.rate = max(bw_estimate, self.min_rate)
+        return self.rate

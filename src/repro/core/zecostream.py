@@ -1,0 +1,131 @@
+"""ZeCoStream — Zero-overhead Context-aware Streaming (paper §5).
+
+Eq. (3): per-patch contextual importance from the MLLM-fed-back boxes,
+    rho_ij = max(0, 1 - d_ij / (mu * sqrt(W^2 + H^2)))
+with d_ij the distance from the patch center to the nearest box (0 inside)
+and mu = 0.5.
+
+Eq. (4): non-linear QP map,
+    Q_ij = Qmin + (Qmax - Qmin) * (1 - rho_ij)^2
+
+Grounding-then-prediction (§5.2): feedback boxes are >= 1.2-1.5 s stale;
+the server ships a short horizon of *predicted* boxes and the client picks
+the one matching the current timestamp.
+
+Trigger policy (§3): ZeCoStream engages only when the bitrate is below the
+critical level where accuracy is at risk; otherwise uniform encoding
+protects the background for visual memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.video.codec import QP_MAX, QP_MIN
+
+Box = Tuple[float, float, float, float]  # (y0, x0, y1, x1) pixels
+
+
+def importance_map(boxes: Sequence[Box], frame_hw: Tuple[int, int],
+                   patch: int = 64, mu: float = 0.5) -> np.ndarray:
+    """Eq. 3 over the patch grid. Empty boxes -> all-zeros (uniform low)."""
+    H, W = frame_hw
+    gy, gx = H // patch, W // patch
+    cy = (np.arange(gy) + 0.5) * patch
+    cx = (np.arange(gx) + 0.5) * patch
+    yy, xx = np.meshgrid(cy, cx, indexing="ij")
+    if not boxes:
+        return np.zeros((gy, gx), np.float32)
+    diag = float(np.hypot(H, W))
+    d_min = np.full((gy, gx), np.inf, np.float32)
+    for (y0, x0, y1, x1) in boxes:
+        # distance from point to axis-aligned box boundary (0 inside)
+        dy = np.maximum(np.maximum(y0 - yy, yy - y1), 0.0)
+        dx = np.maximum(np.maximum(x0 - xx, xx - x1), 0.0)
+        d = np.hypot(dy, dx)
+        d_min = np.minimum(d_min, d)
+    rho = np.maximum(0.0, 1.0 - d_min / (mu * diag))
+    return rho.astype(np.float32)
+
+
+def qp_map(rho: np.ndarray, q_min: float = QP_MIN, q_max: float = QP_MAX
+           ) -> np.ndarray:
+    """Eq. 4: quadratic importance -> QP."""
+    return (q_min + (q_max - q_min) * np.square(1.0 - rho)).astype(np.float32)
+
+
+@dataclasses.dataclass
+class TimedBoxes:
+    """A grounding-then-prediction feedback packet: boxes at future times."""
+
+    times: np.ndarray          # (K,) absolute timestamps (s)
+    boxes: List[List[Box]]     # K lists of boxes
+
+    def at(self, t: float) -> List[Box]:
+        """Client-side matching of the current timestamp (§5.2)."""
+        if len(self.times) == 0:
+            return []
+        i = int(np.argmin(np.abs(self.times - t)))
+        return self.boxes[i]
+
+
+@dataclasses.dataclass
+class ZeCoStream:
+    patch: int = 64
+    mu: float = 0.5
+    q_min: float = QP_MIN
+    q_max: float = QP_MAX
+    # trigger: engage below this bitrate (validation-tuned; §3 "critical
+    # level where the MLLM struggles")
+    trigger_bps: float = 1.2e6
+    # and disengage with hysteresis to avoid flapping
+    release_bps: float = 1.6e6
+
+    def __post_init__(self):
+        self.active = False
+        self.last_feedback: Optional[TimedBoxes] = None
+
+    def on_feedback(self, fb: TimedBoxes):
+        self.last_feedback = fb
+
+    def should_engage(self, rate_bps: float,
+                      confidence: Optional[float] = None,
+                      tau: float = 0.8) -> bool:
+        """Paper §3: trigger only when the MLLM struggles to answer AND
+        bandwidth does not permit a higher bitrate; otherwise uniform
+        encoding protects background visual memory."""
+        struggling = confidence is None or confidence < tau
+        if self.active:
+            self.active = rate_bps < self.release_bps and struggling
+        else:
+            self.active = rate_bps < self.trigger_bps and struggling
+        return self.active
+
+    def qp_shape(self, t: float, frame_hw: Tuple[int, int],
+                 rate_bps: float, confidence: Optional[float] = None,
+                 tau: float = 0.8) -> Tuple[np.ndarray, bool]:
+        """Relative QP surface for the encoder's rate control.
+
+        Returns (qp_surface (H//8, W//8), engaged).  When disengaged the
+        surface is uniform zeros (context-agnostic encoding); when engaged
+        it is the Eq. 3/4 map shifted to zero-mean so rate control's global
+        offset search composes with it."""
+        H, W = frame_hw
+        nby, nbx = H // 8, W // 8
+        if (not self.should_engage(rate_bps, confidence, tau)
+                or self.last_feedback is None):
+            return np.zeros((nby, nbx), np.float32), False
+        boxes = self.last_feedback.at(t)
+        if not boxes:
+            return np.zeros((nby, nbx), np.float32), False
+        rho = importance_map(boxes, frame_hw, self.patch, self.mu)
+        qp = qp_map(rho, self.q_min, self.q_max)
+        # expand patch grid -> 8x8 block grid
+        rep = self.patch // 8
+        qp_blocks = np.repeat(np.repeat(qp, rep, axis=0), rep, axis=1)
+        qp_blocks = qp_blocks[:nby, :nbx]
+        return (qp_blocks - qp_blocks.mean()).astype(np.float32), True

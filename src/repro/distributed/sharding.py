@@ -1,0 +1,193 @@
+"""Logical-axis sharding: names -> mesh axes with divisibility fallback.
+
+The model code annotates every parameter dimension and key activations with
+*logical* names ("embed", "heads", "batch", ...).  This module maps them to
+physical mesh axes per a rules table, *dropping* any assignment that does
+not divide the dimension (e.g. 8 KV heads on a 16-way `model` axis fall
+back to replication — recorded so the dry-run can report it).
+
+Rules are swappable via `rules_context` which is how §Perf hillclimbing
+tries alternative sharding layouts without touching model code.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+def is_axes_leaf(t) -> bool:
+    """Leaf of an axes tree: a plain tuple of logical names / None.
+
+    NamedTuples (TrainState, optimizer states) are containers, not leaves."""
+    return (isinstance(t, tuple) and not hasattr(t, "_fields")
+            and all(e is None or isinstance(e, str) for e in t))
+
+# Logical axis -> preferred mesh axes (first existing+dividing one wins for
+# each entry; tuple entries mean "shard over the product of these axes").
+DEFAULT_RULES: Dict[str, Tuple[MeshAxes, ...]] = {
+    # --- weights ---
+    "vocab": ("model",),
+    "embed": (("pod", "data"), "data"),     # FSDP dim
+    "mlp": ("model",),
+    "expert_mlp": (None,),
+    "expert_embed": (("pod", "data"), "data"),  # FSDP dim of expert weights
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (None,),
+    "experts": ("model",),
+    "conv": (None,),
+    "layers": (None,),
+    # --- activations ---
+    "batch": (("pod", "data"), "data"),
+    "act_seq": (None,),
+    "act_embed": (None,),
+    "act_heads": ("model",),
+}
+
+_local = threading.local()
+
+
+def current_rules() -> Dict[str, Tuple[MeshAxes, ...]]:
+    return getattr(_local, "rules", DEFAULT_RULES)
+
+
+@contextlib.contextmanager
+def rules_context(rules: Dict[str, Tuple[MeshAxes, ...]]):
+    old = getattr(_local, "rules", None)
+    _local.rules = rules
+    try:
+        yield
+    finally:
+        if old is None:
+            del _local.rules
+        else:
+            _local.rules = old
+
+
+def _mesh_axis_sizes(mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.axis_shape if hasattr(mesh, "axis_shape")
+                    else mesh.devices.shape))
+
+
+def _axes_size(candidate: MeshAxes, sizes: Dict[str, int]) -> Optional[int]:
+    """Product of mesh-axis sizes, or None if any axis is missing."""
+    if candidate is None:
+        return 1
+    names = (candidate,) if isinstance(candidate, str) else candidate
+    total = 1
+    for n in names:
+        if n not in sizes:
+            return None
+        total *= sizes[n]
+    return total
+
+
+def resolve_axis(logical: Optional[str], dim: Optional[int],
+                 sizes: Dict[str, int],
+                 rules: Optional[Dict] = None) -> MeshAxes:
+    """Pick the first rule candidate whose mesh axes exist and divide dim."""
+    if logical is None:
+        return None
+    rules = rules or current_rules()
+    for candidate in rules.get(logical, (None,)):
+        n = _axes_size(candidate, sizes)
+        if n is None:
+            continue
+        if n == 1:
+            return None
+        if dim is None or dim % n == 0:
+            return candidate
+    return None
+
+
+def logical_to_pspec(axes: Sequence[Optional[str]],
+                     shape: Optional[Sequence[int]],
+                     sizes: Dict[str, int],
+                     rules: Optional[Dict] = None) -> P:
+    used: set = set()
+    out = []
+    for i, name in enumerate(axes):
+        dim = None if shape is None else shape[i]
+        resolved = resolve_axis(name, dim, sizes, rules)
+        # a mesh axis may appear at most once in a PartitionSpec
+        flat = ((resolved,) if isinstance(resolved, str)
+                else (resolved or ()))
+        if any(a in used for a in flat):
+            resolved = None
+        else:
+            used.update(flat)
+        out.append(resolved)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def make_shardings(axes_tree: Any, shapes_tree: Any, mesh: Mesh,
+                   rules: Optional[Dict] = None):
+    """axes_tree leaves: tuples of logical names; shapes_tree: matching
+    ShapeDtypeStructs (or arrays).  Returns NamedSharding tree."""
+    sizes = _mesh_axis_sizes(mesh)
+
+    def one(axes, shaped):
+        shape = tuple(shaped.shape)
+        return NamedSharding(mesh, logical_to_pspec(axes, shape, sizes, rules))
+
+    return jax.tree.map(one, axes_tree, shapes_tree, is_leaf=is_axes_leaf)
+
+
+def pspec_tree(axes_tree: Any, shapes_tree: Any, mesh: Mesh,
+               rules: Optional[Dict] = None):
+    sizes = _mesh_axis_sizes(mesh)
+    return jax.tree.map(
+        lambda a, s: logical_to_pspec(a, tuple(s.shape), sizes, rules),
+        axes_tree, shapes_tree, is_leaf=is_axes_leaf)
+
+
+def sharding_report(axes_tree: Any, shapes_tree: Any, mesh: Mesh,
+                    rules: Optional[Dict] = None):
+    """List of (path, shape, pspec, bytes_per_device) for the dry-run log."""
+    sizes = _mesh_axis_sizes(mesh)
+    flat, _ = jax.tree_util.tree_flatten_with_path(shapes_tree)
+    specs = jax.tree.leaves(
+        pspec_tree(axes_tree, shapes_tree, mesh, rules),
+        is_leaf=lambda x: isinstance(x, P))
+    rows = []
+    for (path, s), spec in zip(flat, specs):
+        shard_elems = int(np.prod(s.shape)) if s.shape else 1
+        denom = 1
+        for entry in spec:
+            denom *= _axes_size(entry, sizes) or 1
+        rows.append((jax.tree_util.keystr(path), tuple(s.shape), spec,
+                     shard_elems // max(denom, 1) * s.dtype.itemsize))
+    return rows
+
+
+# --------------------------------------------------------------------------
+# In-model activation constraints
+# --------------------------------------------------------------------------
+def _active_mesh_sizes() -> Optional[Dict[str, int]]:
+    try:
+        m = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return None
+    if m is None or not getattr(m, "axis_names", ()):
+        return None
+    return dict(zip(m.axis_names, m.axis_sizes))
+
+
+def constrain(x, logical_axes: Sequence[Optional[str]]):
+    """with_sharding_constraint by logical names; no-op without a mesh."""
+    sizes = _active_mesh_sizes()
+    if not sizes:
+        return x
+    spec = logical_to_pspec(logical_axes, tuple(x.shape), sizes)
+    if all(e is None for e in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

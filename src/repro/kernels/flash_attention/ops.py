@@ -1,0 +1,37 @@
+"""Jitted public wrapper: model layout (B, S, H, d) -> kernel layout."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_bhsd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_offset",
+                                             "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    q_offset: int = 0, bq: int = 256, bk: int = 512,
+                    interpret=None):
+    """q (B, Sq, Hq, d); k/v (B, Sk, Hk, d) -> (B, Sq, Hq, d).
+
+    interpret=None auto-selects: compiled on TPU, interpret elsewhere.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, Sq, Hq, d = q.shape
+    _, Sk, Hk, _ = k.shape
+    G = Hq // Hk
+    # head-major grouping: q row b*Hq + h maps to kv row (b*Hq + h)//G
+    qr = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, d)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * Hk, Sk, d)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * Hk, Sk, d)
+    out = flash_attention_bhsd(qr, kr, vr, causal=causal, window=window,
+                               q_offset=q_offset, bq=bq, bk=bk,
+                               interpret=interpret)
+    return out.reshape(B, Hq, Sq, d).transpose(0, 2, 1, 3)

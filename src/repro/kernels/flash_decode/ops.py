@@ -1,0 +1,34 @@
+"""Jitted wrapper: model layout (B, 1, Hq, d) + cache (B, S, Hk, d)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_decode.flash_decode import flash_decode_bhd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def flash_decode(q, k_cache, v_cache, lengths, *, bk: int = 1024,
+                 interpret=None):
+    """q (B, 1, Hq, d); caches (B, Smax, Hk, d); lengths () or (B,).
+
+    Returns (B, 1, Hq, d)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, _, Hq, d = q.shape
+    _, Sk, Hk, _ = k_cache.shape
+    qr = q[:, 0].transpose(0, 1, 2).reshape(B * Hq, d)
+    kr = k_cache.transpose(0, 2, 1, 3).reshape(B * Hk, Sk, d)
+    vr = v_cache.transpose(0, 2, 1, 3).reshape(B * Hk, Sk, d)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    if lengths.ndim == 0:
+        lengths = jnp.broadcast_to(lengths, (B,))
+    len_rows = jnp.repeat(lengths, Hq)
+    out = flash_decode_bhd(qr, kr, vr, len_rows, bk=bk, interpret=interpret)
+    return out.reshape(B, Hq, 1, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for flash decode."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_ref(q, k, v, lengths):
+    """q (BH, d); k/v (BHk, Sk, d); lengths (BH,) -> (BH, d)."""
+    BH, d = q.shape
+    BHk, Sk, _ = k.shape
+    G = BH // BHk
+    k = jnp.repeat(k, G, axis=0)
+    v = jnp.repeat(v, G, axis=0)
+    s = jnp.einsum("bd,bkd->bk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    valid = jnp.arange(Sk)[None, :] < lengths[:, None]
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bk,bkd->bd", p.astype(v.dtype), v).astype(q.dtype)

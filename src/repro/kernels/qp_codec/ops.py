@@ -1,0 +1,30 @@
+"""Jitted wrapper: frame layout (H, W) + per-block QP map (H//8, W//8)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.qp_codec.qp_codec import qp_codec_blocks
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def qp_codec_frame(frame: jnp.ndarray, qp_blocks: jnp.ndarray, *,
+                   bs: int = 512, interpret=None):
+    """Fused encode+decode: frame (H, W), qp (H//8, W//8) ->
+    (reconstruction (H, W), total_bits scalar)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    H, W = frame.shape
+    nby, nbx = H // 8, W // 8
+    blocks = frame.reshape(nby, 8, nbx, 8).transpose(0, 2, 1, 3)
+    blocks = blocks.reshape(nby * nbx, 8, 8)
+    rec, bits = qp_codec_blocks(blocks, qp_blocks.reshape(-1),
+                                bs=bs, interpret=interpret)
+    rec = rec.reshape(nby, nbx, 8, 8).transpose(0, 2, 1, 3).reshape(H, W)
+    return rec, jnp.sum(bits)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the QP-codec kernel (delegates to repro.video.codec
+math on a block list layout)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.video.codec import (RATE_COEF, RATE_OVERHEAD_PER_BLOCK,
+                               dct_matrix, qstep)
+
+
+def qp_codec_ref(blocks: jnp.ndarray, qp: jnp.ndarray):
+    """blocks (N, 8, 8) in [0,1]; qp (N,) -> (rec (N,8,8), bits (N,))."""
+    D = jnp.asarray(dct_matrix())
+    x = blocks.astype(jnp.float32) - 0.5
+    coef = jnp.einsum("ij,njk,lk->nil", D, x, D)
+    qs = (qstep(qp) / 64.0)[:, None, None]
+    q = jnp.round(coef / qs)
+    bits = (RATE_COEF * jnp.sum(jnp.log2(1.0 + jnp.abs(q)), axis=(-1, -2))
+            + RATE_OVERHEAD_PER_BLOCK)
+    deq = q * qs
+    rec = jnp.einsum("ji,njk,kl->nil", D, deq, D)
+    return jnp.clip(rec + 0.5, 0.0, 1.0), bits

@@ -1,0 +1,524 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this entrypoint:
+  1. builds the production mesh (single-pod 16x16 / multi-pod 2x16x16),
+  2. resolves full sharding trees (params, optimizer state, batch, caches)
+     through the logical-axis rules,
+  3. jit-lowers the real entry point (train_step / prefill / decode_step)
+     against ShapeDtypeStruct inputs — no allocation,
+  4. compiles, then records memory_analysis(), cost_analysis() and the
+     per-device collective bytes parsed from the post-SPMD HLO,
+  5. writes one JSON per cell into experiments/dryrun/.
+
+Run one cell:   python -m repro.launch.dryrun --arch qwen3-0.6b \
+                    --shape train_4k --mesh single
+Run the sweep:  python -m repro.launch.dryrun --all   (subprocess per cell
+                for isolation; a failing cell doesn't kill the sweep)
+
+NOTE the XLA_FLAGS assignment above MUST precede any jax import — jax
+locks the device count on first init.  Only this entrypoint sees 512
+host devices; tests and benchmarks see 1.
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry, shapes as shape_lib
+from repro.distributed import sharding as shlib
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as tfm
+from repro.roofline import analysis as roofline
+from repro.training.optimizer import AdafactorState, AdamWState
+from repro.training.train_loop import TrainSettings, TrainState, make_train_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "../../../experiments/dryrun")
+
+# Per-arch production training settings (memory-fit choices, DESIGN.md §4):
+# big-dense archs use Adafactor + deep grad-accum + full remat + Megatron-
+# style sequence-parallel residuals; small archs use AdamW.
+TRAIN_SETTINGS: Dict[str, TrainSettings] = {
+    "llama3-405b": TrainSettings(optimizer="adafactor", grad_accum=16),
+    "mistral-large-123b": TrainSettings(optimizer="adafactor", grad_accum=8),
+    "qwen2-vl-72b": TrainSettings(optimizer="adafactor", grad_accum=8),
+    "dbrx-132b": TrainSettings(optimizer="adafactor", grad_accum=8),
+    "qwen3-moe-30b-a3b": TrainSettings(optimizer="adamw", moment_dtype="bfloat16",
+                                       grad_accum=4),
+    "deepseek-7b": TrainSettings(optimizer="adamw", moment_dtype="bfloat16"),
+    "recurrentgemma-9b": TrainSettings(optimizer="adamw", moment_dtype="bfloat16",
+                                       grad_accum=4),
+}
+DEFAULT_SETTINGS = TrainSettings(optimizer="adamw")
+
+# sequence-parallel residual sharding for the memory-pressed archs
+SP_ARCHS = {"llama3-405b", "mistral-large-123b", "qwen2-vl-72b", "dbrx-132b"}
+
+
+def sp_rules():
+    r = dict(shlib.DEFAULT_RULES)
+    r["act_seq"] = ("model",)
+    return r
+
+
+# --------------------------------------------------------------------------
+# Sharding-tree construction
+# --------------------------------------------------------------------------
+def opt_state_axes(settings: TrainSettings, p_axes, p_shapes):
+    if settings.optimizer == "adamw":
+        return AdamWState(step=(), m=p_axes, v=p_axes)
+
+    def vr_axes(a, s):
+        return tuple(a[:-1]) if len(s.shape) >= 2 else tuple(a)
+
+    def vc_axes(a, s):
+        return tuple(a[:-2]) + tuple(a[-1:]) if len(s.shape) >= 2 else (None,)
+
+    return AdafactorState(
+        step=(),
+        vr=jax.tree.map(vr_axes, p_axes, p_shapes, is_leaf=shlib.is_axes_leaf),
+        vc=jax.tree.map(vc_axes, p_axes, p_shapes, is_leaf=shlib.is_axes_leaf),
+    )
+
+
+def batch_axes_of(batch_specs):
+    def one(path, leaf):
+        name = jax.tree_util.keystr(path)
+        if "mrope" in name:
+            return (None, "batch") + (None,) * (len(leaf.shape) - 2)
+        return ("batch",) + (None,) * (len(leaf.shape) - 1)
+
+    return jax.tree_util.tree_map_with_path(one, batch_specs)
+
+
+def cache_axes_of(cfg, cache_specs, mesh):
+    """Cache logical axes with the seq-dim fallback: if kv_heads doesn't
+    divide the model axis, shard the KV sequence dim over `model` instead
+    (flash-decoding style distributed softmax)."""
+    base = tfm.cache_axes(cfg)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_n = sizes.get("model", 1)
+
+    def fix(axes, leaf):
+        axes = tuple(axes)
+        if ("kv_heads" in axes and cfg.n_kv_heads % model_n != 0
+                and len(leaf.shape) == 5 and leaf.shape[2] % model_n == 0):
+            lst = list(axes)
+            lst[2] = "kv_seq"
+            return tuple(lst)
+        return axes
+
+    return jax.tree.map(fix, base, cache_specs, is_leaf=shlib.is_axes_leaf)
+
+
+def rules_for(arch: str, extra: Optional[Dict] = None):
+    r = sp_rules() if arch in SP_ARCHS else dict(shlib.DEFAULT_RULES)
+    r["kv_seq"] = ("model",)
+    if extra:
+        r.update(extra)
+    return r
+
+
+# --------------------------------------------------------------------------
+# Cell lowering
+# --------------------------------------------------------------------------
+# --------------------------------------------------------------------------
+# §Perf hillclimb variants: (rules_extra, cfg_transform, settings_transform)
+# --------------------------------------------------------------------------
+import dataclasses as _dc
+
+
+def _v_serve_replicated(cfg, settings):
+    """Decode: replicate the FSDP dims -> stationary weights, no per-token
+    weight all-gather (classic TP-only serving layout)."""
+    return ({"embed": (None,), "expert_embed": (None,)}, cfg, settings)
+
+
+def _v_moe_gather(cfg, settings):
+    """MoE: scatter/gather dispatch instead of one-hot einsums."""
+    return ({}, cfg.replace(moe=_dc.replace(cfg.moe, moe_impl="gather")),
+            settings)
+
+
+def _v_accum2(cfg, settings):
+    """Fewer grad-accum microbatches -> fewer FSDP weight re-gathers."""
+    return ({}, cfg, _dc.replace(settings, grad_accum=2))
+
+
+def _v_expert_replicated(cfg, settings):
+    """Keep expert weights expert-sharded but FSDP-replicated (stationary)."""
+    return ({"expert_embed": (None,)}, cfg, settings)
+
+
+def _v_moe_gather_expert_repl(cfg, settings):
+    rules, cfg, settings = _v_moe_gather(cfg, settings)
+    rules.update({"expert_embed": (None,)})
+    return rules, cfg, settings
+
+
+def _v_moe_bf16_cap1(cfg, settings):
+    """H1 combined: bf16 dispatch one-hots + capacity 1.0 + stationary
+    expert weights — targets the dominant MoE dispatch collectives."""
+    return ({"expert_embed": (None,)},
+            cfg.replace(moe=_dc.replace(cfg.moe, dispatch_fp32=False,
+                                        capacity_factor=1.0)),
+            settings)
+
+
+def _v_moe_full_opt(cfg, settings):
+    """H1 iteration 4: bf16 dispatch + cap 1.0 + stationary experts +
+    dots-saveable remat (combine the confirmed levers)."""
+    return ({"expert_embed": (None,)},
+            cfg.replace(remat_policy="dots",
+                        moe=_dc.replace(cfg.moe, dispatch_fp32=False,
+                                        capacity_factor=1.0)),
+            settings)
+
+
+def _v_cap1(cfg, settings):
+    """Capacity factor 1.25 -> 1.0 (smaller dispatch buffers)."""
+    return ({}, cfg.replace(moe=_dc.replace(cfg.moe, capacity_factor=1.0)),
+            settings)
+
+
+def _v_remat_dots(cfg, settings):
+    """full remat -> dots-saveable (less recompute, more memory)."""
+    return ({}, cfg.replace(remat_policy="dots"), settings)
+
+
+def _v_expert_repl_accum2(cfg, settings):
+    """H1 combined: stationary expert weights + half the microbatches."""
+    return ({"expert_embed": (None,)}, cfg,
+            _dc.replace(settings, grad_accum=2))
+
+
+def _v_serve_repl_kvint8(cfg, settings):
+    """Serving: stationary weights + int8-quantized KV cache."""
+    return ({"embed": (None,), "expert_embed": (None,)},
+            cfg.replace(kv_cache_dtype="int8"), settings)
+
+
+VARIANTS = {
+    "serve_replicated": _v_serve_replicated,
+    "expert_repl_accum2": _v_expert_repl_accum2,
+    "serve_repl_kvint8": _v_serve_repl_kvint8,
+    "moe_gather": _v_moe_gather,
+    "accum2": _v_accum2,
+    "expert_replicated": _v_expert_replicated,
+    "moe_gather_expert_repl": _v_moe_gather_expert_repl,
+    "cap1": _v_cap1,
+    "moe_bf16_cap1": _v_moe_bf16_cap1,
+    "moe_full_opt": _v_moe_full_opt,
+    "remat_dots": _v_remat_dots,
+}
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               rules_extra: Optional[Dict] = None,
+               cfg_override=None, settings_override=None,
+               variant: Optional[str] = None):
+    cfg = cfg_override or registry.get_config(arch)
+    spec = shape_lib.SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    settings = settings_override or TRAIN_SETTINGS.get(arch, DEFAULT_SETTINGS)
+    if variant is not None:
+        v_rules, cfg, settings = VARIANTS[variant](cfg, settings)
+        rules_extra = {**(rules_extra or {}), **v_rules}
+    rules = rules_for(arch, rules_extra)
+
+    specs = shape_lib.input_specs(cfg, shape_name)
+    batch_specs = specs["batch"]
+    b_sh = shlib.make_shardings(batch_axes_of(batch_specs), batch_specs,
+                                mesh, rules)
+
+    p_specs = jax.eval_shape(lambda: tfm.init(jax.random.PRNGKey(0), cfg))
+    p_axes = tfm.axes(cfg)
+    p_sh = shlib.make_shardings(p_axes, p_specs, mesh, rules)
+
+    with shlib.rules_context(rules), jax.set_mesh(mesh):
+        if spec.kind == "train":
+            from repro.training.train_loop import init_state
+            train_step = make_train_step(cfg, settings)
+            state_specs = jax.eval_shape(
+                lambda: init_state(jax.random.PRNGKey(0), cfg, settings))
+            s_axes = TrainState(
+                params=p_axes,
+                opt_state=opt_state_axes(settings, p_axes, p_specs),
+                step=(), compress=None)
+            s_sh = shlib.make_shardings(s_axes, state_specs, mesh, rules)
+            lowered = jax.jit(
+                train_step,
+                in_shardings=(s_sh, b_sh),
+                out_shardings=(s_sh, None),
+            ).lower(state_specs, batch_specs)
+        elif spec.kind == "prefill":
+            def fn(params, batch):
+                return tfm.prefill(params, batch, cfg)
+
+            out_specs = jax.eval_shape(fn, p_specs, batch_specs)
+            c_axes = cache_axes_of(cfg, out_specs[1], mesh)
+            c_sh = shlib.make_shardings(c_axes, out_specs[1], mesh, rules)
+            lowered = jax.jit(
+                fn, in_shardings=(p_sh, b_sh),
+                out_shardings=(None, c_sh),
+            ).lower(p_specs, batch_specs)
+        else:  # decode
+            cache_specs = specs["cache"]
+            c_axes = cache_axes_of(cfg, cache_specs, mesh)
+            c_sh = shlib.make_shardings(c_axes, cache_specs, mesh, rules)
+
+            def fn(params, cache, batch):
+                return tfm.decode_step(params, cache, batch, cfg)
+
+            lowered = jax.jit(
+                fn, in_shardings=(p_sh, c_sh, b_sh),
+                out_shardings=(None, c_sh),
+            ).lower(p_specs, cache_specs, batch_specs)
+    return lowered, mesh, cfg, settings
+
+
+# --------------------------------------------------------------------------
+# Scan-aware roofline probes
+# --------------------------------------------------------------------------
+# XLA's HLO cost analysis counts a while-loop body ONCE, not x trip-count,
+# so the full-depth artifact underreports FLOPs/bytes/collectives of the
+# scanned layer stack.  We therefore lower two shallow UNROLLED probes at
+# depths (a, b) with grad_accum=1, fit v(L) = outer + L * per_layer, and
+# extrapolate to the real depth.  memory_analysis comes from the full-depth
+# compile (scan reuses buffers, so it is already correct there).
+def probe_depths(cfg):
+    if cfg.family == "hybrid":
+        g = len(cfg.rglru.pattern)
+        return g, 2 * g           # whole groups only; tail approximated
+    return 2, 4
+
+
+def measure(lowered_compiled):
+    compiled = lowered_compiled
+    cost = compiled.cost_analysis() or {}
+    coll = roofline.collective_bytes_from_hlo(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            float(coll["total"]))
+
+
+def probe_corrected(arch, shape_name, multi_pod, rules_extra=None,
+                    variant=None):
+    cfg = registry.get_config(arch)
+    settings0 = TRAIN_SETTINGS.get(arch, DEFAULT_SETTINGS)
+    if variant is not None:
+        v_rules, cfg, settings0 = VARIANTS[variant](cfg, settings0)
+        rules_extra = {**(rules_extra or {}), **v_rules}
+    a, b = probe_depths(cfg)
+    vals = {}
+    for depth in (a, b):
+        pc = cfg.replace(n_layers=depth, scan_unroll=True)
+        settings = dataclasses_replace_accum1(settings0)
+        low, mesh, _, _ = lower_cell(arch, shape_name, multi_pod,
+                                     rules_extra, cfg_override=pc,
+                                     settings_override=settings)
+        vals[depth] = measure(low.compile())
+    per_layer = tuple((vb - va) / (b - a) for va, vb in zip(vals[a], vals[b]))
+    outer = tuple(va - a * pl for va, pl in zip(vals[a], per_layer))
+    L = cfg.n_layers
+    corrected = tuple(o + L * pl for o, pl in zip(outer, per_layer))
+    return {
+        "probe_depths": [a, b],
+        "per_layer": {"flops": per_layer[0], "bytes": per_layer[1],
+                      "collective_bytes": per_layer[2]},
+        "outer": {"flops": outer[0], "bytes": outer[1],
+                  "collective_bytes": outer[2]},
+        "corrected": {"flops": corrected[0], "bytes": corrected[1],
+                      "collective_bytes": corrected[2]},
+        "hybrid_tail_approx": cfg.family == "hybrid" and cfg.n_layers % len(
+            cfg.rglru.pattern) != 0,
+    }
+
+
+def dataclasses_replace_accum1(settings):
+    import dataclasses
+    return dataclasses.replace(settings, grad_accum=1)
+
+
+# --------------------------------------------------------------------------
+# Metric collection
+# --------------------------------------------------------------------------
+def param_counts(cfg) -> Dict[str, int]:
+    p_specs = jax.eval_shape(lambda: tfm.init(jax.random.PRNGKey(0), cfg))
+    flat, _ = jax.tree_util.tree_flatten_with_path(p_specs)
+    total = sum(int(np.prod(l.shape)) for _, l in flat)
+    expert = sum(int(np.prod(l.shape)) for path, l in flat
+                 if any(k in jax.tree_util.keystr(path)
+                        for k in ("moe']['wi", "moe']['wg", "moe']['wo")))
+    return {"total": total, "experts": expert}
+
+
+def collect(lowered, compiled, mesh, cfg, shape_name: str,
+            probe: Optional[Dict] = None) -> Dict[str, Any]:
+    spec = shape_lib.SHAPES[shape_name]
+    chips = int(np.prod(mesh.devices.shape))
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    coll = roofline.collective_bytes_from_hlo(hlo)
+
+    counts = param_counts(cfg)
+    n_active = roofline.active_params(cfg, counts["total"], counts["experts"])
+    if spec.kind == "train":
+        tokens = spec.batch * spec.seq
+    elif spec.kind == "prefill":
+        tokens = spec.batch * spec.seq
+    else:
+        tokens = spec.batch  # one token per sequence
+    mf = roofline.model_flops(cfg, spec.kind, tokens, counts["total"],
+                              n_active)
+
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    coll_dev = float(coll["total"])
+    if probe is not None:  # scan-corrected per-device totals
+        flops_dev = probe["corrected"]["flops"]
+        bytes_dev = probe["corrected"]["bytes"]
+        coll_dev = probe["corrected"]["collective_bytes"]
+    terms = roofline.RooflineTerms(
+        arch=cfg.name, shape=shape_name,
+        mesh="x".join(map(str, mesh.devices.shape)),
+        chips=chips,
+        flops_global=flops_dev * chips,
+        hbm_bytes_global=bytes_dev * chips,
+        collective_bytes_per_device=coll_dev,
+        model_flops=mf,
+    )
+
+    def _mem_attr(name):
+        try:
+            return int(getattr(mem, name))
+        except Exception:
+            return None
+
+    return {
+        "arch": cfg.name, "shape": shape_name,
+        "mesh": "x".join(map(str, mesh.devices.shape)), "chips": chips,
+        "params_total": counts["total"], "params_active": n_active,
+        "cost_analysis": {k: float(v) for k, v in cost.items()
+                          if isinstance(v, (int, float))},
+        "memory_analysis": {
+            "argument_size_bytes": _mem_attr("argument_size_in_bytes"),
+            "output_size_bytes": _mem_attr("output_size_in_bytes"),
+            "temp_size_bytes": _mem_attr("temp_size_in_bytes"),
+            "generated_code_size_bytes": _mem_attr("generated_code_size_in_bytes"),
+        },
+        "collectives": coll,
+        "probe": probe,
+        "roofline": terms.row(),
+    }
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+def cells(include_multi: bool = True):
+    for arch in registry.list_archs():
+        cfg = registry.get_config(arch)
+        for shape_name in shape_lib.SHAPES:
+            ok, _ = shape_lib.supported(cfg, shape_name)
+            if not ok:
+                continue
+            yield arch, shape_name, False
+            if include_multi:
+                yield arch, shape_name, True
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str, out_path: str,
+            rules_extra: Optional[Dict] = None, with_probe: bool = True,
+            variant: Optional[str] = None) -> Dict:
+    t0 = time.time()
+    multi = mesh_kind == "multi"
+    lowered, mesh, cfg, settings = lower_cell(arch, shape_name, multi,
+                                              rules_extra, variant=variant)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    print(compiled.memory_analysis())
+    print({k: v for k, v in (compiled.cost_analysis() or {}).items()
+           if k in ("flops", "bytes accessed")})
+    probe = None
+    if with_probe:
+        try:
+            probe = probe_corrected(arch, shape_name, multi, rules_extra,
+                                    variant)
+        except Exception as e:  # record the artifact even if probes fail
+            print(f"[probe-fail] {e}")
+    rec = collect(lowered, compiled, mesh, cfg, shape_name, probe)
+    rec["lower_s"] = t_lower
+    rec["compile_s"] = t_compile
+    rec["optimizer"] = settings.optimizer
+    rec["grad_accum"] = settings.grad_accum
+    rec["variant"] = variant
+    if out_path:
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--out-dir", default=os.path.abspath(OUT_DIR))
+    ap.add_argument("--timeout", type=int, default=2700)
+    ap.add_argument("--no-probe", action="store_true",
+                    help="skip roofline probes (multi-pod compile proof only)")
+    ap.add_argument("--variant", choices=sorted(VARIANTS),
+                    help="§Perf hillclimb variant")
+    args = ap.parse_args()
+
+    if args.all:
+        os.makedirs(args.out_dir, exist_ok=True)
+        failures = []
+        for arch, shape_name, multi in cells(not args.single_pod_only):
+            mk = "multi" if multi else "single"
+            out = os.path.join(args.out_dir, f"{arch}__{shape_name}__{mk}.json")
+            if os.path.exists(out):
+                print(f"[skip] {arch} {shape_name} {mk}")
+                continue
+            print(f"[cell] {arch} {shape_name} {mk}", flush=True)
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape_name, "--mesh", mk,
+                   "--out-dir", args.out_dir]
+            if mk == "multi":  # roofline table is single-pod only
+                cmd.append("--no-probe")
+            r = subprocess.run(
+                cmd,
+                timeout=args.timeout, capture_output=True, text=True,
+                env={**os.environ, "PYTHONPATH": "src"})
+            if r.returncode != 0:
+                failures.append((arch, shape_name, mk))
+                print(f"[FAIL] {arch} {shape_name} {mk}\n{r.stderr[-2000:]}")
+        print(f"done; {len(failures)} failures: {failures}")
+        sys.exit(1 if failures else 0)
+
+    suffix = f"__{args.variant}" if args.variant else ""
+    out = os.path.join(args.out_dir,
+                       f"{args.arch}__{args.shape}__{args.mesh}{suffix}.json")
+    rec = run_one(args.arch, args.shape, args.mesh, out,
+                  with_probe=not args.no_probe, variant=args.variant)
+    print(json.dumps(rec["roofline"], indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Production mesh definitions.
+
+Defined as functions (never module-level constants) so importing this
+module touches no jax device state.  The single-pod mesh is a v5e pod
+(16x16 = 256 chips); multi-pod adds a leading `pod` axis (2 pods = 512
+chips) that carries only data-parallel traffic (DCN-friendly — see
+DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — the "
+            "dry-run entrypoint must set XLA_FLAGS="
+            "--xla_force_host_platform_device_count=512 before importing jax")
+    return jax.sharding.Mesh(
+        np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
+    """Tiny mesh for CPU tests (requires >=4 host devices)."""
+    n = int(np.prod(shape))
+    return jax.sharding.Mesh(
+        np.asarray(jax.devices()[:n]).reshape(shape), axes)

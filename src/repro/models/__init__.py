@@ -1,0 +1,1 @@
+from repro.models.config import ModelConfig, MoEConfig, RGLRUConfig, SSMConfig, reduced  # noqa: F401

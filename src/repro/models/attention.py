@@ -1,0 +1,197 @@
+"""GQA attention: full, blocked (flash-style scan), local-window and decode.
+
+Three execution paths share one set of projection weights:
+
+* ``full``     — einsum attention materializing (S, S) scores. Used for
+                 short sequences (training at 4k).
+* ``blocked``  — lax.scan over KV blocks with online softmax. HLO memory
+                 stays O(block) instead of O(S^2); this is the pure-JAX
+                 flash-attention used by the multi-pod dry-run (Pallas
+                 cannot lower for the CPU host platform).
+* ``pallas``   — repro.kernels.flash_attention on real TPUs.
+
+Decode reads a contiguous KV cache; see repro/serving/kv_cache.py for the
+paged variant.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.config import ModelConfig
+from repro.models.layers import rmsnorm
+from repro.models.rope import apply_rope
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# Params
+# --------------------------------------------------------------------------
+def attention_init(key, cfg: ModelConfig):
+    D, Hq, Hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    ks = common.split_like(key, ["wq", "wk", "wv", "wo", "qn", "kn"])
+    p = {
+        "wq": common.dense_init(ks["wq"], (D, Hq, hd), cfg.p_dtype),
+        "wk": common.dense_init(ks["wk"], (D, Hk, hd), cfg.p_dtype),
+        "wv": common.dense_init(ks["wv"], (D, Hk, hd), cfg.p_dtype),
+        "wo": common.dense_init(ks["wo"], (Hq, hd, D), cfg.p_dtype, in_axis=2),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": jnp.ones((hd,), cfg.p_dtype)}
+        p["k_norm"] = {"scale": jnp.ones((hd,), cfg.p_dtype)}
+    return p
+
+
+def attention_axes(cfg: ModelConfig):
+    a = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if cfg.qk_norm:
+        a["q_norm"] = {"scale": (None,)}
+        a["k_norm"] = {"scale": (None,)}
+    return a
+
+
+def qkv_project(params, x, cfg: ModelConfig, rope: Tuple[jnp.ndarray, jnp.ndarray]):
+    """x (B,S,D) -> q (B,S,Hq,hd), k/v (B,S,Hk,hd), rope applied."""
+    dt = cfg.act_dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    cos, sin = rope
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def out_project(params, o, cfg: ModelConfig):
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(cfg.act_dtype))
+
+
+# --------------------------------------------------------------------------
+# Full (materialized) attention
+# --------------------------------------------------------------------------
+def _causal_mask(sq: int, sk: int, q_offset: int, window: Optional[int]):
+    """Additive mask (sq, sk): causal, optionally banded to `window`."""
+    qi = jnp.arange(sq)[:, None] + q_offset
+    kj = jnp.arange(sk)[None, :]
+    ok = kj <= qi
+    if window is not None:
+        ok &= kj > qi - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def full_attention(q, k, v, cfg: ModelConfig, q_offset: int = 0,
+                   window: Optional[int] = None):
+    """q (B,Sq,Hq,d), k/v (B,Sk,Hk,d) -> (B,Sq,Hq,d)."""
+    B, Sq, Hq, d = q.shape
+    Sk, Hk = k.shape[1], k.shape[2]
+    G = Hq // Hk
+    qg = q.reshape(B, Sq, Hk, G, d)
+    scale = d ** -0.5
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * scale
+    scores = scores + _causal_mask(Sq, Sk, q_offset, window)[None, None, None]
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return o.reshape(B, Sq, Hq, d)
+
+
+# --------------------------------------------------------------------------
+# Blocked streaming attention (pure-JAX flash): scan over KV blocks
+# --------------------------------------------------------------------------
+def blocked_attention(q, k, v, cfg: ModelConfig, q_offset: int = 0,
+                      window: Optional[int] = None):
+    """Online-softmax attention; never materializes (Sq, Sk) at once.
+
+    Scans KV blocks; each step computes scores for one (Sq, block_kv) tile.
+    Numerically identical to full_attention (same fp32 softmax).
+    """
+    B, Sq, Hq, d = q.shape
+    Sk, Hk = k.shape[1], k.shape[2]
+    G = Hq // Hk
+    bk = min(cfg.attn_block_kv, Sk)
+    if Sk % bk:  # pad KV to a multiple of the block
+        pad = bk - Sk % bk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nkb = k.shape[1] // bk
+    kb = k.reshape(B, nkb, bk, Hk, d).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nkb, bk, Hk, d).transpose(1, 0, 2, 3, 4)
+
+    qg = q.reshape(B, Sq, Hk, G, d)
+    scale = d ** -0.5
+    qi = jnp.arange(Sq)[:, None] + q_offset  # absolute query positions
+
+    def step(carry, inp):
+        m, l, acc = carry  # running max (B,Hk,G,Sq), denom, weighted sum
+        kblk, vblk, kstart = inp
+        kj = kstart + jnp.arange(bk)[None, :]
+        ok = (kj <= qi) & (kj < Sk)
+        if window is not None:
+            ok &= kj > qi - window
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kblk).astype(jnp.float32) * scale
+        s = jnp.where(ok[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(q.dtype), vblk).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hk, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hk, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hk, G, Sq, d), jnp.float32)
+    starts = jnp.arange(nkb) * bk
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kb, vb, starts),
+                                  unroll=True if cfg.scan_unroll else 1)
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, d).astype(q.dtype)
+
+
+def attend(q, k, v, cfg: ModelConfig, q_offset: int = 0,
+           window: Optional[int] = None):
+    """Dispatch on sequence length / configured implementation."""
+    Sk = k.shape[1]
+    if cfg.attention_impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+        if q.shape[1] > 1:
+            return fa_ops.flash_attention(
+                q, k, v, causal=True, q_offset=q_offset, window=window)
+    if Sk > cfg.blocked_threshold:
+        return blocked_attention(q, k, v, cfg, q_offset, window)
+    return full_attention(q, k, v, cfg, q_offset, window)
+
+
+# --------------------------------------------------------------------------
+# Decode (single new token against a KV cache)
+# --------------------------------------------------------------------------
+def decode_attention(q, k_cache, v_cache, length, cfg: ModelConfig,
+                     window: Optional[int] = None):
+    """q (B,1,Hq,d); caches (B,Smax,Hk,d); length: scalar or (B,) valid len.
+
+    Positions >= length are masked. For local attention the cache is a ring
+    buffer of size `window` and every live slot is valid.
+    """
+    B, _, Hq, d = q.shape
+    Smax, Hk = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hk
+    qg = q.reshape(B, Hk, G, d)
+    scale = d ** -0.5
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache).astype(jnp.float32) * scale
+    kj = jnp.arange(Smax)[None, :]
+    valid = kj < jnp.reshape(jnp.asarray(length), (-1, 1))
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache)
+    return o.reshape(B, 1, Hq, d)

@@ -1,0 +1,96 @@
+"""Parameter initialization helpers and the logical-axis annotation scheme.
+
+Params are plain nested dicts of jnp arrays (no flax).  Each module exposes
+``init(key, cfg) -> params`` plus ``axes(cfg) -> tree`` where the axes tree
+mirrors the params tree and holds a tuple of *logical* axis names per array
+dimension.  ``repro.distributed.sharding`` maps logical names onto mesh axes
+(with divisibility-aware fallback), giving MaxText-style 2-D FSDP x TP
+sharding without a module framework.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # nested dict pytree of arrays
+AxesTree = Any  # same structure, leaves are tuples of Optional[str]
+
+
+def dense_init(key, shape, dtype, in_axis: int = 0, scale: float = 1.0):
+    """Truncated-normal fan-in initializer (matches common LM practice)."""
+    fan_in = shape[in_axis]
+    std = scale / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype, scale: float = 1.0):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(_key, shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+def split_like(key, tree_keys: Sequence[str]):
+    keys = jax.random.split(key, len(tree_keys))
+    return dict(zip(tree_keys, keys))
+
+
+def stack_init(block_init: Callable, n: int):
+    """vmap a per-layer init over `n` layer keys -> stacked params."""
+
+    def init(key, *args, **kw):
+        keys = jax.random.split(key, n)
+        return jax.vmap(lambda k: block_init(k, *args, **kw))(keys)
+
+    return init
+
+
+def stacked_axes(axes_tree: AxesTree) -> AxesTree:
+    """Prepend the (unsharded) `layers` scan axis to every leaf."""
+    from repro.distributed.sharding import is_axes_leaf
+    return jax.tree.map(
+        lambda t: ("layers",) + tuple(t),
+        axes_tree,
+        is_leaf=is_axes_leaf,
+    )
+
+
+def param_count(params: Params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def param_bytes(params: Params) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(params))
+
+
+def cast_tree(params: Params, dtype) -> Params:
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        params,
+    )
+
+
+def tree_shapes(params: Params):
+    return jax.tree.map(lambda x: tuple(x.shape), params)
+
+
+def assert_tree_matches(params: Params, axes: AxesTree):
+    """Every array's rank must match its logical-axes tuple length."""
+
+    def chk(path, x, a):
+        assert len(a) == x.ndim, f"{path}: rank {x.ndim} vs axes {a}"
+
+    flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+    flat_a = jax.tree.leaves(axes, is_leaf=lambda t: isinstance(t, tuple))
+    assert len(flat_p) == len(flat_a), (
+        f"param/axes leaf count mismatch: {len(flat_p)} vs {len(flat_a)}")
+    for (path, x), a in zip(flat_p, flat_a):
+        chk(jax.tree_util.keystr(path), x, a)

@@ -1,0 +1,198 @@
+"""Model configuration dataclasses.
+
+Every assigned architecture is expressed as a :class:`ModelConfig`; the
+family field selects the block composition (dense / moe / ssm / hybrid).
+Configs are immutable and hashable so they can be closed over by jitted
+functions safely.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    """GShard-style token-choice MoE."""
+
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    router_z_coef: float = 1e-3
+    aux_loss_coef: float = 1e-2
+    # number of always-on shared experts (DeepSeek-style); 0 for dbrx/qwen3
+    num_shared: int = 0
+    # dispatch implementation: "gshard" = one-hot dispatch/combine einsums
+    # (canonical, SPMD-friendly); "gather" = scatter/gather token buffers
+    # (no (B,S,E,C) tensors — the §Perf memory-bytes optimization)
+    moe_impl: str = "gshard"
+    # keep dispatch/combine one-hots in fp32 (exact) or cast to the
+    # activation dtype at creation (halves the dominant MoE collective
+    # payload — §Perf H1)
+    dispatch_fp32: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-2 (SSD, state-space duality) block parameters."""
+
+    d_state: int = 128
+    expand: int = 2
+    headdim: int = 64
+    ngroups: int = 1
+    conv_width: int = 4
+    chunk: int = 256
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+    a_init_range: Tuple[float, float] = (1.0, 16.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    """Griffin / RecurrentGemma RG-LRU recurrent block parameters."""
+
+    lru_width: Optional[int] = None  # defaults to d_model
+    conv_width: int = 4
+    c_constant: float = 8.0
+    # layer pattern within a repeating group (recurrentgemma is 2 rec : 1 attn)
+    pattern: Tuple[str, ...] = ("rec", "rec", "attn")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None  # defaults to d_model // n_heads
+
+    # attention details
+    qk_norm: bool = False
+    rope_theta: float = 1e4
+    local_window: Optional[int] = None  # sliding window (recurrentgemma)
+    # M-RoPE (qwen2-vl): per-component rotary sections (t, h, w); the
+    # sections are in units of rotary pairs and must sum to head_dim // 2.
+    mrope_sections: Optional[Tuple[int, int, int]] = None
+
+    # multi-codebook audio LM (musicgen): inputs/outputs are (B, K, S)
+    num_codebooks: int = 1
+
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+
+    # numerics
+    dtype: str = "bfloat16"  # activation / compute dtype
+    param_dtype: str = "bfloat16"
+    logits_dtype: str = "float32"
+
+    # norm
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+
+    # attention execution strategy
+    attn_block_q: int = 512
+    attn_block_kv: int = 1024
+    # beyond this sequence length the blocked (flash-style scan) attention
+    # path is used so HLO never materializes an O(S^2) score tensor
+    blocked_threshold: int = 8192
+    attention_impl: str = "reference"  # reference | pallas
+
+    # remat policy for the scanned layer stack: none | dots | full
+    remat_policy: str = "dots"
+    # unroll the layer scan (dry-run probes only: XLA cost_analysis counts a
+    # while-loop body once, so roofline probes lower shallow unrolled copies)
+    scan_unroll: bool = False
+
+    # KV-cache storage: "model" (= activation dtype) or "int8"
+    # (KIVI/KVQuant-style per-token-per-head scales; serving memory win)
+    kv_cache_dtype: str = "model"
+
+    # training
+    z_loss_coef: float = 1e-4
+
+    # ---- derived helpers -------------------------------------------------
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // self.n_kv_heads if self.n_kv_heads else 1
+
+    @property
+    def act_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def p_dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def attn_layer_indices(self) -> Tuple[int, ...]:
+        """Indices of attention layers (hybrid family only)."""
+        if self.family != "hybrid":
+            return tuple(range(self.n_layers))
+        pat = self.rglru.pattern
+        return tuple(
+            i for i in range(self.n_layers) if pat[i % len(pat)] == "attn"
+        )
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def validate(self) -> "ModelConfig":
+        assert self.n_heads % max(self.n_kv_heads, 1) == 0, "GQA grouping"
+        if self.mrope_sections is not None:
+            assert sum(self.mrope_sections) == self.head_dim_ // 2, (
+                f"M-RoPE sections {self.mrope_sections} must sum to "
+                f"head_dim/2 = {self.head_dim_ // 2}"
+            )
+        if self.family == "moe":
+            assert self.moe is not None
+        if self.family == "ssm":
+            assert self.ssm is not None
+        if self.family == "hybrid":
+            assert self.rglru is not None and self.local_window is not None
+        return self
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """A tiny same-family config for CPU smoke tests.
+
+    Keeps the family, block composition and every structural flag but
+    shrinks widths/depths so a forward+backward runs in <1s on CPU.
+    """
+    kw = dict(
+        name=cfg.name + "-smoke",
+        n_layers=min(cfg.n_layers, 2 if cfg.family != "hybrid" else 3),
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2),
+        head_dim=32,
+        d_ff=256,
+        vocab=512,
+        blocked_threshold=64,  # exercise the blocked path in smoke tests too
+        attn_block_q=16,
+        attn_block_kv=16,
+    )
+    if cfg.mrope_sections is not None:
+        kw["mrope_sections"] = (4, 6, 6)  # sums to head_dim/2 = 16
+    if cfg.local_window is not None:
+        kw["local_window"] = 32
+    if cfg.moe is not None:
+        kw["moe"] = dataclasses.replace(
+            cfg.moe, num_experts=min(cfg.moe.num_experts, 8),
+            top_k=min(cfg.moe.top_k, 2), d_ff_expert=128)
+    if cfg.ssm is not None:
+        kw["ssm"] = dataclasses.replace(
+            cfg.ssm, d_state=16, headdim=16, chunk=16)
+    kw.update(overrides)
+    return cfg.replace(**kw).validate()

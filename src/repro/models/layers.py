@@ -1,0 +1,123 @@
+"""Basic layers: RMSNorm, embeddings, output heads, cross-entropy loss."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.config import ModelConfig
+
+
+# --------------------------------------------------------------------------
+# RMSNorm
+# --------------------------------------------------------------------------
+def rmsnorm_init(key, dim, cfg: ModelConfig):
+    del key
+    return {"scale": jnp.ones((dim,), cfg.p_dtype)}
+
+
+def rmsnorm_axes(_cfg):
+    return {"scale": (None,)}
+
+
+def rmsnorm(params, x, eps: float):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def rmsnorm_nop(x, eps: float):
+    """Scale-free RMSNorm (used for per-head qk-norm without extra params
+    when the config calls for it; qwen3 uses learned scales, see attention)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Token embedding + LM head
+# --------------------------------------------------------------------------
+def embedding_init(key, cfg: ModelConfig):
+    if cfg.num_codebooks > 1:
+        # one table per codebook (musicgen); summed at input
+        return {
+            "table": common.embed_init(
+                key, (cfg.num_codebooks, cfg.vocab, cfg.d_model), cfg.p_dtype)
+        }
+    return {"table": common.embed_init(key, (cfg.vocab, cfg.d_model), cfg.p_dtype)}
+
+
+def embedding_axes(cfg: ModelConfig):
+    if cfg.num_codebooks > 1:
+        return {"table": (None, "vocab", "embed")}
+    return {"table": ("vocab", "embed")}
+
+
+def embed(params, tokens, cfg: ModelConfig):
+    """tokens: (B, S) int32 — or (B, K, S) for multi-codebook models."""
+    table = params["table"].astype(cfg.act_dtype)
+    if cfg.num_codebooks > 1:
+        # (B, K, S) -> sum_k table[k, tok]
+        def one(k):
+            return jnp.take(table[k], tokens[:, k, :], axis=0)
+
+        return sum(one(k) for k in range(cfg.num_codebooks))
+    return jnp.take(table, tokens, axis=0)
+
+
+def lm_head_init(key, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return {}
+    if cfg.num_codebooks > 1:
+        return {
+            "w": common.dense_init(
+                key, (cfg.num_codebooks, cfg.d_model, cfg.vocab), cfg.p_dtype, in_axis=1)
+        }
+    return {"w": common.dense_init(key, (cfg.d_model, cfg.vocab), cfg.p_dtype)}
+
+
+def lm_head_axes(cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return {}
+    if cfg.num_codebooks > 1:
+        return {"w": (None, "embed", "vocab")}
+    return {"w": ("embed", "vocab")}
+
+
+def lm_head(params, embed_params, x, cfg: ModelConfig):
+    """x: (B, S, D) -> logits (B, S, V) or (B, K, S, V) for codebooks."""
+    if cfg.tie_embeddings:
+        table = embed_params["table"].astype(cfg.act_dtype)
+        if cfg.num_codebooks > 1:
+            return jnp.einsum("bsd,kvd->bksv", x, table).astype(cfg.logits_dtype)
+        return jnp.einsum("bsd,vd->bsv", x, table).astype(cfg.logits_dtype)
+    w = params["w"].astype(cfg.act_dtype)
+    if cfg.num_codebooks > 1:
+        return jnp.einsum("bsd,kdv->bksv", x, w).astype(cfg.logits_dtype)
+    return jnp.einsum("bsd,dv->bsv", x, w).astype(cfg.logits_dtype)
+
+
+# --------------------------------------------------------------------------
+# Loss
+# --------------------------------------------------------------------------
+def softmax_cross_entropy(logits, labels, z_loss_coef: float = 0.0):
+    """Stable CE with optional z-loss (PaLM); logits (..., V), labels (...)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = lse - gold
+    if z_loss_coef:
+        ce = ce + z_loss_coef * jnp.square(lse)
+    return ce
+
+
+def lm_loss(logits, labels, mask=None, z_loss_coef: float = 0.0):
+    """Mean next-token CE.  logits (B,S,V) or (B,K,S,V); labels match."""
+    ce = softmax_cross_entropy(logits, labels, z_loss_coef)
+    if mask is None:
+        return jnp.mean(ce)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(ce * mask) / jnp.maximum(jnp.sum(mask), 1.0)

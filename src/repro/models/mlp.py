@@ -1,0 +1,54 @@
+"""SwiGLU feed-forward (llama/qwen/mistral style) and plain GeLU MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.config import ModelConfig
+
+
+def swiglu_init(key, cfg: ModelConfig, d_ff=None):
+    d_ff = d_ff or cfg.d_ff
+    ks = common.split_like(key, ["wi", "wg", "wo"])
+    return {
+        "wi": common.dense_init(ks["wi"], (cfg.d_model, d_ff), cfg.p_dtype),
+        "wg": common.dense_init(ks["wg"], (cfg.d_model, d_ff), cfg.p_dtype),
+        "wo": common.dense_init(ks["wo"], (d_ff, cfg.d_model), cfg.p_dtype),
+    }
+
+
+def swiglu_axes(_cfg):
+    return {
+        "wi": ("embed", "mlp"),
+        "wg": ("embed", "mlp"),
+        "wo": ("mlp", "embed"),
+    }
+
+
+def swiglu(params, x, cfg: ModelConfig):
+    dt = cfg.act_dtype
+    h = jnp.einsum("bsd,df->bsf", x, params["wi"].astype(dt))
+    g = jnp.einsum("bsd,df->bsf", x, params["wg"].astype(dt))
+    h = jax.nn.silu(g) * h
+    return jnp.einsum("bsf,fd->bsd", h, params["wo"].astype(dt))
+
+
+def gelu_mlp_init(key, cfg: ModelConfig, d_ff=None):
+    d_ff = d_ff or cfg.d_ff
+    ks = common.split_like(key, ["wi", "wo"])
+    return {
+        "wi": common.dense_init(ks["wi"], (cfg.d_model, d_ff), cfg.p_dtype),
+        "wo": common.dense_init(ks["wo"], (d_ff, cfg.d_model), cfg.p_dtype),
+    }
+
+
+def gelu_mlp_axes(_cfg):
+    return {"wi": ("embed", "mlp"), "wo": ("mlp", "embed")}
+
+
+def gelu_mlp(params, x, cfg: ModelConfig):
+    dt = cfg.act_dtype
+    h = jnp.einsum("bsd,df->bsf", x, params["wi"].astype(dt))
+    h = jax.nn.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", h, params["wo"].astype(dt))

@@ -1,0 +1,188 @@
+"""GShard-style token-choice top-k MoE with capacity-factor routing.
+
+Design for scale (EP over the `model` mesh axis):
+
+* expert weights carry an `experts` logical axis -> sharded over `model`;
+* tokens are dispatched with one-hot dispatch/combine einsums, so XLA's
+  SPMD partitioner materializes the all-to-all from sharding propagation
+  (the standard GShard lowering) rather than hand-written collectives;
+* capacity-factor truncation keeps the dispatch tensor static-shaped,
+  which is required for pjit;
+* auxiliary load-balancing loss (Switch) + router z-loss are returned so
+  the trainer can add them.
+
+The router runs in fp32 — bf16 logits measurably degrade load balance.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.config import ModelConfig, MoEConfig
+
+
+def moe_init(key, cfg: ModelConfig):
+    m = cfg.moe
+    ks = common.split_like(key, ["router", "wi", "wg", "wo", "shared"])
+    E, D, F = m.num_experts, cfg.d_model, m.d_ff_expert
+    p = {
+        "router": common.dense_init(ks["router"], (D, E), jnp.float32),
+        "wi": common.dense_init(ks["wi"], (E, D, F), cfg.p_dtype, in_axis=1),
+        "wg": common.dense_init(ks["wg"], (E, D, F), cfg.p_dtype, in_axis=1),
+        "wo": common.dense_init(ks["wo"], (E, F, D), cfg.p_dtype, in_axis=1),
+    }
+    if m.num_shared:
+        from repro.models.mlp import swiglu_init
+        p["shared"] = swiglu_init(ks["shared"], cfg, d_ff=F * m.num_shared)
+    return p
+
+
+def moe_axes(cfg: ModelConfig):
+    a = {
+        "router": ("embed", None),
+        # expert weights get their own FSDP logical name so serving /
+        # collective-bound hillclimbs can keep them expert-sharded but
+        # replicated along `data` (stationary weights, no per-step gather)
+        "wi": ("experts", "expert_embed", "expert_mlp"),
+        "wg": ("experts", "expert_embed", "expert_mlp"),
+        "wo": ("experts", "expert_mlp", "expert_embed"),
+    }
+    if cfg.moe.num_shared:
+        from repro.models.mlp import swiglu_axes
+        a["shared"] = swiglu_axes(cfg)
+    return a
+
+
+def _capacity(tokens_per_group: int, m: MoEConfig) -> int:
+    cap = int(m.capacity_factor * tokens_per_group * m.top_k / m.num_experts)
+    return max(cap, m.top_k)
+
+
+def route(router_w, x, m: MoEConfig, out_dtype=jnp.float32):
+    """x (B,S,D) -> top-k routing.
+
+    Returns (dispatch (B,S,E,C) bool-ish, combine (B,S,E,C) float,
+    aux_loss scalar, router_z scalar).
+    """
+    B, S, _ = x.shape
+    C = _capacity(S, m)
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), router_w)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    gate_vals, gate_idx = jax.lax.top_k(probs, m.top_k)  # (B,S,k)
+    # renormalize the selected gates (dbrx/mixtral convention)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) in its expert's buffer
+    onehot = jax.nn.one_hot(gate_idx, m.num_experts, dtype=jnp.float32)  # (B,S,k,E)
+    # rank tokens per expert by arrival order (token-major, choice-minor)
+    flat = onehot.reshape(B, S * m.top_k, m.num_experts)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat  # (B, S*k, E)
+    pos_in_expert = pos_in_expert.reshape(B, S, m.top_k, m.num_experts)
+    within_cap = pos_in_expert < C
+    keep = onehot * within_cap  # (B,S,k,E)
+
+    pos_clipped = jnp.minimum(pos_in_expert, C - 1).astype(jnp.int32)
+    pos_onehot = jax.nn.one_hot(pos_clipped, C, dtype=jnp.float32)  # (B,S,k,E,C)
+    dispatch = jnp.einsum("bske,bskec->bsec", keep, pos_onehot).astype(out_dtype)
+    combine = jnp.einsum("bsk,bske,bskec->bsec", gate_vals, keep,
+                         pos_onehot).astype(out_dtype)
+
+    # Switch aux loss: E * sum_e f_e * p_e
+    density = jnp.mean(onehot.sum(axis=2), axis=(0, 1))        # fraction routed per expert
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = m.num_experts * jnp.sum(density * mean_prob) * m.aux_loss_coef
+    router_z = jnp.mean(
+        jnp.square(jax.scipy.special.logsumexp(logits, axis=-1))) * m.router_z_coef
+    return dispatch, combine, aux, router_z
+
+
+def moe_apply(params, x, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output (B,S,D), aux_losses scalar)."""
+    if cfg.moe.moe_impl == "gather":
+        return moe_apply_gather(params, x, cfg)
+    return moe_apply_gshard(params, x, cfg)
+
+
+def moe_apply_gshard(params, x, cfg: ModelConfig
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    m = cfg.moe
+    dt = cfg.act_dtype
+    disp_dt = jnp.float32 if m.dispatch_fp32 else dt
+    dispatch, combine, aux, router_z = route(params["router"], x, m, disp_dt)
+    # dispatch tokens into per-expert buffers: (B, E, C, D)
+    xe = jnp.einsum("bsec,bsd->becd", dispatch.astype(dt), x)
+    h = jnp.einsum("becd,edf->becf", xe, params["wi"].astype(dt))
+    g = jnp.einsum("becd,edf->becf", xe, params["wg"].astype(dt))
+    h = jax.nn.silu(g) * h
+    ye = jnp.einsum("becf,efd->becd", h, params["wo"].astype(dt))
+    y = jnp.einsum("bsec,becd->bsd", combine.astype(dt), ye)
+    if m.num_shared:
+        from repro.models.mlp import swiglu
+        y = y + swiglu(params["shared"], x, cfg)
+    return y, aux + router_z
+
+
+def moe_apply_gather(params, x, cfg: ModelConfig
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scatter/gather dispatch: numerically identical routing to the
+    GShard path (same arrival-order capacity drops) but the (B,S,E,C)
+    dispatch/combine one-hots never materialize — tokens are scatter-added
+    into (B, E*C, D) buffers and gathered back by slot index.
+
+    Memory per layer drops from O(B S E C) to O(B S k) index tensors,
+    which is the dominant §Perf memory-bytes win for 128-expert configs.
+    """
+    m = cfg.moe
+    dt = cfg.act_dtype
+    B, S, D = x.shape
+    E, k = m.num_experts, m.top_k
+    C = _capacity(S, m)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)           # (B,S,k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)  # (B,S,k,E)
+    flat = onehot.reshape(B, S * k, E)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat          # (B,S*k,E)
+    pos_k = jnp.sum(pos_in_expert * flat, axis=-1)           # (B,S*k)
+    pos_k = pos_k.reshape(B, S, k).astype(jnp.int32)
+    keep = (pos_k < C)                                       # (B,S,k)
+    slot = gate_idx * C + jnp.minimum(pos_k, C - 1)          # (B,S,k)
+
+    # scatter tokens into per-expert buffers (dropped tokens add zeros)
+    xk = (x[:, :, None, :] * keep[..., None].astype(dt)).reshape(B, S * k, D)
+    slot_flat = slot.reshape(B, S * k)
+    xe = jnp.zeros((B, E * C, D), dt).at[
+        jnp.arange(B)[:, None], slot_flat].add(xk)
+    xe = xe.reshape(B, E, C, D)
+
+    h = jnp.einsum("becd,edf->becf", xe, params["wi"].astype(dt))
+    g = jnp.einsum("becd,edf->becf", xe, params["wg"].astype(dt))
+    h = jax.nn.silu(g) * h
+    ye = jnp.einsum("becf,efd->becd", h, params["wo"].astype(dt))
+
+    # gather back + weighted combine over the k choices
+    ye_flat = ye.reshape(B, E * C, D)
+    out_k = jnp.take_along_axis(
+        ye_flat, slot_flat[..., None], axis=1).reshape(B, S, k, D)
+    w = (gate_vals * keep).astype(dt)
+    y = jnp.einsum("bsk,bskd->bsd", w, out_k)
+
+    density = jnp.mean(onehot.sum(axis=2), axis=(0, 1))
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(density * mean_prob) * m.aux_loss_coef
+    router_z = jnp.mean(jnp.square(
+        jax.scipy.special.logsumexp(logits, axis=-1))) * m.router_z_coef
+    if m.num_shared:
+        from repro.models.mlp import swiglu
+        y = y + swiglu(params["shared"], x, cfg)
+    return y, aux + router_z

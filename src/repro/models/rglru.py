@@ -1,0 +1,160 @@
+"""Griffin / RecurrentGemma RG-LRU recurrent block (arXiv:2402.19427).
+
+Block layout (the "recurrent block" of Griffin):
+
+    x ─ linear ─ conv1d(4) ─ RG-LRU ─┐
+                                      ⊙ ─ linear → out
+    x ─ linear ─ GeLU ───────────────┘
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)
+    i_t = sigmoid(W_x x_t + b_x)
+    a_t = exp(-c · softplus(Λ) · r_t)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t²) · (i_t ⊙ x_t)
+
+Train/prefill uses an associative scan over the sequence (log-depth on
+TPU); decode is the O(1) update.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.config import ModelConfig
+
+
+class RGLRUState(NamedTuple):
+    conv: jnp.ndarray  # (B, conv_width-1, W)
+    h: jnp.ndarray     # (B, W) recurrent state (fp32)
+
+
+def _width(cfg: ModelConfig) -> int:
+    return cfg.rglru.lru_width or cfg.d_model
+
+
+def rglru_init(key, cfg: ModelConfig):
+    W = _width(cfg)
+    r = cfg.rglru
+    ks = common.split_like(
+        key, ["in_x", "in_gate", "conv", "wa", "wx", "lam", "out"])
+    # Λ init so that a^c = exp(-c softplus Λ) gives decay in [0.9, 0.999]
+    u = jax.random.uniform(ks["lam"], (W,), jnp.float32, 0.9, 0.999)
+    # solve exp(-c * softplus(lam)) = u  ->  softplus(lam) = -log(u)/c
+    sp = -jnp.log(u) / r.c_constant
+    lam = jnp.log(jnp.expm1(sp))
+    return {
+        "in_x": common.dense_init(ks["in_x"], (cfg.d_model, W), cfg.p_dtype),
+        "in_gate": common.dense_init(ks["in_gate"], (cfg.d_model, W), cfg.p_dtype),
+        "conv_w": common.dense_init(ks["conv"], (r.conv_width, W), cfg.p_dtype),
+        "conv_b": jnp.zeros((W,), cfg.p_dtype),
+        "wa": common.dense_init(ks["wa"], (W, W), jnp.float32, scale=0.5),
+        "ba": jnp.zeros((W,), jnp.float32),
+        "wx": common.dense_init(ks["wx"], (W, W), jnp.float32, scale=0.5),
+        "bx": jnp.zeros((W,), jnp.float32),
+        "lam": lam,
+        "out": common.dense_init(ks["out"], (W, cfg.d_model), cfg.p_dtype),
+    }
+
+
+def rglru_axes(_cfg):
+    return {
+        "in_x": ("embed", "mlp"),
+        "in_gate": ("embed", "mlp"),
+        "conv_w": ("conv", "mlp"),
+        "conv_b": ("mlp",),
+        "wa": ("mlp", None),
+        "ba": (None,),
+        "wx": ("mlp", None),
+        "bx": (None,),
+        "lam": (None,),
+        "out": ("mlp", "embed"),
+    }
+
+
+def _causal_conv(x, w, b, prev: Optional[jnp.ndarray] = None):
+    K = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], K - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)
+    out = sum(
+        xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    return out + b[None, None, :], xp[:, -(K - 1):, :]
+
+
+def _gates(params, x, c_constant):
+    """x (B,S,W) fp32 -> (a, gated_in) both (B,S,W) fp32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ params["wa"] + params["ba"])
+    i = jax.nn.sigmoid(xf @ params["wx"] + params["bx"])
+    log_a = -c_constant * jax.nn.softplus(params["lam"]) * r  # (B,S,W), <=0
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) with a = exp(log_a); use expm1 for stability
+    beta = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    return a, beta * (i * xf)
+
+
+def rglru_scan(a, bx, init_h: Optional[jnp.ndarray] = None):
+    """h_t = a_t h_{t-1} + bx_t via associative scan over S. (B,S,W) fp32."""
+    if init_h is not None:
+        # fold the initial state into the first input
+        bx = bx.at[:, 0, :].add(a[:, 0, :] * init_h)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    del aa
+    return hh
+
+
+def rglru_apply(params, x, cfg: ModelConfig,
+                state: Optional[RGLRUState] = None,
+                return_state: bool = False):
+    """x (B,S,D) -> (B,S,D) [, RGLRUState]."""
+    r = cfg.rglru
+    dt = cfg.act_dtype
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", x, params["in_gate"].astype(dt)))
+    xr = jnp.einsum("bsd,dw->bsw", x, params["in_x"].astype(dt))
+    prev = state.conv if state is not None else None
+    xr, conv_tail = _causal_conv(
+        xr, params["conv_w"].astype(dt), params["conv_b"].astype(dt), prev)
+    a, bx = _gates(params, xr, r.c_constant)
+    h0 = state.h if state is not None else None
+    h = rglru_scan(a, bx, h0)
+    y = (h.astype(dt) * gate)
+    out = jnp.einsum("bsw,wd->bsd", y, params["out"].astype(dt))
+    if return_state:
+        return out, RGLRUState(conv=conv_tail, h=h[:, -1, :])
+    return out
+
+
+def rglru_decode_step(params, x, state: RGLRUState, cfg: ModelConfig
+                      ) -> Tuple[jnp.ndarray, RGLRUState]:
+    """x (B,1,D) -> (B,1,D), new state."""
+    r = cfg.rglru
+    dt = cfg.act_dtype
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", x, params["in_gate"].astype(dt)))
+    xr = jnp.einsum("bsd,dw->bsw", x, params["in_x"].astype(dt))
+    xr, conv_tail = _causal_conv(
+        xr, params["conv_w"].astype(dt), params["conv_b"].astype(dt), state.conv)
+    a, bx = _gates(params, xr, r.c_constant)
+    h = a[:, 0, :] * state.h + bx[:, 0, :]
+    y = h[:, None, :].astype(dt) * gate
+    out = jnp.einsum("bsw,wd->bsd", y, params["out"].astype(dt))
+    return out, RGLRUState(conv=conv_tail, h=h)
+
+
+def rglru_init_state(cfg: ModelConfig, batch: int) -> RGLRUState:
+    W = _width(cfg)
+    return RGLRUState(
+        conv=jnp.zeros((batch, cfg.rglru.conv_width - 1, W), cfg.act_dtype),
+        h=jnp.zeros((batch, W), jnp.float32),
+    )

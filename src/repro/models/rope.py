@@ -1,0 +1,75 @@
+"""Rotary position embeddings: standard RoPE and qwen2-vl-style M-RoPE.
+
+M-RoPE (multimodal rotary, arXiv:2409.12191) splits the rotary frequency
+bands into (temporal, height, width) sections; text tokens carry identical
+(t, h, w) positions so M-RoPE degenerates to 1-D RoPE on text.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions: (..., S) int -> cos/sin of shape (..., S, head_dim//2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_angles(positions, head_dim: int, theta: float,
+                 sections: Tuple[int, int, int]):
+    """positions: (3, B, S) int (t, h, w) -> cos/sin (B, S, head_dim//2).
+
+    Section s of the frequency bands takes its rotation angle from
+    positions[s]; sections sum to head_dim//2.
+    """
+    half = head_dim // 2
+    assert sum(sections) == half
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    # component index for every frequency band
+    comp = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections), total_repeat_length=half)
+    pos = positions.astype(jnp.float32)  # (3, B, S)
+    # select the right positional component per band: (B, S, half)
+    pos_bs3 = jnp.moveaxis(pos, 0, -1)  # (B, S, 3)
+    idx = jnp.broadcast_to(comp[None, None, :], pos.shape[1:] + (half,))
+    pos_sel = jnp.take_along_axis(pos_bs3, idx, axis=-1)
+    ang = pos_sel * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, D); cos/sin broadcastable to (B, S, 1, D//2).
+
+    Uses the "rotate-half" convention (llama / qwen): the head dim is split
+    into two halves forming the (real, imag) parts.
+    """
+    dtype = x.dtype
+    half = x.shape[-1] // 2
+    # cos/sin arrive as (B, S, half) -> add head axis
+    c = cos[..., None, :].astype(jnp.float32)
+    s = sin[..., None, :].astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(dtype)
+
+
+def default_positions(batch: int, seq: int, offset=0):
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+    return jnp.broadcast_to(pos, (batch, seq))
+
+
+def make_rope(cfg, positions, mrope_positions: Optional[jnp.ndarray] = None):
+    """Returns (cos, sin) of shape (B, S, head_dim//2) for this config."""
+    if cfg.mrope_sections is not None:
+        if mrope_positions is None:
+            # text-only fallback: all three components equal
+            mrope_positions = jnp.broadcast_to(
+                positions[None], (3,) + positions.shape)
+        return mrope_angles(mrope_positions, cfg.head_dim_, cfg.rope_theta,
+                            cfg.mrope_sections)
+    return rope_angles(positions, cfg.head_dim_, cfg.rope_theta)

@@ -1,0 +1,261 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Chunked SSD algorithm: within-chunk quadratic attention-like term +
+inter-chunk recurrence on (H, P, N) states, both expressed as einsums so
+the TPU MXU does all the work; the inter-chunk scan runs over S/chunk
+steps only.  Decode is the O(1) selective-state update.
+
+Layout follows the reference Mamba-2: a single input projection produces
+[z, x, B, C, dt]; depthwise causal conv over (x, B, C); gated RMSNorm
+before the output projection.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.config import ModelConfig
+from repro.models.layers import rmsnorm
+
+
+class SSMState(NamedTuple):
+    conv: jnp.ndarray  # (B, conv_width-1, conv_dim) rolling conv inputs
+    ssm: jnp.ndarray   # (B, H, P, N) recurrent state
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.headdim
+    conv_dim = d_inner + 2 * s.ngroups * s.d_state
+    return d_inner, nheads, conv_dim
+
+
+def ssd_init(key, cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner, nheads, conv_dim = _dims(cfg)
+    d_in_proj = 2 * d_inner + 2 * s.ngroups * s.d_state + nheads
+    ks = common.split_like(
+        key, ["in_proj", "conv", "dt_bias", "a_log", "d", "norm", "out_proj"])
+    # dt bias: inverse-softplus of dt sampled log-uniform in [dt_min, dt_max]
+    u = jax.random.uniform(ks["dt_bias"], (nheads,), jnp.float32)
+    dt = jnp.exp(u * (math.log(s.dt_max) - math.log(s.dt_min)) + math.log(s.dt_min))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    a = jax.random.uniform(ks["a_log"], (nheads,), jnp.float32,
+                           minval=s.a_init_range[0], maxval=s.a_init_range[1])
+    return {
+        "in_proj": common.dense_init(ks["in_proj"], (cfg.d_model, d_in_proj), cfg.p_dtype),
+        "conv_w": common.dense_init(ks["conv"], (s.conv_width, conv_dim), cfg.p_dtype),
+        "conv_b": jnp.zeros((conv_dim,), cfg.p_dtype),
+        "dt_bias": dt_bias,
+        "a_log": jnp.log(a),
+        "d": jnp.ones((nheads,), jnp.float32),
+        "norm": {"scale": jnp.ones((d_inner,), cfg.p_dtype)},
+        "out_proj": common.dense_init(ks["out_proj"], (d_inner, cfg.d_model), cfg.p_dtype),
+    }
+
+
+def ssd_axes(_cfg):
+    return {
+        "in_proj": ("embed", "mlp"),
+        "conv_w": ("conv", "mlp"),
+        "conv_b": ("mlp",),
+        "dt_bias": ("heads",),
+        "a_log": ("heads",),
+        "d": ("heads",),
+        "norm": {"scale": ("mlp",)},
+        "out_proj": ("mlp", "embed"),
+    }
+
+
+def _split_proj(zxbcdt, cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner, nheads, _ = _dims(cfg)
+    gn = s.ngroups * s.d_state
+    z, x, B, C, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + gn, 2 * d_inner + 2 * gn],
+        axis=-1)
+    return z, x, B, C, dt
+
+
+def _causal_conv(x, w, b, prev: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv. x (B,S,C), w (K,C) -> (B,S,C).
+
+    `prev` (B,K-1,C) holds the tail of the previous segment (decode)."""
+    K = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], K - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)
+    out = sum(
+        xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    return out + b[None, None, :], xp[:, -(K - 1):, :]
+
+
+def _segsum(x):
+    """x (..., L) -> (..., L, L) lower-triangular pairwise cumulative sums."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_scan(x, dt, A, B, C, chunk: int,
+             init_state: Optional[jnp.ndarray] = None):
+    """Chunked SSD.
+
+    x  (b, s, h, p)   inputs per head
+    dt (b, s, h)      positive step sizes
+    A  (h,)           negative decay rates
+    B  (b, s, g, n)   input matrices (g groups broadcast over heads)
+    C  (b, s, g, n)   output matrices
+    Returns y (b, s, h, p) and final state (b, h, p, n).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    L = chunk
+    assert s % L == 0, f"seq {s} % chunk {L}"
+    nc = s // L
+    hpg = h // g
+
+    xc = x.reshape(b, nc, L, h, p)
+    dtc = dt.reshape(b, nc, L, h)
+    Bc = B.reshape(b, nc, L, g, n)
+    Cc = C.reshape(b, nc, L, g, n)
+
+    dA = dtc * A[None, None, None, :]          # (b,c,l,h) negative
+    dA = jnp.moveaxis(dA, -1, 1)               # (b,h,c,l)
+    dA_cs = jnp.cumsum(dA, axis=-1)            # (b,h,c,l)
+
+    # 1. intra-chunk (quadratic) term
+    Ldec = jnp.exp(_segsum(dA))                # (b,h,c,l,l)
+    # scores: C_i . B_j  with decay and dt weighting
+    CB = jnp.einsum("bclgn,bcsgn->bcgls", Cc, Bc)          # (b,c,g,l,s)
+    CB = jnp.repeat(CB, hpg, axis=2)                       # (b,c,h,l,s)
+    att = CB * jnp.moveaxis(Ldec, 1, 2)                    # (b,c,h,l,s)
+    att = att * jnp.moveaxis(dtc, -1, -2)[..., None, :]     # dt_j weighting (b,c,h,1?,s)
+    y_diag = jnp.einsum("bchls,bcshp->bclhp", att.astype(x.dtype), xc)
+
+    # 2. chunk-final states: sum_j exp(dA_cs[-1]-dA_cs[j]) dt_j B_j x_j
+    decay_states = jnp.exp(dA_cs[..., -1:] - dA_cs)        # (b,h,c,l)
+    wts = decay_states * jnp.moveaxis(dtc, -1, 1)          # (b,h,c,l)
+    Brep = jnp.repeat(Bc, hpg, axis=3) if g != h else Bc   # (b,c,l,h,n)
+    xw = (xc * jnp.moveaxis(wts, 1, -1)[..., None]).astype(x.dtype)
+    states = jnp.einsum("bclhn,bclhp->bchpn", Brep.astype(x.dtype), xw)
+
+    # 3. inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(dA_cs[..., -1])                   # (b,h,c)
+
+    def step(carry, inp):
+        st, dec = inp                                       # (b,h,p,n), (b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                   # emit state *entering* the chunk
+
+    init = (init_state if init_state is not None
+            else jnp.zeros((b, h, p, n), jnp.float32))
+    states_c = jnp.moveaxis(states, 1, 0).astype(jnp.float32)  # (c,b,h,p,n)
+    decays_c = jnp.moveaxis(chunk_decay, -1, 0)                # (c,b,h)
+    final, prev_states = jax.lax.scan(step, init, (states_c, decays_c))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)              # (b,c,h,p,n)
+
+    # 4. inter-chunk contribution: C_i exp(dA_cs[i]) S_prev
+    state_decay = jnp.exp(dA_cs)                               # (b,h,c,l)
+    Crep = jnp.repeat(Cc, hpg, axis=3) if g != h else Cc       # (b,c,l,h,n)
+    y_off = jnp.einsum("bclhn,bchpn->bclhp",
+                       Crep.astype(jnp.float32), prev_states)
+    y_off = y_off * jnp.moveaxis(state_decay, 1, -1).reshape(b, nc, L, h)[..., None]
+    y = (y_diag.astype(jnp.float32) + y_off).reshape(b, s, h, p)
+    return y.astype(x.dtype), final
+
+
+def ssd_apply(params, x, cfg: ModelConfig,
+              state: Optional[SSMState] = None,
+              return_state: bool = False):
+    """Full Mamba-2 mixer. x (B,S,D) -> (B,S,D) [, SSMState]."""
+    s = cfg.ssm
+    d_inner, nheads, conv_dim = _dims(cfg)
+    dt_ = cfg.act_dtype
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(dt_))
+    z, xin, B, C, dt = _split_proj(zxbcdt, cfg)
+
+    conv_in = jnp.concatenate([xin, B, C], axis=-1)
+    prev = state.conv if state is not None else None
+    conv_out, conv_tail = _causal_conv(
+        conv_in, params["conv_w"].astype(dt_), params["conv_b"].astype(dt_), prev)
+    conv_out = jax.nn.silu(conv_out)
+    xin, B, C = jnp.split(
+        conv_out, [d_inner, d_inner + s.ngroups * s.d_state], axis=-1)
+
+    bsz, seq = x.shape[0], x.shape[1]
+    xh = xin.reshape(bsz, seq, nheads, s.headdim)
+    Bh = B.reshape(bsz, seq, s.ngroups, s.d_state)
+    Ch = C.reshape(bsz, seq, s.ngroups, s.d_state)
+    dt = jax.nn.softplus(
+        dt.astype(jnp.float32) + params["dt_bias"][None, None, :])
+    A = -jnp.exp(params["a_log"])
+
+    init_ssm = state.ssm if state is not None else None
+    chunk = min(s.chunk, seq)
+    while seq % chunk:  # largest divisor of seq <= configured chunk
+        chunk -= 1
+    y, final = ssd_scan(xh, dt, A, Bh, Ch, chunk, init_ssm)
+    y = y + xh * params["d"][None, None, :, None].astype(dt_)
+    y = y.reshape(bsz, seq, d_inner)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(dt_))
+    if return_state:
+        return out, SSMState(conv=conv_tail, ssm=final)
+    return out
+
+
+def ssd_decode_step(params, x, state: SSMState, cfg: ModelConfig
+                    ) -> Tuple[jnp.ndarray, SSMState]:
+    """O(1) recurrent update. x (B,1,D) -> (B,1,D), new state."""
+    s = cfg.ssm
+    d_inner, nheads, _ = _dims(cfg)
+    dt_ = cfg.act_dtype
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(dt_))
+    z, xin, B, C, dt = _split_proj(zxbcdt, cfg)
+
+    conv_in = jnp.concatenate([xin, B, C], axis=-1)
+    conv_out, conv_tail = _causal_conv(
+        conv_in, params["conv_w"].astype(dt_), params["conv_b"].astype(dt_),
+        state.conv)
+    conv_out = jax.nn.silu(conv_out)
+    xin, B, C = jnp.split(
+        conv_out, [d_inner, d_inner + s.ngroups * s.d_state], axis=-1)
+
+    bsz = x.shape[0]
+    xh = xin.reshape(bsz, nheads, s.headdim)                      # S=1 squeezed
+    Bh = B.reshape(bsz, s.ngroups, s.d_state)
+    Ch = C.reshape(bsz, s.ngroups, s.d_state)
+    dt1 = jax.nn.softplus(
+        dt.astype(jnp.float32)[:, 0, :] + params["dt_bias"][None, :])  # (B,H)
+    A = -jnp.exp(params["a_log"])
+    decay = jnp.exp(dt1 * A[None, :])                              # (B,H)
+
+    hpg = nheads // s.ngroups
+    Bfull = jnp.repeat(Bh, hpg, axis=1)                            # (B,H,N)
+    Cfull = jnp.repeat(Ch, hpg, axis=1)
+    dBx = jnp.einsum("bh,bhn,bhp->bhpn", dt1,
+                     Bfull.astype(jnp.float32), xh.astype(jnp.float32))
+    new_ssm = state.ssm * decay[..., None, None] + dBx
+    y = jnp.einsum("bhpn,bhn->bhp", new_ssm, Cfull.astype(jnp.float32))
+    y = y.astype(dt_) + xh * params["d"][None, :, None].astype(dt_)
+    y = y.reshape(bsz, 1, d_inner)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(dt_))
+    return out, SSMState(conv=conv_tail, ssm=new_ssm)
+
+
+def ssd_init_state(cfg: ModelConfig, batch: int) -> SSMState:
+    s = cfg.ssm
+    d_inner, nheads, conv_dim = _dims(cfg)
+    return SSMState(
+        conv=jnp.zeros((batch, s.conv_width - 1, conv_dim), cfg.act_dtype),
+        ssm=jnp.zeros((batch, nheads, s.headdim, s.d_state), jnp.float32),
+    )

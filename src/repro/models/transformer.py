@@ -1,0 +1,729 @@
+"""Decoder-only LM covering all four assigned families.
+
+Families:
+  dense   — [norm → GQA attn → +res] [norm → SwiGLU → +res]       (llama etc.)
+  moe     — [norm → GQA attn → +res] [norm → MoE → +res]           (dbrx etc.)
+  ssm     — [norm → Mamba-2 mixer → +res]                          (mamba2)
+  hybrid  — Griffin groups (rec, rec, local-attn), MLP every layer (recurrentgemma)
+
+The layer stack is `lax.scan`ned over stacked params (one compiled layer
+body regardless of depth) with a configurable remat policy.  Three entry
+points are exposed per model: ``forward`` (training, full causal),
+``prefill`` (returns logits + decode cache) and ``decode_step``.
+
+Caches are pytrees with a leading `layers` axis so decode also scans.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import common, layers, mlp, moe, rglru, rope, ssd
+from repro.models.config import ModelConfig
+from repro.distributed.sharding import constrain
+
+
+# ==========================================================================
+# Per-family layer blocks
+# ==========================================================================
+def dense_block_init(key, cfg: ModelConfig):
+    ks = common.split_like(key, ["ln1", "attn", "ln2", "mlp"])
+    return {
+        "ln1": layers.rmsnorm_init(ks["ln1"], cfg.d_model, cfg),
+        "attn": attn.attention_init(ks["attn"], cfg),
+        "ln2": layers.rmsnorm_init(ks["ln2"], cfg.d_model, cfg),
+        "mlp": mlp.swiglu_init(ks["mlp"], cfg),
+    }
+
+
+def dense_block_axes(cfg: ModelConfig):
+    return {
+        "ln1": layers.rmsnorm_axes(cfg),
+        "attn": attn.attention_axes(cfg),
+        "ln2": layers.rmsnorm_axes(cfg),
+        "mlp": mlp.swiglu_axes(cfg),
+    }
+
+
+def moe_block_init(key, cfg: ModelConfig):
+    ks = common.split_like(key, ["ln1", "attn", "ln2", "moe"])
+    return {
+        "ln1": layers.rmsnorm_init(ks["ln1"], cfg.d_model, cfg),
+        "attn": attn.attention_init(ks["attn"], cfg),
+        "ln2": layers.rmsnorm_init(ks["ln2"], cfg.d_model, cfg),
+        "moe": moe.moe_init(ks["moe"], cfg),
+    }
+
+
+def moe_block_axes(cfg: ModelConfig):
+    return {
+        "ln1": layers.rmsnorm_axes(cfg),
+        "attn": attn.attention_axes(cfg),
+        "ln2": layers.rmsnorm_axes(cfg),
+        "moe": moe.moe_axes(cfg),
+    }
+
+
+def ssm_block_init(key, cfg: ModelConfig):
+    ks = common.split_like(key, ["ln", "mixer"])
+    return {
+        "ln": layers.rmsnorm_init(ks["ln"], cfg.d_model, cfg),
+        "mixer": ssd.ssd_init(ks["mixer"], cfg),
+    }
+
+
+def ssm_block_axes(cfg: ModelConfig):
+    return {"ln": layers.rmsnorm_axes(cfg), "mixer": ssd.ssd_axes(cfg)}
+
+
+def griffin_layer_init(key, cfg: ModelConfig, kind: str):
+    ks = common.split_like(key, ["ln1", "mix", "ln2", "mlp"])
+    mix = (rglru.rglru_init(ks["mix"], cfg) if kind == "rec"
+           else attn.attention_init(ks["mix"], cfg))
+    return {
+        "ln1": layers.rmsnorm_init(ks["ln1"], cfg.d_model, cfg),
+        "mix": mix,
+        "ln2": layers.rmsnorm_init(ks["ln2"], cfg.d_model, cfg),
+        "mlp": mlp.swiglu_init(ks["mlp"], cfg),
+    }
+
+
+def griffin_layer_axes(cfg: ModelConfig, kind: str):
+    return {
+        "ln1": layers.rmsnorm_axes(cfg),
+        "mix": rglru.rglru_axes(cfg) if kind == "rec" else attn.attention_axes(cfg),
+        "ln2": layers.rmsnorm_axes(cfg),
+        "mlp": mlp.swiglu_axes(cfg),
+    }
+
+
+def griffin_group_init(key, cfg: ModelConfig):
+    """One repeating Griffin group following cfg.rglru.pattern."""
+    pat = cfg.rglru.pattern
+    ks = jax.random.split(key, len(pat))
+    return {f"l{i}_{kind}": griffin_layer_init(ks[i], cfg, kind)
+            for i, kind in enumerate(pat)}
+
+
+def griffin_group_axes(cfg: ModelConfig):
+    pat = cfg.rglru.pattern
+    return {f"l{i}_{kind}": griffin_layer_axes(cfg, kind)
+            for i, kind in enumerate(pat)}
+
+
+# ==========================================================================
+# Remat
+# ==========================================================================
+def _unroll(cfg: ModelConfig):
+    """Unroll factor for layer scans (True = fully unrolled probes)."""
+    return True if cfg.scan_unroll else 1
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots, prevent_cse=False)
+    return jax.checkpoint(fn, prevent_cse=False)  # "full": save nothing
+
+
+# ==========================================================================
+# Model: init
+# ==========================================================================
+def init(key, cfg: ModelConfig):
+    ks = common.split_like(key, ["embed", "layers", "final", "head"])
+    p: Dict[str, Any] = {
+        "embed": layers.embedding_init(ks["embed"], cfg),
+        "final_norm": layers.rmsnorm_init(ks["final"], cfg.d_model, cfg),
+        "lm_head": layers.lm_head_init(ks["head"], cfg),
+    }
+    if cfg.family == "dense":
+        p["layers"] = common.stack_init(dense_block_init, cfg.n_layers)(ks["layers"], cfg)
+    elif cfg.family == "moe":
+        p["layers"] = common.stack_init(moe_block_init, cfg.n_layers)(ks["layers"], cfg)
+    elif cfg.family == "ssm":
+        p["layers"] = common.stack_init(ssm_block_init, cfg.n_layers)(ks["layers"], cfg)
+    elif cfg.family == "hybrid":
+        pat = cfg.rglru.pattern
+        n_groups, n_tail = divmod(cfg.n_layers, len(pat))
+        kg, kt = jax.random.split(ks["layers"])
+        p["groups"] = common.stack_init(griffin_group_init, n_groups)(kg, cfg)
+        if n_tail:
+            p["tail"] = common.stack_init(
+                lambda k, c: griffin_layer_init(k, c, "rec"), n_tail)(kt, cfg)
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+def axes(cfg: ModelConfig):
+    a: Dict[str, Any] = {
+        "embed": layers.embedding_axes(cfg),
+        "final_norm": layers.rmsnorm_axes(cfg),
+        "lm_head": layers.lm_head_axes(cfg),
+    }
+    if cfg.family == "dense":
+        a["layers"] = common.stacked_axes(dense_block_axes(cfg))
+    elif cfg.family == "moe":
+        a["layers"] = common.stacked_axes(moe_block_axes(cfg))
+    elif cfg.family == "ssm":
+        a["layers"] = common.stacked_axes(ssm_block_axes(cfg))
+    elif cfg.family == "hybrid":
+        pat = cfg.rglru.pattern
+        n_groups, n_tail = divmod(cfg.n_layers, len(pat))
+        a["groups"] = common.stacked_axes(griffin_group_axes(cfg))
+        if n_tail:
+            a["tail"] = common.stacked_axes(griffin_layer_axes(cfg, "rec"))
+    return a
+
+
+# ==========================================================================
+# Forward (training / full causal)
+# ==========================================================================
+def _embed_inputs(params, batch, cfg: ModelConfig):
+    """batch: {"tokens": (B,S) | (B,K,S)} or {"embeds": (B,S,D)} (+positions)."""
+    if "embeds" in batch:
+        x = batch["embeds"].astype(cfg.act_dtype)
+        B, S = x.shape[0], x.shape[1]
+    else:
+        tokens = batch["tokens"]
+        B = tokens.shape[0]
+        S = tokens.shape[-1]
+        x = layers.embed(params["embed"], tokens, cfg)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = rope.default_positions(B, S)
+    return x, positions, batch.get("mrope_positions")
+
+
+def forward(params, batch, cfg: ModelConfig):
+    """Full causal forward -> (logits, aux_loss)."""
+    x, positions, mpos = _embed_inputs(params, batch, cfg)
+    x = constrain(x, ("batch", None, None))
+    rope_cs = (rope.make_rope(cfg, positions, mpos)
+               if cfg.family != "ssm" else None)
+
+    if cfg.family in ("dense", "moe"):
+        is_moe = cfg.family == "moe"
+
+        def body(carry, layer_p):
+            h, aux = carry
+            y = layers.rmsnorm(layer_p["ln1"], h, cfg.norm_eps)
+            q, k, v = attn.qkv_project(layer_p["attn"], y, cfg, rope_cs)
+            o = attn.attend(q, k, v, cfg, window=cfg.local_window)
+            h = h + attn.out_project(layer_p["attn"], o, cfg)
+            y = layers.rmsnorm(layer_p["ln2"], h, cfg.norm_eps)
+            if is_moe:
+                f, aux_d = moe.moe_apply(layer_p["moe"], y, cfg)
+                aux = aux + aux_d
+            else:
+                f = mlp.swiglu(layer_p["mlp"], y, cfg)
+            h = constrain(h + f, ("batch", "act_seq", None))
+            return (h, aux), None
+
+        (x, aux), _ = jax.lax.scan(
+            _remat(body, cfg.remat_policy), (x, jnp.float32(0.0)),
+            params["layers"], unroll=_unroll(cfg))
+
+    elif cfg.family == "ssm":
+
+        def body(carry, layer_p):
+            h, aux = carry
+            y = layers.rmsnorm(layer_p["ln"], h, cfg.norm_eps)
+            h = constrain(h + ssd.ssd_apply(layer_p["mixer"], y, cfg),
+                          ("batch", "act_seq", None))
+            return (h, aux), None
+
+        (x, aux), _ = jax.lax.scan(
+            _remat(body, cfg.remat_policy), (x, jnp.float32(0.0)),
+            params["layers"], unroll=_unroll(cfg))
+
+    elif cfg.family == "hybrid":
+        pat = cfg.rglru.pattern
+
+        def layer_apply(layer_p, h, kind):
+            y = layers.rmsnorm(layer_p["ln1"], h, cfg.norm_eps)
+            if kind == "rec":
+                h = h + rglru.rglru_apply(layer_p["mix"], y, cfg)
+            else:
+                q, k, v = attn.qkv_project(layer_p["mix"], y, cfg, rope_cs)
+                o = attn.attend(q, k, v, cfg, window=cfg.local_window)
+                h = h + attn.out_project(layer_p["mix"], o, cfg)
+            y = layers.rmsnorm(layer_p["ln2"], h, cfg.norm_eps)
+            return constrain(h + mlp.swiglu(layer_p["mlp"], y, cfg),
+                             ("batch", "act_seq", None))
+
+        def group_body(carry, group_p):
+            h, aux = carry
+            for i, kind in enumerate(pat):
+                h = layer_apply(group_p[f"l{i}_{kind}"], h, kind)
+            return (h, aux), None
+
+        (x, aux), _ = jax.lax.scan(
+            _remat(group_body, cfg.remat_policy), (x, jnp.float32(0.0)),
+            params["groups"], unroll=_unroll(cfg))
+        if "tail" in params:
+            def tail_body(carry, layer_p):
+                h, aux = carry
+                return (layer_apply(layer_p, h, "rec"), aux), None
+
+            (x, aux), _ = jax.lax.scan(
+                _remat(tail_body, cfg.remat_policy), (x, aux), params["tail"],
+                unroll=_unroll(cfg))
+    else:
+        raise ValueError(cfg.family)
+
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = layers.lm_head(params["lm_head"], params["embed"], x, cfg)
+    return logits, aux
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    """batch needs "labels" (B,S) or (B,K,S); optional "loss_mask"."""
+    logits, aux = forward(params, batch, cfg)
+    ce = layers.lm_loss(logits, batch["labels"], batch.get("loss_mask"),
+                        cfg.z_loss_coef)
+    loss = ce + aux
+    return loss, {"loss": loss, "ce": ce, "aux": aux}
+
+
+# ==========================================================================
+# Caches
+# ==========================================================================
+def _kv_quant(k):
+    """k (..., hd) -> (int8, scale (...,)) per-token-per-head (KIVI-style)."""
+    scale = jnp.max(jnp.abs(k.astype(jnp.float32)), axis=-1) / 127.0 + 1e-8
+    q = jnp.clip(jnp.round(k.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _kv_dequant(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Decode cache pytree; leading `layers`/`groups` axis scans with params."""
+    hd, Hk = cfg.head_dim_, cfg.n_kv_heads
+    dt = cfg.act_dtype
+
+    def kv(n, length):
+        if cfg.kv_cache_dtype == "int8":
+            return {
+                "k": jnp.zeros((n, batch, length, Hk, hd), jnp.int8),
+                "v": jnp.zeros((n, batch, length, Hk, hd), jnp.int8),
+                "k_scale": jnp.zeros((n, batch, length, Hk), jnp.float32),
+                "v_scale": jnp.zeros((n, batch, length, Hk), jnp.float32),
+            }
+        return {
+            "k": jnp.zeros((n, batch, length, Hk, hd), dt),
+            "v": jnp.zeros((n, batch, length, Hk, hd), dt),
+        }
+
+    if cfg.family in ("dense", "moe"):
+        c = kv(cfg.n_layers, max_len)
+    elif cfg.family == "ssm":
+        st = ssd.ssd_init_state(cfg, batch)
+        c = {"conv": jnp.broadcast_to(st.conv, (cfg.n_layers,) + st.conv.shape),
+             "ssm": jnp.broadcast_to(st.ssm, (cfg.n_layers,) + st.ssm.shape)}
+    elif cfg.family == "hybrid":
+        pat = cfg.rglru.pattern
+        n_groups, n_tail = divmod(cfg.n_layers, len(pat))
+        W = cfg.local_window
+        group: Dict[str, Any] = {}
+        for i, kind in enumerate(pat):
+            if kind == "rec":
+                st = rglru.rglru_init_state(cfg, batch)
+                group[f"l{i}_conv"] = jnp.broadcast_to(
+                    st.conv, (n_groups,) + st.conv.shape)
+                group[f"l{i}_h"] = jnp.broadcast_to(
+                    st.h, (n_groups,) + st.h.shape)
+            else:
+                group[f"l{i}_k"] = jnp.zeros((n_groups, batch, W, Hk, hd), dt)
+                group[f"l{i}_v"] = jnp.zeros((n_groups, batch, W, Hk, hd), dt)
+        c = {"groups": group}
+        if n_tail:
+            st = rglru.rglru_init_state(cfg, batch)
+            c["tail"] = {
+                "conv": jnp.broadcast_to(st.conv, (n_tail,) + st.conv.shape),
+                "h": jnp.broadcast_to(st.h, (n_tail,) + st.h.shape),
+            }
+    else:
+        raise ValueError(cfg.family)
+    c["length"] = jnp.zeros((), jnp.int32)
+    return c
+
+
+def cache_axes(cfg: ModelConfig):
+    """Logical axes for the cache pytree (for explicit dry-run shardings)."""
+    kv_ax = ("layers", "batch", None, "kv_heads", "head_dim")
+    if cfg.family in ("dense", "moe"):
+        out = {"k": kv_ax, "v": kv_ax, "length": ()}
+        if cfg.kv_cache_dtype == "int8":
+            out["k_scale"] = ("layers", "batch", None, "kv_heads")
+            out["v_scale"] = ("layers", "batch", None, "kv_heads")
+        return out
+    if cfg.family == "ssm":
+        return {"conv": ("layers", "batch", None, "mlp"),
+                "ssm": ("layers", "batch", "heads", None, None),
+                "length": ()}
+    pat = cfg.rglru.pattern
+    n_groups, n_tail = divmod(cfg.n_layers, len(pat))
+    group = {}
+    for i, kind in enumerate(pat):
+        if kind == "rec":
+            group[f"l{i}_conv"] = ("layers", "batch", None, "mlp")
+            group[f"l{i}_h"] = ("layers", "batch", "mlp")
+        else:
+            group[f"l{i}_k"] = kv_ax
+            group[f"l{i}_v"] = kv_ax
+    out = {"groups": group, "length": ()}
+    if n_tail:
+        out["tail"] = {"conv": ("layers", "batch", None, "mlp"),
+                       "h": ("layers", "batch", "mlp")}
+    return out
+
+
+# ==========================================================================
+# Prefill
+# ==========================================================================
+def prefill(params, batch, cfg: ModelConfig, max_len: Optional[int] = None):
+    """Process a full prompt; returns (last-position logits, cache).
+
+    max_len: cache capacity (>= prompt length); defaults to prompt length.
+    """
+    x, positions, mpos = _embed_inputs(params, batch, cfg)
+    x = constrain(x, ("batch", None, None))
+    B, S = x.shape[0], x.shape[1]
+    max_len = max_len or S
+    rope_cs = (rope.make_rope(cfg, positions, mpos)
+               if cfg.family != "ssm" else None)
+
+    def pad_kv(k):  # (B,S,Hk,hd) -> (B,max_len,Hk,hd)
+        if max_len == S:
+            return k
+        return jnp.pad(k, ((0, 0), (0, max_len - S), (0, 0), (0, 0)))
+
+    def pad_kv_scale(sc):  # (B,S,Hk) -> (B,max_len,Hk)
+        if max_len == S:
+            return sc
+        return jnp.pad(sc, ((0, 0), (0, max_len - S), (0, 0)))
+
+    if cfg.family in ("dense", "moe"):
+        is_moe = cfg.family == "moe"
+
+        def body(h, layer_p):
+            y = layers.rmsnorm(layer_p["ln1"], h, cfg.norm_eps)
+            q, k, v = attn.qkv_project(layer_p["attn"], y, cfg, rope_cs)
+            o = attn.attend(q, k, v, cfg, window=cfg.local_window)
+            h = h + attn.out_project(layer_p["attn"], o, cfg)
+            y = layers.rmsnorm(layer_p["ln2"], h, cfg.norm_eps)
+            f = (moe.moe_apply(layer_p["moe"], y, cfg)[0] if is_moe
+                 else mlp.swiglu(layer_p["mlp"], y, cfg))
+            h = constrain(h + f, ("batch", "act_seq", None))
+            if cfg.kv_cache_dtype == "int8":
+                k8, ks_ = _kv_quant(k)
+                v8, vs_ = _kv_quant(v)
+                return h, {"k": pad_kv(k8), "v": pad_kv(v8),
+                           "k_scale": pad_kv_scale(ks_),
+                           "v_scale": pad_kv_scale(vs_)}
+            return h, {"k": pad_kv(k), "v": pad_kv(v)}
+
+        x, cache = jax.lax.scan(body, x, params["layers"],
+                                unroll=_unroll(cfg))
+
+    elif cfg.family == "ssm":
+
+        def body(h, layer_p):
+            y = layers.rmsnorm(layer_p["ln"], h, cfg.norm_eps)
+            out, st = ssd.ssd_apply(layer_p["mixer"], y, cfg, return_state=True)
+            h = constrain(h + out, ("batch", "act_seq", None))
+            return h, {"conv": st.conv, "ssm": st.ssm}
+
+        x, cache = jax.lax.scan(body, x, params["layers"],
+                                unroll=_unroll(cfg))
+
+    elif cfg.family == "hybrid":
+        pat = cfg.rglru.pattern
+        W = cfg.local_window
+
+        def ring_from_prefill(k):  # (B,S,Hk,hd) -> ring (B,W,Hk,hd)
+            if S < W:
+                pad = jnp.zeros((B, W - S, Hk_, hd_), k.dtype)
+                return jnp.concatenate([k, pad], axis=1)
+            return jnp.roll(k[:, -W:], shift=S % W, axis=1)
+
+        Hk_, hd_ = cfg.n_kv_heads, cfg.head_dim_
+
+        def layer_apply(layer_p, h, kind):
+            y = layers.rmsnorm(layer_p["ln1"], h, cfg.norm_eps)
+            if kind == "rec":
+                out, st = rglru.rglru_apply(layer_p["mix"], y, cfg,
+                                            return_state=True)
+                h = h + out
+                entry = {"conv": st.conv, "h": st.h}
+            else:
+                q, k, v = attn.qkv_project(layer_p["mix"], y, cfg, rope_cs)
+                o = attn.attend(q, k, v, cfg, window=W)
+                h = h + attn.out_project(layer_p["mix"], o, cfg)
+                entry = {"k": ring_from_prefill(k), "v": ring_from_prefill(v)}
+            y = layers.rmsnorm(layer_p["ln2"], h, cfg.norm_eps)
+            h = constrain(h + mlp.swiglu(layer_p["mlp"], y, cfg),
+                          ("batch", "act_seq", None))
+            return h, entry
+
+        def group_body(h, group_p):
+            entries = {}
+            for i, kind in enumerate(pat):
+                h, e = layer_apply(group_p[f"l{i}_{kind}"], h, kind)
+                for kk, vv in e.items():
+                    entries[f"l{i}_{kk}"] = vv
+            return h, entries
+
+        x, groups_cache = jax.lax.scan(group_body, x, params["groups"],
+                                       unroll=_unroll(cfg))
+        cache = {"groups": groups_cache}
+        if "tail" in params:
+            def tail_body(h, layer_p):
+                h, e = layer_apply(layer_p, h, "rec")
+                return h, e
+
+            x, tail_cache = jax.lax.scan(tail_body, x, params["tail"],
+                                         unroll=_unroll(cfg))
+            cache["tail"] = tail_cache
+    else:
+        raise ValueError(cfg.family)
+
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    last = x[:, -1:, :]
+    logits = layers.lm_head(params["lm_head"], params["embed"], last, cfg)
+    cache["length"] = jnp.asarray(S, jnp.int32)
+    return logits, cache
+
+
+# ==========================================================================
+# Prefill extension (chunked prefill / streaming context growth)
+# ==========================================================================
+def prefill_extend(params, cache, batch, cfg: ModelConfig):
+    """Append a chunk of S new positions to an existing cache.
+
+    This is Sarathi-style chunked prefill and also how Artic video sessions
+    grow: each encoded frame's patch embeddings extend the MLLM context.
+    Requires a scalar cache["length"] (lock-step session batch).
+    Returns (logits for the chunk (B,S,V), new cache).
+    """
+    x, _, mpos = _embed_inputs(params, batch, cfg)
+    x = constrain(x, ("batch", None, None))
+    B, S = x.shape[0], x.shape[1]
+    start = cache["length"]
+    positions = (jnp.arange(S, dtype=jnp.int32)[None, :] + start)
+    positions = jnp.broadcast_to(positions, (B, S))
+    rope_cs = (rope.make_rope(cfg, positions, mpos)
+               if cfg.family != "ssm" else None)
+
+    if cfg.family in ("dense", "moe"):
+        is_moe = cfg.family == "moe"
+
+        def body(h, inp):
+            layer_p, kc, vc = inp
+            y = layers.rmsnorm(layer_p["ln1"], h, cfg.norm_eps)
+            q, k, v = attn.qkv_project(layer_p["attn"], y, cfg, rope_cs)
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, k, start, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, v, start, axis=1)
+            # mask kj <= qi (absolute) covers both history and the chunk
+            o = attn.full_attention(q, kc, vc, cfg, q_offset=start,
+                                    window=cfg.local_window)
+            h = h + attn.out_project(layer_p["attn"], o, cfg)
+            y = layers.rmsnorm(layer_p["ln2"], h, cfg.norm_eps)
+            f = (moe.moe_apply(layer_p["moe"], y, cfg)[0] if is_moe
+                 else mlp.swiglu(layer_p["mlp"], y, cfg))
+            return h + f, {"k": kc, "v": vc}
+
+        x, new_kv = jax.lax.scan(body, x,
+                                 (params["layers"], cache["k"], cache["v"]),
+                                 unroll=_unroll(cfg))
+        new_cache = {"k": new_kv["k"], "v": new_kv["v"]}
+
+    elif cfg.family == "ssm":
+
+        def body(h, inp):
+            layer_p, conv, ssm_st = inp
+            y = layers.rmsnorm(layer_p["ln"], h, cfg.norm_eps)
+            out, st = ssd.ssd_apply(layer_p["mixer"], y, cfg,
+                                    state=ssd.SSMState(conv=conv, ssm=ssm_st),
+                                    return_state=True)
+            return h + out, {"conv": st.conv, "ssm": st.ssm}
+
+        x, new_c = jax.lax.scan(
+            body, x, (params["layers"], cache["conv"], cache["ssm"]),
+            unroll=_unroll(cfg))
+        new_cache = {"conv": new_c["conv"], "ssm": new_c["ssm"]}
+
+    else:
+        raise NotImplementedError(
+            f"prefill_extend for family {cfg.family!r}: hybrid sessions "
+            "extend via repeated decode_step")
+
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = layers.lm_head(params["lm_head"], params["embed"], x, cfg)
+    new_cache["length"] = start + S
+    return logits, new_cache
+
+
+# ==========================================================================
+# Decode step
+# ==========================================================================
+def decode_step(params, cache, batch, cfg: ModelConfig):
+    """One decode step. batch: {"tokens": (B,1) or (B,K,1), ...}.
+
+    cache["length"] may be a scalar (lock-step batch: the dry-run shapes)
+    or an (B,) vector (continuous batching: per-slot sequence lengths).
+    Returns (logits (B,1,V) | (B,K,1,V), new cache).
+    """
+    x, _, mpos = _embed_inputs(params, batch, cfg)
+    x = constrain(x, ("batch", None, None))
+    B = x.shape[0]
+    pos = cache["length"]
+    vec = pos.ndim == 1  # per-slot lengths
+    positions = (pos[:, None] if vec
+                 else jnp.broadcast_to(pos[None, None], (B, 1))).astype(jnp.int32)
+
+    def kv_update(kc, k, idx):
+        """Insert k (B,1,Hk,hd) at per-batch or scalar position `idx`."""
+        if vec:
+            return kc.at[jnp.arange(B), idx].set(k[:, 0])
+        return jax.lax.dynamic_update_slice_in_dim(kc, k, idx, axis=1)
+    rope_cs = (rope.make_rope(cfg, positions, mpos)
+               if cfg.family != "ssm" else None)
+
+    if cfg.family in ("dense", "moe"):
+        is_moe = cfg.family == "moe"
+        max_len = cache["k"].shape[2]
+        int8_kv = cfg.kv_cache_dtype == "int8"
+
+        def scale_update(sc, s_new, idx):
+            # s_new (B,1,Hk) into sc (B,Smax,Hk)
+            if vec:
+                return sc.at[jnp.arange(B), idx].set(s_new[:, 0])
+            return jax.lax.dynamic_update_slice_in_dim(sc, s_new, idx, axis=1)
+
+        def body(h, inp):
+            if int8_kv:
+                layer_p, kc, vc, ksc, vsc = inp
+            else:
+                layer_p, kc, vc = inp
+            y = layers.rmsnorm(layer_p["ln1"], h, cfg.norm_eps)
+            q, k, v = attn.qkv_project(layer_p["attn"], y, cfg, rope_cs)
+            if int8_kv:
+                k8, ks_ = _kv_quant(k)
+                v8, vs_ = _kv_quant(v)
+                kc = kv_update(kc, k8, pos)
+                vc = kv_update(vc, v8, pos)
+                ksc = scale_update(ksc, ks_, pos)
+                vsc = scale_update(vsc, vs_, pos)
+                kf = _kv_dequant(kc, ksc, q.dtype)
+                vf = _kv_dequant(vc, vsc, q.dtype)
+            else:
+                kc = kv_update(kc, k, pos)
+                vc = kv_update(vc, v, pos)
+                kf, vf = kc, vc
+            o = attn.decode_attention(q, kf, vf, pos + 1, cfg)
+            h = h + attn.out_project(layer_p["attn"], o, cfg)
+            y = layers.rmsnorm(layer_p["ln2"], h, cfg.norm_eps)
+            f = (moe.moe_apply(layer_p["moe"], y, cfg)[0] if is_moe
+                 else mlp.swiglu(layer_p["mlp"], y, cfg))
+            if int8_kv:
+                return h + f, {"k": kc, "v": vc, "k_scale": ksc, "v_scale": vsc}
+            return h + f, {"k": kc, "v": vc}
+
+        if int8_kv:
+            x, new_kv = jax.lax.scan(
+                body, x, (params["layers"], cache["k"], cache["v"],
+                          cache["k_scale"], cache["v_scale"]),
+                unroll=_unroll(cfg))
+            new_cache = {"k": new_kv["k"], "v": new_kv["v"],
+                         "k_scale": new_kv["k_scale"],
+                         "v_scale": new_kv["v_scale"]}
+        else:
+            x, new_kv = jax.lax.scan(
+                body, x, (params["layers"], cache["k"], cache["v"]),
+                unroll=_unroll(cfg))
+            new_cache = {"k": new_kv["k"], "v": new_kv["v"]}
+
+    elif cfg.family == "ssm":
+
+        def body(h, inp):
+            layer_p, conv, ssm_st = inp
+            y = layers.rmsnorm(layer_p["ln"], h, cfg.norm_eps)
+            out, st = ssd.ssd_decode_step(
+                layer_p["mixer"], y, ssd.SSMState(conv=conv, ssm=ssm_st), cfg)
+            return h + out, {"conv": st.conv, "ssm": st.ssm}
+
+        x, new_c = jax.lax.scan(
+            body, x, (params["layers"], cache["conv"], cache["ssm"]),
+            unroll=_unroll(cfg))
+        new_cache = {"conv": new_c["conv"], "ssm": new_c["ssm"]}
+
+    elif cfg.family == "hybrid":
+        pat = cfg.rglru.pattern
+        W = cfg.local_window
+        slot = jnp.mod(pos, W)
+
+        def layer_apply(layer_p, h, kind, entry):
+            y = layers.rmsnorm(layer_p["ln1"], h, cfg.norm_eps)
+            if kind == "rec":
+                out, st = rglru.rglru_decode_step(
+                    layer_p["mix"], y,
+                    rglru.RGLRUState(conv=entry["conv"], h=entry["h"]), cfg)
+                h = h + out
+                new_entry = {"conv": st.conv, "h": st.h}
+            else:
+                q, k, v = attn.qkv_project(layer_p["mix"], y, cfg, rope_cs)
+                kc = kv_update(entry["k"], k, slot)
+                vc = kv_update(entry["v"], v, slot)
+                o = attn.decode_attention(q, kc, vc, jnp.minimum(pos + 1, W), cfg)
+                h = h + attn.out_project(layer_p["mix"], o, cfg)
+                new_entry = {"k": kc, "v": vc}
+            y = layers.rmsnorm(layer_p["ln2"], h, cfg.norm_eps)
+            return h + mlp.swiglu(layer_p["mlp"], y, cfg), new_entry
+
+        def group_body(h, inp):
+            group_p, group_c = inp
+            new_entries = {}
+            for i, kind in enumerate(pat):
+                keys = (("conv", "h") if kind == "rec" else ("k", "v"))
+                entry = {kk: group_c[f"l{i}_{kk}"] for kk in keys}
+                h, ne = layer_apply(group_p[f"l{i}_{kind}"], h, kind, entry)
+                for kk, vv in ne.items():
+                    new_entries[f"l{i}_{kk}"] = vv
+            return h, new_entries
+
+        x, new_groups = jax.lax.scan(
+            group_body, x, (params["groups"], cache["groups"]),
+            unroll=_unroll(cfg))
+        new_cache = {"groups": new_groups}
+        if "tail" in params:
+            def tail_body(h, inp):
+                layer_p, conv, hh = inp
+                h, ne = layer_apply(layer_p, h, "rec",
+                                    {"conv": conv, "h": hh})
+                return h, ne
+
+            x, new_tail = jax.lax.scan(
+                tail_body, x,
+                (params["tail"], cache["tail"]["conv"], cache["tail"]["h"]),
+                unroll=_unroll(cfg))
+            new_cache["tail"] = new_tail
+    else:
+        raise ValueError(cfg.family)
+
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = layers.lm_head(params["lm_head"], params["embed"], x, cfg)
+    new_cache["length"] = pos + 1
+    return logits, new_cache

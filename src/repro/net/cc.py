@@ -1,0 +1,105 @@
+"""Congestion control: GCC (delay-gradient) and BBR (bw-probing) baselines.
+
+Faithful-in-spirit reimplementations of the two CC algorithms the paper
+tests under (Carlucci et al. 2016; Cardwell et al. 2017), operating on the
+per-frame ack feedback of repro.net.channel.  Both expose
+``estimate(ack) -> B_hat`` — the bandwidth estimate ReCapABR caps (Eq. 2).
+
+GCC: arrival-delay-gradient overuse detector with multiplicative increase
+(~5%/update when underusing) and beta=0.85 decrease on overuse — this is
+the adaptation lag that causes the Fig. 2 latency spike.
+
+BBR: windowed-max delivery rate x pacing-gain cycle (probe up 1.25, drain
+0.75, cruise 1.0 x6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import numpy as np
+
+
+class CongestionControl:
+    name = "base"
+
+    def estimate(self, ack: Dict) -> float:  # bits/s
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class GCC(CongestionControl):
+    init_rate: float = 1e6
+    beta: float = 0.85
+    eta: float = 1.05
+    overuse_thresh: float = 0.010   # seconds of queuing delay growth
+    name: str = "gcc"
+
+    def __post_init__(self):
+        self.rate = self.init_rate
+        self._prev_delay = None
+        self._state = "increase"
+        self._capacity = self.init_rate  # believed link capacity
+
+    def estimate(self, ack: Dict) -> float:
+        delay = ack["avg_latency"] - ack["min_latency"]  # queuing component
+        grad = 0.0 if self._prev_delay is None else delay - self._prev_delay
+        self._prev_delay = delay
+
+        if grad > self.overuse_thresh or ack["loss"] > 0.1 or delay > 0.3:
+            self._state = "decrease"
+        elif grad < -self.overuse_thresh / 2:
+            self._state = "hold"
+        else:
+            self._state = "increase"
+
+        measured = max(ack["delivery_rate"], 1e4)
+        app_limited = ack.get("app_limited", 0.0) > 0.5
+        if not app_limited:
+            # only backlogged samples measure the link
+            self._capacity = 0.7 * self._capacity + 0.3 * measured
+        if self._state == "decrease":
+            # an app-limited sample reflects the offered load, not the
+            # link: never slash below the last believed capacity for it
+            self.rate = (min(self.rate, 1.2 * self._capacity) if app_limited
+                         else self.beta * measured)
+        elif self._state == "increase":
+            # probe up; when app-limited the measured rate is meaningless,
+            # bound by believed capacity + probing margin instead
+            cap = (2.0 * self._capacity + 1e5 if app_limited
+                   else 1.5 * measured + 1e5)
+            self.rate = min(self.rate * self.eta, cap)
+        # hold: keep rate
+        self.rate = float(np.clip(self.rate, 5e4, 2e7))
+        return self.rate
+
+
+@dataclasses.dataclass
+class BBR(CongestionControl):
+    init_rate: float = 1e6
+    window: int = 10
+    name: str = "bbr"
+    GAIN_CYCLE = (1.25, 0.75, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0)
+
+    def __post_init__(self):
+        self._btlbw_samples = [self.init_rate]
+        self._phase = 0
+
+    def estimate(self, ack: Dict) -> float:
+        measured = max(ack["delivery_rate"], 1e4)
+        if ack.get("app_limited", 0.0) > 0.5:
+            # BBR rate sampling: app-limited samples may only RAISE btlbw
+            measured = max(measured, max(self._btlbw_samples))
+        self._btlbw_samples.append(measured)
+        self._btlbw_samples = self._btlbw_samples[-self.window:]
+        btlbw = max(self._btlbw_samples)
+        gain = self.GAIN_CYCLE[self._phase % len(self.GAIN_CYCLE)]
+        self._phase += 1
+        # back off hard on standing queues (ProbeRTT-ish behaviour)
+        if ack["avg_latency"] - ack["min_latency"] > 0.25:
+            gain = min(gain, 0.75)
+        return float(np.clip(btlbw * gain, 5e4, 2e7))
+
+
+def make_cc(kind: str, **kw) -> CongestionControl:
+    return {"gcc": GCC, "bbr": BBR}[kind](**kw)

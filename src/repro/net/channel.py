@@ -1,0 +1,129 @@
+"""Trace-driven uplink channel with a drop-tail queue (Mahimahi-style).
+
+Frames are packetized (1500 B MTU), enqueued at send time and drained at
+the trace bandwidth; queue capacity is 60 packets with drop-tail (§7.1).
+Frame latency = last-surviving-packet departure - frame send time, which
+matches the paper's "client encoder -> MLLM decoder" frame-latency metric.
+Dropped packets shrink the frame's delivered bits (the receiver decodes
+at a degraded effective rate) — that is how low-bandwidth accuracy damage
+manifests in the end-to-end loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, NamedTuple
+
+import numpy as np
+
+from repro.net.traces import Trace
+
+MTU_BITS = 1500 * 8
+QUEUE_PACKETS = 60
+
+
+class FrameReport(NamedTuple):
+    send_time: float
+    latency: float          # seconds until last surviving packet delivered
+    bits_sent: int
+    bits_delivered: int
+    dropped: bool           # any packet dropped
+    queue_delay: float      # backlog delay seen on arrival (seconds)
+
+
+@dataclasses.dataclass
+class Channel:
+    trace: Trace
+    queue_packets: int = QUEUE_PACKETS
+
+    def __post_init__(self):
+        self.now = 0.0
+        self._queue_bits = 0.0  # backlog (bits)
+        self._queue_pkts = 0
+        self.reports: List[FrameReport] = []
+
+    # ------------------------------------------------------------------
+    def _drain(self, until: float):
+        """Advance time, servicing the backlog at the trace bandwidth."""
+        t = self.now
+        dt = self.trace.dt
+        while t < until:
+            step_end = (np.floor(t / dt + 1e-9) + 1) * dt
+            if step_end <= t + 1e-12:  # float-boundary guard
+                step_end = t + dt
+            step_end = min(until, step_end)
+            budget = self.trace.at(t) * (step_end - t)
+            consumed = min(budget, self._queue_bits)
+            self._queue_bits -= consumed
+            t = step_end
+        self._queue_pkts = int(np.ceil(self._queue_bits / MTU_BITS))
+        self.now = until
+
+    def _time_to_send(self, t: float, bits: float) -> float:
+        """Seconds from t until `bits` of backlog fully depart."""
+        dt = self.trace.dt
+        tt, remaining = t, bits
+        for _ in range(int(300.0 / dt)):
+            bw = max(self.trace.at(tt), 1e3)
+            step_end = (np.floor(tt / dt + 1e-9) + 1) * dt
+            if step_end <= tt + 1e-12:  # float-boundary guard
+                step_end = tt + dt
+            budget = bw * (step_end - tt)
+            if budget >= remaining:
+                return tt + remaining / bw - t
+            remaining -= budget
+            tt = step_end
+        return tt - t  # capped at 300 s
+
+    def send_frame(self, t: float, bits: float) -> FrameReport:
+        """Send a frame of `bits` at time t (sends must be time-ordered)."""
+        t = max(t, self.now)
+        self._drain(t)
+        bw_now = max(self.trace.at(t), 1e3)
+        queue_delay = self._queue_bits / bw_now
+
+        n_pkts = max(int(np.ceil(bits / MTU_BITS)), 1)
+        free = max(self.queue_packets - self._queue_pkts, 0)
+        admitted_pkts = min(n_pkts, free)
+        admitted_bits = min(bits, admitted_pkts * MTU_BITS)
+        dropped = admitted_pkts < n_pkts
+
+        backlog_incl = self._queue_bits + admitted_bits
+        latency = (self._time_to_send(t, backlog_incl)
+                   if admitted_pkts else float("inf"))
+        self._queue_bits = backlog_incl
+        self._queue_pkts += admitted_pkts
+
+        rep = FrameReport(send_time=t, latency=latency,
+                          bits_sent=int(bits),
+                          bits_delivered=int(admitted_bits),
+                          dropped=dropped, queue_delay=queue_delay)
+        self.reports.append(rep)
+        return rep
+
+    # ------------------------------------------------------------------
+    @property
+    def queue_bits(self) -> float:
+        return self._queue_bits
+
+    def ack_stats(self, window: int = 20):
+        """Receiver-side feedback for CC: recent delivery rate + delays.
+
+        `app_limited`: the sender offered less than the link could carry
+        (queue kept draining empty) — rate samples taken then must not
+        LOWER the CC's bandwidth estimate (BBR's app-limited marking;
+        essential once ReCapABR deliberately under-sends)."""
+        recent = self.reports[-window:]
+        if len(recent) < 2:
+            return {"delivery_rate": 0.0, "avg_latency": 0.05,
+                    "min_latency": 0.05, "loss": 0.0, "app_limited": 1.0}
+        span = max(recent[-1].send_time - recent[0].send_time, 1e-6)
+        bits = sum(r.bits_delivered for r in recent[:-1])
+        finite = [r.latency for r in recent if np.isfinite(r.latency)]
+        app_limited = float(np.mean([r.queue_delay < 0.02 for r in recent]))
+        return {
+            "delivery_rate": bits / span,
+            "avg_latency": float(np.mean(finite)) if finite else 1.0,
+            "min_latency": float(np.min(finite)) if finite else 0.0,
+            "loss": float(np.mean([r.dropped for r in recent])),
+            "app_limited": app_limited,
+        }

@@ -1,0 +1,112 @@
+"""5G uplink bandwidth traces: the measurement-study scenarios of §2.3.
+
+Trace model calibrated to the paper's observations: static links saturate
+~5 Mbps; mobility (walking/driving) switches among industry bitrate levels
+at a configurable fluctuation frequency; the elevator scenario collapses
+5 -> 1.23 Mbps within ~1.5 s (Fig. 2).  All traces are seeded arrays of
+bandwidth (bits/s) sampled at `dt` seconds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+# Agora VideoEncoderConfiguration industry bitrate levels (Kbps) [23]
+INDUSTRY_LEVELS_KBPS = [5000, 3000, 1710, 1130, 710, 400, 290]
+
+
+@dataclasses.dataclass
+class Trace:
+    bw: np.ndarray    # bits/s per tick
+    dt: float         # seconds per tick
+    name: str = ""
+
+    @property
+    def duration(self) -> float:
+        return len(self.bw) * self.dt
+
+    def at(self, t: float) -> float:
+        i = int(t / self.dt) % len(self.bw)
+        return float(self.bw[i])
+
+    def looped(self, duration: float) -> "Trace":
+        n = int(np.ceil(duration / self.dt))
+        reps = int(np.ceil(n / len(self.bw)))
+        return Trace(np.tile(self.bw, reps)[:n], self.dt, self.name)
+
+
+def static_trace(duration: float = 60.0, dt: float = 0.05,
+                 mbps: float = 5.0, jitter: float = 0.03,
+                 seed: int = 0) -> Trace:
+    rng = np.random.default_rng(seed)
+    n = int(duration / dt)
+    bw = mbps * 1e6 * (1.0 + jitter * rng.standard_normal(n)).clip(0.5, 1.5)
+    return Trace(bw, dt, "static")
+
+
+def elevator_trace(duration: float = 60.0, dt: float = 0.05,
+                   event_at: float = 26.25, drop_mbps: float = 1.23,
+                   drop_len: float = 12.0, ramp: float = 1.5,
+                   seed: int = 0) -> Trace:
+    """§2.3: 5 Mbps collapses to 1.23 Mbps within 1.5 s entering the
+    elevator (frame 525 at 20 fps = 26.25 s)."""
+    t = static_trace(duration, dt, 5.0, seed=seed)
+    n = len(t.bw)
+    for i in range(n):
+        ti = i * dt
+        if event_at <= ti < event_at + drop_len:
+            frac = min((ti - event_at) / ramp, 1.0)
+            t.bw[i] = t.bw[i] * (1 - frac) + drop_mbps * 1e6 * frac
+        elif event_at + drop_len <= ti < event_at + drop_len + ramp:
+            frac = (ti - event_at - drop_len) / ramp
+            t.bw[i] = drop_mbps * 1e6 * (1 - frac) + t.bw[i] * frac
+    t.name = "elevator"
+    return t
+
+
+def fluctuating_trace(duration: float = 60.0, dt: float = 0.05,
+                      switches_per_min: float = 4.0,
+                      levels_kbps: Optional[List[float]] = None,
+                      seed: int = 0) -> Trace:
+    """§7.2: random switching among industry levels at a given frequency."""
+    rng = np.random.default_rng(seed)
+    levels = np.asarray(levels_kbps or INDUSTRY_LEVELS_KBPS, np.float64) * 1e3
+    n = int(duration / dt)
+    bw = np.empty(n)
+    cur = levels[0]
+    p_switch = switches_per_min / 60.0 * dt
+    for i in range(n):
+        if rng.random() < p_switch:
+            cur = float(rng.choice(levels))
+        bw[i] = cur * (1.0 + 0.02 * rng.standard_normal())
+    return Trace(bw.clip(1e4, None), dt, f"fluct{switches_per_min}")
+
+
+def mobility_trace(kind: str = "walking", duration: float = 120.0,
+                   dt: float = 0.05, seed: int = 0) -> Trace:
+    """Walking/driving 5G uplink (Ghoshal et al. [37] style): log-normal
+    fading around a mobility-dependent mean with occasional outages."""
+    rng = np.random.default_rng(seed)
+    n = int(duration / dt)
+    mean_mbps, vol, outage_p = {
+        "walking": (3.5, 0.25, 0.002),
+        "driving": (2.5, 0.45, 0.006),
+    }[kind]
+    # AR(1) log-bandwidth
+    x = np.empty(n)
+    x[0] = 0.0
+    rho = 0.995
+    for i in range(1, n):
+        x[i] = rho * x[i - 1] + np.sqrt(1 - rho ** 2) * rng.standard_normal() * vol * 3
+    bw = mean_mbps * 1e6 * np.exp(x - vol ** 2)
+    # outages: short collapses to ~200 kbps
+    i = 0
+    while i < n:
+        if rng.random() < outage_p:
+            L = int(rng.uniform(0.5, 3.0) / dt)
+            bw[i:i + L] = 2e5 * (1 + 0.2 * rng.standard_normal(min(L, n - i)))
+            i += L
+        i += 1
+    return Trace(bw.clip(5e4, None), dt, kind)

@@ -1,0 +1,159 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (TPU v5e constants):
+
+    compute    = HLO_FLOPs_global / (chips * 197e12)
+    memory     = HLO_bytes_global / (chips * 819e9)
+    collective = collective_bytes_global / (chips * 50e9)
+
+`cost_analysis()` yields per-device FLOPs/bytes of the SPMD module ->
+multiply by chips for the global figures.  Collective bytes are not in
+cost_analysis: we parse the post-SPMD HLO text and sum operand sizes of
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute
+(per-device, x chips for global — so the term reduces to
+per_device_collective_bytes / 50 GB/s, i.e. every chip pushes its shard
+through its ICI links).
+
+MODEL_FLOPS uses the standard 6*N*D (train) / 2*N*D (inference) counting
+with N = active parameter count; HLO/MODEL ratio flags remat and
+redundant compute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Iterable, Optional, Tuple
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+    "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+|pred)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes of every collective op in (post-SPMD) HLO text.
+
+    Operand shapes print inline in HLO: `all-reduce(f32[8,128] %x)`; we sum
+    every shape appearing in the operand list.  `*-start/-done` async pairs
+    are counted once (on the -start op).  Returns bytes per collective kind
+    (per-device).
+    """
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*\S+\s+([\w\-]+)\(", ls)
+        if not m:
+            continue
+        op = m.group(1)
+        base = op.replace("-start", "")
+        if base not in _COLLECTIVES or op.endswith("-done"):
+            continue
+        # operand segment: inside the call parens
+        try:
+            args = ls.split("(", 2)[2] if "= (" in ls.split(op)[0] else \
+                ls[ls.index(op) + len(op):]
+        except Exception:
+            args = ls
+        shapes = _SHAPE_RE.findall(args)
+        nbytes = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        out[base] += nbytes
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_global: float
+    hbm_bytes_global: float
+    collective_bytes_per_device: float
+    model_flops: float
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_global / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes_global / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_device / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Lower-bound step time: max of the three terms (perfect overlap)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / max(self.flops_global, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """MODEL_FLOPS-based MFU bound at the dominant-term step time."""
+        return (self.model_flops / max(self.step_time, 1e-12)
+                / (self.chips * PEAK_FLOPS))
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_global": self.flops_global,
+            "hbm_bytes_global": self.hbm_bytes_global,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "step_time_lb_s": self.step_time,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops(cfg, shape_kind: str, tokens: int, n_params: int,
+                n_active: Optional[int] = None) -> float:
+    """6ND for train, 2ND for inference; N = active params for MoE."""
+    n = n_active if n_active is not None else n_params
+    factor = 6.0 if shape_kind == "train" else 2.0
+    return factor * n * tokens
+
+
+def active_params(cfg, n_params_total: int, n_params_experts: int) -> int:
+    """MoE: total minus inactive expert weight share."""
+    if cfg.moe is None:
+        return n_params_total
+    frac = cfg.moe.top_k / cfg.moe.num_experts
+    return int(n_params_total - n_params_experts * (1.0 - frac))

@@ -1,0 +1,98 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the JSON
+artifacts in experiments/dryrun/."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load_records(dirname: str) -> List[Dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def _gb(x):
+    return "-" if x is None else f"{x / 2**30:.2f}"
+
+
+def _fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def dryrun_table(recs: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | chips | compile | args GB/dev | temp GB/dev "
+        "| collectives (count) | coll GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        mem = r["memory_analysis"]
+        coll = r["collectives"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['chips']} | "
+            f"{r.get('compile_s', 0):.0f}s | {_gb(mem['argument_size_bytes'])} | "
+            f"{_gb(mem['temp_size_bytes'])} | {coll['count']} | "
+            f"{coll['total'] / 2**30:.3f} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs: List[Dict], mesh: str = "16x16") -> str:
+    lines = [
+        "| arch | shape | t_compute | t_memory | t_collective | bottleneck "
+        "| MODEL/HLO flops | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        rf = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt_s(rf['t_compute_s'])} | "
+            f"{_fmt_s(rf['t_memory_s'])} | {_fmt_s(rf['t_collective_s'])} | "
+            f"**{rf['bottleneck']}** | {rf['useful_flops_ratio']:.2f} | "
+            f"{rf['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+def pick_hillclimb(recs: List[Dict]) -> Dict[str, Dict]:
+    """Worst roofline fraction, most collective-bound, paper-representative."""
+    single = [r for r in recs if r["mesh"] == "16x16"]
+    worst = min(single, key=lambda r: r["roofline"]["roofline_fraction"])
+    coll = max(single, key=lambda r: (r["roofline"]["t_collective_s"]
+                                      / max(r["roofline"]["step_time_lb_s"], 1e-12)))
+    paper = next((r for r in single
+                  if r["arch"] == "qwen2-vl-72b" and r["shape"] == "decode_32k"),
+                 single[0])
+    return {"worst_fraction": worst, "most_collective_bound": coll,
+            "paper_representative": paper}
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    recs = load_records(args.dir)
+    print("## Dry-run (all cells)\n")
+    print(dryrun_table(recs))
+    print("\n## Roofline (single-pod)\n")
+    print(roofline_table(recs))
+    picks = pick_hillclimb(recs)
+    print("\n## Hillclimb candidates\n")
+    for k, r in picks.items():
+        print(f"- **{k}**: {r['arch']} x {r['shape']} "
+              f"(bottleneck {r['roofline']['bottleneck']}, "
+              f"frac {r['roofline']['roofline_fraction']:.3f})")
+
+
+if __name__ == "__main__":
+    main()

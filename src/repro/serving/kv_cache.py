@@ -1,0 +1,105 @@
+"""Paged KV cache (vLLM-style, arXiv:2309.06180) adapted to JAX/TPU.
+
+A global page pool per layer stack plus per-sequence block tables.  Pages
+are (page_size, Hk, hd) tiles; the block table maps logical block index ->
+physical page.  Allocation is host-side (the engine owns the allocator);
+the device side is purely functional: `append_token` scatters new KV into
+the right page, `gather_kv` materializes a sequence view for reference
+attention (the Pallas flash_decode kernel consumes tables directly on TPU).
+
+Paged caches beat contiguous per-slot caches at scale because memory is
+allocated in O(page) quanta: fragmentation is bounded by page_size-1
+tokens per sequence instead of (max_len - len) per slot.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class PagedState(NamedTuple):
+    pages_k: jnp.ndarray   # (L, n_pages, page, Hk, hd)
+    pages_v: jnp.ndarray   # (L, n_pages, page, Hk, hd)
+    tables: jnp.ndarray    # (B, max_blocks) int32 physical page ids
+    lengths: jnp.ndarray   # (B,) int32 tokens present per sequence
+
+
+def init_paged(cfg, n_pages: int, page: int, batch: int, max_blocks: int
+               ) -> PagedState:
+    L, Hk, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim_
+    dt = cfg.act_dtype
+    return PagedState(
+        pages_k=jnp.zeros((L, n_pages, page, Hk, hd), dt),
+        pages_v=jnp.zeros((L, n_pages, page, Hk, hd), dt),
+        tables=jnp.zeros((batch, max_blocks), jnp.int32),
+        lengths=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def append_token(state: PagedState, k_new: jnp.ndarray, v_new: jnp.ndarray
+                 ) -> PagedState:
+    """Scatter one token per sequence: k_new/v_new (L, B, Hk, hd).
+
+    The engine must have pre-assigned a page for position `lengths[b]`
+    (tables[b, lengths[b] // page] is valid)."""
+    L, n_pages, page, Hk, hd = state.pages_k.shape
+    B = state.tables.shape[0]
+    blk = state.lengths // page                       # (B,)
+    off = state.lengths % page                        # (B,)
+    phys = jnp.take_along_axis(state.tables, blk[:, None], axis=1)[:, 0]
+
+    li = jnp.arange(L)[:, None]                       # (L, 1)
+    bi = jnp.broadcast_to(phys[None, :], (L, B))
+    oi = jnp.broadcast_to(off[None, :], (L, B))
+    pages_k = state.pages_k.at[li, bi, oi].set(k_new)
+    pages_v = state.pages_v.at[li, bi, oi].set(v_new)
+    return state._replace(pages_k=pages_k, pages_v=pages_v,
+                          lengths=state.lengths + 1)
+
+
+def gather_kv(state: PagedState, layer: Optional[int] = None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Materialize (L?, B, max_blocks*page, Hk, hd) contiguous views."""
+    pk, pv = state.pages_k, state.pages_v
+    if layer is not None:
+        pk, pv = pk[layer], pv[layer]
+        k = pk[state.tables]          # (B, max_blocks, page, Hk, hd)
+        v = pv[state.tables]
+        B, nb, pg, Hk, hd = k.shape
+        return k.reshape(B, nb * pg, Hk, hd), v.reshape(B, nb * pg, Hk, hd)
+    k = pk[:, state.tables]           # (L, B, max_blocks, page, Hk, hd)
+    v = pv[:, state.tables]
+    L, B, nb, pg, Hk, hd = k.shape
+    return (k.reshape(L, B, nb * pg, Hk, hd),
+            v.reshape(L, B, nb * pg, Hk, hd))
+
+
+@dataclasses.dataclass
+class PageAllocator:
+    """Host-side free-list allocator for physical pages."""
+
+    n_pages: int
+
+    def __post_init__(self):
+        self.free: List[int] = list(range(self.n_pages - 1, -1, -1))
+        self.owned: dict = {}
+
+    def alloc(self, seq_id: int, n: int = 1) -> List[int]:
+        if len(self.free) < n:
+            raise MemoryError(
+                f"KV pool exhausted: need {n}, free {len(self.free)}")
+        got = [self.free.pop() for _ in range(n)]
+        self.owned.setdefault(seq_id, []).extend(got)
+        return got
+
+    def release(self, seq_id: int):
+        for p in self.owned.pop(seq_id, []):
+            self.free.append(p)
+
+    @property
+    def utilization(self) -> float:
+        return 1.0 - len(self.free) / max(self.n_pages, 1)

@@ -1,0 +1,51 @@
+"""Token samplers: greedy / temperature / top-k / top-p, plus logprob and
+entropy telemetry (the Artic confidence head consumes these)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    temperature: float = 0.0   # 0 => greedy
+    top_k: Optional[int] = None
+    top_p: Optional[float] = None
+
+
+class SampleOut(NamedTuple):
+    token: jnp.ndarray      # (B,) int32
+    logprob: jnp.ndarray    # (B,) chosen-token logprob
+    entropy: jnp.ndarray    # (B,) full-distribution entropy (nats)
+    top1_prob: jnp.ndarray  # (B,) max prob
+
+
+def sample(key, logits: jnp.ndarray, sc: SamplerConfig) -> SampleOut:
+    """logits (B, V) -> sampled tokens + confidence telemetry."""
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    p = jnp.exp(logp)
+    entropy = -jnp.sum(p * logp, axis=-1)
+    top1 = jnp.max(p, axis=-1)
+
+    if sc.temperature <= 0.0:
+        tok = jnp.argmax(logits, axis=-1)
+    else:
+        z = logits / sc.temperature
+        if sc.top_k is not None:
+            kth = jnp.sort(z, axis=-1)[:, -sc.top_k][:, None]
+            z = jnp.where(z < kth, -jnp.inf, z)
+        if sc.top_p is not None:
+            srt = jnp.sort(z, axis=-1)[:, ::-1]
+            cdf = jnp.cumsum(jax.nn.softmax(srt, axis=-1), axis=-1)
+            cut_idx = jnp.sum(cdf < sc.top_p, axis=-1)
+            cutoff = jnp.take_along_axis(srt, cut_idx[:, None], axis=-1)
+            z = jnp.where(z < cutoff, -jnp.inf, z)
+        tok = jax.random.categorical(key, z, axis=-1)
+
+    chosen = jnp.take_along_axis(logp, tok[:, None], axis=-1)[:, 0]
+    return SampleOut(token=tok.astype(jnp.int32), logprob=chosen,
+                     entropy=entropy, top1_prob=top1)

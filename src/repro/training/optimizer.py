@@ -1,0 +1,182 @@
+"""Optimizers from scratch (no optax): AdamW and Adafactor, with global-norm
+clipping and warmup+cosine schedules.
+
+Optimizer state mirrors the parameter pytree, so whatever sharding the
+params carry is inherited by the moments (ZeRO-3-equivalent under our 2-D
+FSDPxTP layout).  `moment_dtype` lets big-dense configs keep Adam moments
+in bf16 to fit HBM (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# Schedules
+# --------------------------------------------------------------------------
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        t = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        t = jnp.clip(t, 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+
+    return lr
+
+
+def constant(lr_value: float) -> Callable:
+    return lambda step: jnp.asarray(lr_value, jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Global-norm clipping
+# --------------------------------------------------------------------------
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+# --------------------------------------------------------------------------
+# AdamW
+# --------------------------------------------------------------------------
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    max_grad_norm: Optional[float] = 1.0
+    moment_dtype: str = "float32"
+
+    def init(self, params) -> AdamWState:
+        dt = jnp.dtype(self.moment_dtype)
+        zeros = lambda p: jnp.zeros_like(p, dtype=dt)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          m=jax.tree.map(zeros, params),
+                          v=jax.tree.map(zeros, params))
+
+    def update(self, grads, state: AdamWState, params
+               ) -> Tuple[Any, AdamWState, dict]:
+        gnorm = jnp.asarray(0.0)
+        if self.max_grad_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, self.max_grad_norm)
+        step = state.step + 1
+        lr = self.lr(step)
+        b1, b2 = self.b1, self.b2
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        dt = jnp.dtype(self.moment_dtype)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+            mhat = m32 / bc1
+            vhat = v32 / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if p.ndim >= 2:  # decoupled decay on matrices only
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return new_p, m32.astype(dt), v32.astype(dt)
+
+        out = jax.tree.map(upd, grads, state.m, state.v, params)
+        new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, AdamWState(step, new_m, new_v), {
+            "lr": lr, "grad_norm": gnorm}
+
+
+# --------------------------------------------------------------------------
+# Adafactor (factored second moment -> O(n+m) state for (n,m) weights)
+# --------------------------------------------------------------------------
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    vr: Any   # row second-moment (or full for <2D)
+    vc: Any   # col second-moment (or None sentinel)
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    lr: Callable
+    decay: float = 0.8
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    max_grad_norm: Optional[float] = None
+
+    def init(self, params) -> AdafactorState:
+        def vr(p):
+            if p.ndim >= 2:
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros_like(p, dtype=jnp.float32)
+
+        def vc(p):
+            if p.ndim >= 2:
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((1,), jnp.float32)
+
+        return AdafactorState(step=jnp.zeros((), jnp.int32),
+                              vr=jax.tree.map(vr, params),
+                              vc=jax.tree.map(vc, params))
+
+    def update(self, grads, state: AdafactorState, params):
+        gnorm = jnp.asarray(0.0)
+        if self.max_grad_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, self.max_grad_norm)
+        step = state.step + 1
+        lr = self.lr(step)
+        beta = 1.0 - (step.astype(jnp.float32)) ** (-self.decay)
+
+        def upd(g, vr, vc, p):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + self.eps
+            if p.ndim >= 2:
+                vr_n = beta * vr + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc_n = beta * vc + (1 - beta) * jnp.mean(g2, axis=-2)
+                r = vr_n / jnp.maximum(
+                    jnp.mean(vr_n, axis=-1, keepdims=True), self.eps)
+                u = g32 / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc_n)[..., None, :]
+                           + self.eps)
+            else:
+                vr_n = beta * vr + (1 - beta) * g2
+                vc_n = vc
+                u = g32 / (jnp.sqrt(vr_n) + self.eps)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + self.eps)
+            u = u / jnp.maximum(1.0, rms / self.clip_threshold)
+            new_p = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+            return new_p, vr_n, vc_n
+
+        out = jax.tree.map(upd, grads, state.vr, state.vc, params)
+        pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                      is_leaf=lambda t: isinstance(t, tuple))
+        return pick(0), AdafactorState(step, pick(1), pick(2)), {
+            "lr": lr, "grad_norm": gnorm}
+
+
+def make_optimizer(kind: str, lr_fn: Callable, **kw):
+    if kind == "adamw":
+        return AdamW(lr=lr_fn, **kw)
+    if kind == "adafactor":
+        return Adafactor(lr=lr_fn, **kw)
+    raise ValueError(kind)

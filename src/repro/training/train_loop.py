@@ -1,0 +1,111 @@
+"""Train-step builder: loss -> grads (with microbatch accumulation and
+optional gradient compression) -> optimizer update; plus the TrainState
+pytree the checkpoint manager persists.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import compression
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.training import optimizer as opt_lib
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray
+    compress: Optional[compression.CompressionState]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSettings:
+    optimizer: str = "adamw"
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.1
+    max_grad_norm: float = 1.0
+    moment_dtype: str = "float32"
+    grad_accum: int = 1          # microbatches per step
+    compress_grads: bool = False  # int8 error-feedback DP compression
+
+
+def make_optimizer(s: TrainSettings):
+    lr = opt_lib.warmup_cosine(s.peak_lr, s.warmup_steps, s.total_steps)
+    if s.optimizer == "adamw":
+        return opt_lib.AdamW(lr=lr, weight_decay=s.weight_decay,
+                             max_grad_norm=s.max_grad_norm,
+                             moment_dtype=s.moment_dtype)
+    return opt_lib.Adafactor(lr=lr, max_grad_norm=s.max_grad_norm)
+
+
+def init_state(key, cfg: ModelConfig, s: TrainSettings) -> TrainState:
+    params = tfm.init(key, cfg)
+    optimizer = make_optimizer(s)
+    opt_state = optimizer.init(params)
+    comp = compression.init_state(params) if s.compress_grads else None
+    return TrainState(params=params, opt_state=opt_state,
+                      step=jnp.zeros((), jnp.int32), compress=comp)
+
+
+def make_train_step(cfg: ModelConfig, s: TrainSettings
+                    ) -> Callable[[TrainState, Dict], Tuple[TrainState, Dict]]:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    With grad_accum > 1 the batch's leading axis is split into microbatches
+    scanned sequentially (activation memory / accum tradeoff); gradients
+    average across microbatches.
+    """
+    optimizer = make_optimizer(s)
+    grad_fn = jax.value_and_grad(tfm.loss_fn, has_aux=True)
+
+    def one_microbatch(params, mb):
+        (loss, metrics), grads = grad_fn(params, mb, cfg)
+        return loss, metrics, grads
+
+    def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        if s.grad_accum > 1:
+            def split(path, x):
+                # mrope position ids are (3, B, S): batch axis is 1
+                axis = 1 if "mrope" in jax.tree_util.keystr(path) else 0
+                b = x.shape[axis]
+                shape = (x.shape[:axis] + (s.grad_accum, b // s.grad_accum)
+                         + x.shape[axis + 1:])
+                return jnp.moveaxis(x.reshape(shape), axis, 0)
+
+            mbs = jax.tree_util.tree_map_with_path(split, batch)
+
+            def accum(carry, mb):
+                g_acc, loss_acc = carry
+                loss, _, grads = one_microbatch(state.params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, grads)
+                return (g_acc, loss_acc + loss), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              state.params)
+            (grads, loss_sum), _ = jax.lax.scan(accum, (g0, jnp.float32(0)), mbs)
+            grads = jax.tree.map(lambda g: g / s.grad_accum, grads)
+            loss = loss_sum / s.grad_accum
+            metrics = {"loss": loss}
+        else:
+            loss, metrics, grads = one_microbatch(state.params, batch)
+
+        comp_state = state.compress
+        if s.compress_grads:
+            grads, comp_state, cm = compression.compress_grads(grads, comp_state)
+            metrics.update(cm)
+
+        params, opt_state, om = optimizer.update(grads, state.opt_state,
+                                                 state.params)
+        metrics.update(om)
+        new_state = TrainState(params=params, opt_state=opt_state,
+                               step=state.step + 1, compress=comp_state)
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,138 @@
+"""Block-DCT video codec simulator with per-patch QP (the ZeCoStream
+control surface).
+
+This is the JAX stand-in for x265/Kvazaar (DESIGN.md §3): 8x8 DCT-II via
+two MXU matmuls, HEVC-style quantization step `Qstep = 2^((QP-4)/6)`, a
+coefficient-magnitude entropy-proxy rate model, and inverse transform.
+The per-block transform+quant pipeline is also implemented as a Pallas
+TPU kernel (repro/kernels/qp_codec) — this module is the jnp oracle and
+the CPU execution path.
+
+Frames are (H, W) grayscale in [0, 1]; H, W multiples of 8.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BLOCK = 8
+QP_MIN, QP_MAX = 20, 51
+# bits-per-coefficient entropy-proxy calibration: puts a 256x256@10fps
+# synthetic scene on the paper's operating curve — QP20 ~ 1.7 Mbps
+# (saturated, cf. the 968 Kbps knee), QP51 ~ 0.1 Mbps (broken detail at
+# the 200 Kbps DeViBench low-bitrate point).
+RATE_COEF = 14.0
+RATE_OVERHEAD_PER_BLOCK = 10.0  # header bits
+
+
+@functools.lru_cache()
+def dct_matrix(n: int = BLOCK) -> np.ndarray:
+    """Orthonormal DCT-II matrix."""
+    k = np.arange(n)[:, None]
+    i = np.arange(n)[None, :]
+    m = np.cos(np.pi * (2 * i + 1) * k / (2 * n)) * np.sqrt(2.0 / n)
+    m[0] /= np.sqrt(2.0)
+    return m.astype(np.float32)
+
+
+def qstep(qp):
+    """HEVC quantization step size."""
+    return 2.0 ** ((qp - 4.0) / 6.0)
+
+
+class EncodedFrame(NamedTuple):
+    coeffs: jnp.ndarray   # quantized DCT coefficients (nby, nbx, 8, 8) int32
+    qp_blocks: jnp.ndarray  # per-block QP used (nby, nbx) float32
+    bits: jnp.ndarray     # scalar estimated size in bits
+    bits_blocks: jnp.ndarray  # per-block bits (nby, nbx)
+
+
+def _to_blocks(frame: jnp.ndarray) -> jnp.ndarray:
+    H, W = frame.shape
+    nby, nbx = H // BLOCK, W // BLOCK
+    return frame.reshape(nby, BLOCK, nbx, BLOCK).transpose(0, 2, 1, 3)
+
+
+def _from_blocks(blocks: jnp.ndarray) -> jnp.ndarray:
+    nby, nbx = blocks.shape[:2]
+    return blocks.transpose(0, 2, 1, 3).reshape(nby * BLOCK, nbx * BLOCK)
+
+
+def block_qp_from_patch_qp(qp_patches: jnp.ndarray, frame_hw: Tuple[int, int],
+                           patch: int) -> jnp.ndarray:
+    """Upsample a (H//patch, W//patch) QP map to per-8x8-block QP."""
+    H, W = frame_hw
+    rep = patch // BLOCK
+    qp = jnp.repeat(jnp.repeat(qp_patches, rep, axis=0), rep, axis=1)
+    return qp[: H // BLOCK, : W // BLOCK]
+
+
+@jax.jit
+def encode(frame: jnp.ndarray, qp_blocks: jnp.ndarray) -> EncodedFrame:
+    """Transform + quantize with per-block QP; returns coefficients + rate."""
+    D = jnp.asarray(dct_matrix())
+    blocks = _to_blocks(frame.astype(jnp.float32) - 0.5)
+    coef = jnp.einsum("ij,yxjk,lk->yxil", D, blocks, D)
+    qs = qstep(qp_blocks)[..., None, None] * (1.0 / 64.0)
+    q = jnp.round(coef / qs).astype(jnp.int32)
+    # rate proxy: ~log2(1+|q|) bits per coefficient + per-block overhead
+    bits_blocks = (RATE_COEF * jnp.sum(jnp.log2(1.0 + jnp.abs(q)), axis=(-1, -2))
+                   + RATE_OVERHEAD_PER_BLOCK)
+    return EncodedFrame(coeffs=q, qp_blocks=qp_blocks,
+                        bits=jnp.sum(bits_blocks), bits_blocks=bits_blocks)
+
+
+@jax.jit
+def decode(enc: EncodedFrame) -> jnp.ndarray:
+    D = jnp.asarray(dct_matrix())
+    qs = qstep(enc.qp_blocks)[..., None, None] * (1.0 / 64.0)
+    coef = enc.coeffs.astype(jnp.float32) * qs
+    blocks = jnp.einsum("ji,yxjk,kl->yxil", D, coef, D)
+    return jnp.clip(_from_blocks(blocks) + 0.5, 0.0, 1.0)
+
+
+def roundtrip(frame: jnp.ndarray, qp_blocks: jnp.ndarray
+              ) -> Tuple[jnp.ndarray, EncodedFrame]:
+    enc = encode(frame, qp_blocks)
+    return decode(enc), enc
+
+
+def psnr(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    mse = jnp.mean(jnp.square(a - b))
+    return 10.0 * jnp.log10(1.0 / jnp.maximum(mse, 1e-10))
+
+
+# --------------------------------------------------------------------------
+# Rate control: hit a bits target by shifting the QP surface
+# --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("iters",))
+def rate_control(frame: jnp.ndarray, qp_shape: jnp.ndarray,
+                 target_bits: jnp.ndarray, iters: int = 8
+                 ) -> Tuple[jnp.ndarray, EncodedFrame]:
+    """Find offset o s.t. encode(frame, clip(qp_shape + o)) meets target_bits.
+
+    `qp_shape` is the *relative* QP surface (uniform zeros for standard
+    encoding; the Eq.4 map for ZeCoStream).  Bisection over the offset —
+    rate is monotone in QP.  Returns (qp_blocks, EncodedFrame).
+    """
+    lo = jnp.float32(QP_MIN) - jnp.max(qp_shape)
+    hi = jnp.float32(QP_MAX) - jnp.min(qp_shape)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        qp = jnp.clip(qp_shape + mid, QP_MIN, QP_MAX)
+        bits = encode(frame, qp).bits
+        # too many bits -> raise QP (raise lo)
+        lo = jnp.where(bits > target_bits, mid, lo)
+        hi = jnp.where(bits > target_bits, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    qp = jnp.clip(qp_shape + 0.5 * (lo + hi), QP_MIN, QP_MAX)
+    enc = encode(frame, qp)
+    return qp, enc

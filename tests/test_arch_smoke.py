@@ -1,0 +1,127 @@
+"""Per-assigned-architecture smoke tests on reduced same-family configs.
+
+Each arch: instantiate reduced config, run one forward + one train step
+(grads) on CPU, assert output shapes and absence of NaNs; then one decode
+step against a prefix cache.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry, shapes
+from repro.models import transformer as tfm
+from repro.models.config import reduced
+
+ARCHS = registry.list_archs()
+B, S = 2, 32
+
+
+def _reduced(name):
+    cfg = registry.get_config(name)
+    over = {"dtype": "float32", "param_dtype": "float32"}
+    if cfg.family == "hybrid":
+        over["n_layers"] = 5  # 1 full (rec,rec,attn) group + 2 tail rec layers
+    return reduced(cfg, **over)
+
+
+def _batch(cfg, seq=S, labels=True):
+    key = jax.random.PRNGKey(0)
+    if cfg.mrope_sections is not None:
+        b = {"embeds": jax.random.normal(key, (B, seq, cfg.d_model), jnp.float32) * 0.02,
+             "mrope_positions": jnp.broadcast_to(
+                 jnp.arange(seq, dtype=jnp.int32)[None, None, :], (3, B, seq)).copy()}
+        if labels:
+            b["labels"] = jax.random.randint(key, (B, seq), 0, cfg.vocab)
+        return b
+    if cfg.num_codebooks > 1:
+        toks = jax.random.randint(key, (B, cfg.num_codebooks, seq), 0, cfg.vocab)
+        return {"tokens": toks, "labels": toks} if labels else {"tokens": toks}
+    toks = jax.random.randint(key, (B, seq), 0, cfg.vocab)
+    return {"tokens": toks, "labels": toks} if labels else {"tokens": toks}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    cfg = registry.get_config(arch)
+    spec = {
+        "qwen3-0.6b": (28, 1024, 16, 8, 3072, 151936),
+        "llama3-405b": (126, 16384, 128, 8, 53248, 128256),
+        "mistral-large-123b": (88, 12288, 96, 8, 28672, 32768),
+        "deepseek-7b": (30, 4096, 32, 32, 11008, 102400),
+        "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+        "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 768, 151936),
+        "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+        "mamba2-780m": (48, 1536, 48, 48, 0, 50280),
+        "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab)
+    assert got == spec
+    if arch == "dbrx-132b":
+        assert (cfg.moe.num_experts, cfg.moe.top_k) == (16, 4)
+    if arch == "qwen3-moe-30b-a3b":
+        assert (cfg.moe.num_experts, cfg.moe.top_k) == (128, 8)
+    if arch == "mamba2-780m":
+        assert cfg.ssm.d_state == 128
+    if arch == "musicgen-medium":
+        assert cfg.num_codebooks == 4
+    if arch == "recurrentgemma-9b":
+        assert cfg.local_window == 2048 and cfg.rglru is not None
+    if arch == "qwen3-0.6b":
+        assert cfg.qk_norm
+    if arch == "qwen2-vl-72b":
+        assert cfg.mrope_sections == (16, 24, 24)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = _reduced(arch)
+    params = tfm.init(jax.random.PRNGKey(1), cfg)
+    batch = _batch(cfg)
+    logits, aux = tfm.forward(params, batch, cfg)
+    if cfg.num_codebooks > 1:
+        assert logits.shape == (B, cfg.num_codebooks, S, cfg.vocab)
+    else:
+        assert logits.shape == (B, S, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all(), "NaN/Inf in logits"
+
+    (loss, _), grads = jax.value_and_grad(tfm.loss_fn, has_aux=True)(
+        params, batch, cfg)
+    assert np.isfinite(float(loss))
+    assert all(np.isfinite(np.asarray(g)).all() for g in jax.tree.leaves(grads))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_prefill_decode(arch):
+    cfg = _reduced(arch)
+    params = tfm.init(jax.random.PRNGKey(1), cfg)
+    batch = _batch(cfg, labels=False)
+    logits, cache = tfm.prefill(params, batch, cfg,
+                                max_len=S + 4 if cfg.family in ("dense", "moe") else None)
+    assert np.isfinite(np.asarray(logits)).all()
+    if cfg.num_codebooks > 1:
+        step = {"tokens": jnp.zeros((B, cfg.num_codebooks, 1), jnp.int32)}
+    elif cfg.mrope_sections is not None:
+        step = {"tokens": jnp.zeros((B, 1), jnp.int32),
+                "mrope_positions": jnp.full((3, B, 1), S, jnp.int32)}
+    else:
+        step = {"tokens": jnp.zeros((B, 1), jnp.int32)}
+    logits2, cache2 = tfm.decode_step(params, cache, step, cfg)
+    assert np.isfinite(np.asarray(logits2)).all()
+    assert int(cache2["length"]) == S + 1
+
+
+@pytest.mark.parametrize("shape_name", list(shapes.SHAPES))
+@pytest.mark.parametrize("arch", ARCHS)
+def test_input_specs_defined(arch, shape_name):
+    cfg = registry.get_config(arch)
+    ok, why = shapes.supported(cfg, shape_name)
+    if not ok:
+        assert shape_name == "long_500k" and why
+        return
+    specs = shapes.input_specs(cfg, shape_name)
+    assert "batch" in specs
+    for leaf in jax.tree.leaves(specs):
+        assert isinstance(leaf, jax.ShapeDtypeStruct)

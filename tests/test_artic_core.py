@@ -1,0 +1,208 @@
+"""Artic core tests: ReCapABR (Eq. 1-2), ZeCoStream (Eq. 3-4),
+grounding-then-prediction, confidence calibration, end-to-end session."""
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+
+from repro.core.confidence import PlattCalibrator, raw_score_from_telemetry
+from repro.core.grounding import TrajectoryPredictor, detect_cards
+from repro.core.recap_abr import CCOnlyABR, ReCapABR
+from repro.core.session import QASample, SessionConfig, run_session
+from repro.core.zecostream import (TimedBoxes, ZeCoStream, importance_map,
+                                   qp_map)
+from repro.net.traces import elevator_trace, fluctuating_trace, static_trace
+from repro.video.scenes import make_scene
+
+
+# --------------------------------------------------------------------------
+# ReCapABR — Eq. 1 / Eq. 2 semantics
+# --------------------------------------------------------------------------
+def test_eq1_weight_signs_and_quadratic():
+    abr = ReCapABR(tau=0.8, gamma=2.0)
+    assert abr.weight(0.8) == pytest.approx(0.0)
+    assert abr.weight(0.4) > 0           # struggling -> push rate up
+    assert abr.weight(1.0) < 0           # saturated -> back off
+    # gamma=2: quadratic scaling |delta|^2 with sign
+    assert abr.weight(0.0) == pytest.approx(1.0)
+    assert abr.weight(0.4) == pytest.approx(0.25)
+
+
+def test_eq2_caps_at_bandwidth_on_congestion():
+    abr = ReCapABR(init_rate=2e6)
+    r = abr.update(confidence=0.2, bw_estimate=1e6)  # B_hat < R_t
+    assert r == pytest.approx(1e6)
+
+
+def test_eq2_holds_rate_when_saturated():
+    """C_t > tau with ample bandwidth: rate must NOT chase the CC estimate."""
+    abr = ReCapABR(init_rate=1e6)
+    r = abr.update(confidence=0.95, bw_estimate=5e6)
+    assert r < 1e6  # voluntarily decreases, reserving headroom
+    base = CCOnlyABR(init_rate=1e6)
+    assert base.update(0.95, 5e6) == pytest.approx(5e6)
+
+
+def test_eq2_rises_toward_bandwidth_when_struggling():
+    abr = ReCapABR(init_rate=5e5)
+    r = abr.update(confidence=0.2, bw_estimate=4e6)
+    assert 5e5 < r <= 4e6
+
+
+@hypothesis.given(c=st.floats(0, 1), r=st.floats(2e5, 5e6),
+                  b=st.floats(2e5, 8e6))
+@hypothesis.settings(deadline=None, max_examples=60)
+def test_property_eq2_never_exceeds_bandwidth(c, r, b):
+    abr = ReCapABR(init_rate=r)
+    out = abr.update(c, b)
+    assert out <= max(b, abr.min_rate) + 1e-6
+
+
+def test_equilibrium_at_tau():
+    """C_t == tau is a fixed point of Eq. 2 (w_t = 0)."""
+    abr = ReCapABR(init_rate=1e6)
+    r = abr.update(confidence=0.8, bw_estimate=5e6)
+    assert r == pytest.approx(1e6)
+
+
+# --------------------------------------------------------------------------
+# ZeCoStream — Eq. 3 / Eq. 4
+# --------------------------------------------------------------------------
+def test_eq3_importance_geometry():
+    rho = importance_map([(64, 64, 128, 128)], (256, 256), patch=64, mu=0.5)
+    # patch containing the box -> 1; far corner decays
+    assert rho[1, 1] == pytest.approx(1.0)
+    assert rho[3, 3] < rho[2, 2] < 1.0
+    assert rho.min() >= 0.0 and rho.max() <= 1.0
+
+
+def test_eq3_zero_beyond_half_diagonal():
+    # box in one corner of a huge frame: opposite corner beyond mu*diag
+    rho = importance_map([(0, 0, 8, 8)], (1024, 1024), patch=64, mu=0.25)
+    assert rho[-1, -1] == 0.0
+
+
+def test_eq4_qp_mapping_quadratic():
+    rho = np.asarray([[1.0, 0.5, 0.0]])
+    qp = qp_map(rho, 20, 51)
+    assert qp[0, 0] == pytest.approx(20.0)       # inside box -> Qmin
+    assert qp[0, 2] == pytest.approx(51.0)       # irrelevant -> Qmax
+    assert qp[0, 1] == pytest.approx(20 + 31 * 0.25)  # quadratic midpoint
+
+
+def test_trigger_hysteresis():
+    z = ZeCoStream(trigger_bps=1.2e6, release_bps=1.6e6)
+    assert not z.should_engage(2e6)
+    assert z.should_engage(1.0e6)     # below trigger -> on
+    assert z.should_engage(1.4e6)     # hysteresis: stays on below release
+    assert not z.should_engage(1.7e6)  # above release -> off
+
+
+def test_timedboxes_timestamp_matching():
+    fb = TimedBoxes(times=np.asarray([1.0, 1.5, 2.0]),
+                    boxes=[[(0, 0, 1, 1)], [(10, 10, 20, 20)], [(5, 5, 6, 6)]])
+    assert fb.at(1.4) == [(10, 10, 20, 20)]
+
+
+# --------------------------------------------------------------------------
+# Grounding-then-prediction
+# --------------------------------------------------------------------------
+def test_trajectory_prediction_constant_velocity():
+    tp = TrajectoryPredictor()
+    for i in range(5):
+        t = i * 0.1
+        tp.observe(t, [(10 + 20 * t, 5 + 10 * t, 20 + 20 * t, 15 + 10 * t)])
+    fb = tp.feedback(0.4, horizon=1.0, steps=3)
+    pred = fb.at(1.4)  # 1 second into the future
+    assert len(pred) == 1
+    y0, x0, y1, x1 = pred[0]
+    assert abs(y0 - (10 + 20 * 1.4)) < 2.0
+    assert abs(x0 - (5 + 10 * 1.4)) < 1.5
+
+
+def test_detect_cards_finds_glyph_cards():
+    sc = make_scene("retail", False, seed=0, h=256, w=256)
+    boxes = detect_cards(sc.render(0))
+    assert len(boxes) >= 1
+    # each detected box overlaps a true object card
+    hits = 0
+    for (y0, x0, y1, x1) in boxes:
+        for obj in sc.objects:
+            oy0, ox0, oy1, ox1 = obj.bbox(0)
+            if not (y1 < oy0 - 8 or oy1 + 8 < y0 or x1 < ox0 - 8 or ox1 + 8 < x0):
+                hits += 1
+                break
+    assert hits == len(boxes)
+
+
+# --------------------------------------------------------------------------
+# Confidence
+# --------------------------------------------------------------------------
+def test_platt_calibration_orders_scores():
+    rng = np.random.default_rng(0)
+    scores = rng.uniform(0, 1, 400)
+    correct = (scores + 0.1 * rng.standard_normal(400)) > 0.5
+    cal = PlattCalibrator().fit(scores, correct)
+    assert cal(0.9) > 0.7 and cal(0.1) < 0.3
+
+
+def test_telemetry_score_tracks_certainty():
+    hi = raw_score_from_telemetry([0.95, 0.9], [0.2, 0.3], vocab=1000)
+    lo = raw_score_from_telemetry([0.2, 0.3], [5.0, 5.5], vocab=1000)
+    assert hi > 0.8 > 0.5 > lo
+
+
+# --------------------------------------------------------------------------
+# End-to-end session
+# --------------------------------------------------------------------------
+def _qa(scene, n=6, t0=10.0, dt=5.0):
+    return [QASample(t_ask=t0 + i * dt, obj_idx=i % len(scene.objects))
+            for i in range(n)]
+
+
+def test_session_runs_and_reports():
+    sc = make_scene("retail", True, seed=0)
+    tr = static_trace(30.0, mbps=3.0)
+    m = run_session(sc, _qa(sc, 4), tr,
+                    SessionConfig(duration=30.0, use_recap=True, use_zeco=True))
+    assert len(m.latencies) == 300
+    assert 0.0 <= m.accuracy <= 1.0
+    assert m.avg_latency_ms < 500
+
+
+def test_recap_reserves_headroom_on_static_link():
+    """With ample bandwidth + saturated confidence, ReCapABR's offered rate
+    must sit well below the CC estimate (the Fig. 2 contrast)."""
+    sc = make_scene("retail", False, seed=1)
+    tr = static_trace(40.0, mbps=5.0)
+    base = run_session(sc, [], tr, SessionConfig(
+        duration=40.0, use_recap=False, use_zeco=False))
+    recap = run_session(sc, [], tr, SessionConfig(
+        duration=40.0, use_recap=True, use_zeco=False))
+    # after convergence (last 10s), ReCapABR offered rate < baseline's
+    assert np.mean(recap.rates[-100:]) < 0.75 * np.mean(base.rates[-100:])
+
+
+def test_recap_cuts_latency_spike_on_elevator_drop():
+    sc = make_scene("retail", False, seed=2)
+    tr = elevator_trace(50.0)
+    base = run_session(sc, [], tr, SessionConfig(
+        duration=50.0, use_recap=False, use_zeco=False))
+    recap = run_session(sc, [], tr, SessionConfig(
+        duration=50.0, use_recap=True, use_zeco=False))
+    # headroom absorbs the drop: lower average latency and fewer frames
+    # lost to the drop-tail queue during the bandwidth collapse
+    assert recap.avg_latency_ms < base.avg_latency_ms
+    assert recap.dropped_frames <= base.dropped_frames
+
+
+def test_zeco_helps_accuracy_under_low_bandwidth():
+    sc = make_scene("retail", False, seed=3)
+    tr = static_trace(40.0, mbps=0.35)  # starved uplink
+    qa = _qa(sc, 6, t0=15.0, dt=4.0)
+    plain = run_session(sc, qa, tr, SessionConfig(
+        duration=40.0, use_recap=False, use_zeco=False, seed=1))
+    zeco = run_session(sc, qa, tr, SessionConfig(
+        duration=40.0, use_recap=False, use_zeco=True, seed=1))
+    assert zeco.zeco_engaged_frames > 0
+    assert zeco.accuracy >= plain.accuracy

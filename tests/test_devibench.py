@@ -1,0 +1,52 @@
+"""DeViBench pipeline tests: the 5-step construction, degradation
+sensitivity of accepted samples, splits, and calibration."""
+import numpy as np
+import pytest
+
+from repro.devibench import pipeline as dvb
+
+
+@pytest.fixture(scope="module")
+def bench():
+    return dvb.generate(n_scenes_per_cat=1, questions_per_obj=2, seed=0,
+                        n_frames=20)
+
+
+def test_pipeline_yields_samples(bench):
+    s = bench.stats
+    assert s["n_generated"] > 50
+    assert s["n_verified"] > 10
+    # the paper's filter keeps a minority of generated QA (22.57% net)
+    assert 0.02 < s["net_yield"] < 0.8
+    assert s["n_validation"] + s["n_test"] == s["n_verified"]
+    assert s["n_validation"] >= 1
+
+
+def test_accepted_samples_are_degradation_sensitive(bench):
+    for rec in bench.test + bench.validation:
+        assert rec.correct_high and not rec.correct_low
+        assert rec.verified
+
+
+def test_sensitive_categories_dominate(bench):
+    """Fine-detail categories should dominate accepted samples (paper:
+    text-rich 81.86%), coarse 'lawn'/'sports' should contribute ~none."""
+    cats = [r.category for r in bench.test + bench.validation]
+    fine = sum(c in ("document", "retail", "office", "street") for c in cats)
+    assert fine / len(cats) > 0.7
+
+
+def test_accuracy_curve_saturates(bench):
+    """Fig. 3: accuracy saturates with bitrate on DeViBench samples."""
+    accs = {k: dvb.accuracy_at_bitrate(bench, k) for k in (200, 700, 1700, 4000)}
+    assert accs[200] < 0.4          # accepted samples all fail @200 by design
+    assert accs[4000] > 0.9
+    assert accs[1700] >= accs[700] >= accs[200]
+
+
+def test_calibrator_fits_margin_to_accuracy(bench):
+    cal = dvb.fit_confidence_calibrator(bench)
+    # margins near 1 -> confident, near 0 -> not
+    assert cal(0.95) > 0.6
+    assert cal(0.05) < 0.4
+    assert cal(0.95) > cal(0.5) > cal(0.05)

@@ -1,0 +1,176 @@
+"""Pallas kernel validation (interpret mode) vs pure-jnp oracles:
+shape/dtype sweeps + hypothesis property tests on kernel invariants."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_decode import ops as fd_ops
+from repro.kernels.flash_decode.ref import decode_ref
+from repro.kernels.qp_codec.ops import qp_codec_frame
+from repro.kernels.qp_codec.qp_codec import qp_codec_blocks
+from repro.kernels.qp_codec.ref import qp_codec_ref
+from repro.video import codec as codec_ref
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+def _qkv(key, B, Sq, Sk, Hq, Hk, d, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (B, Sq, Hq, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(k2, (B, Sk, Hk, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(k3, (B, Sk, Hk, d), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+def _bhsd(x):
+    B, S, H, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(B * H, S, d)
+
+
+# --------------------------------------------------------------------------
+# flash_attention: shape/dtype sweep vs oracle
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,Sq,Sk,Hq,Hk,d,bq,bk,window",
+    [
+        (1, 64, 64, 4, 4, 32, 16, 16, None),     # MHA, even blocks
+        (2, 48, 48, 4, 2, 32, 16, 16, None),     # GQA + ragged seq (pad)
+        (1, 128, 128, 8, 2, 64, 32, 64, None),   # GQA 4:1
+        (1, 96, 96, 2, 1, 32, 32, 32, 32),       # MQA + local window
+        (2, 33, 33, 4, 4, 16, 16, 16, None),     # odd seq (pad both)
+    ])
+def test_flash_attention_matches_oracle(B, Sq, Sk, Hq, Hk, d, bq, bk,
+                                        window, dtype):
+    q, k, v = _qkv(jax.random.PRNGKey(0), B, Sq, Sk, Hq, Hk, d, dtype)
+    got = fa_ops.flash_attention(q, k, v, causal=True, window=window,
+                                 bq=bq, bk=bk, interpret=True)
+    want = attention_ref(_bhsd(q), _bhsd(k), _bhsd(v), causal=True,
+                         window=window)
+    want = want.reshape(B, Hq, Sq, d).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_flash_attention_q_offset():
+    """Extension chunks: absolute-position causal masking."""
+    q, k, v = _qkv(jax.random.PRNGKey(1), 1, 16, 48, 4, 4, 32, jnp.float32)
+    got = fa_ops.flash_attention(q, k, v, causal=True, q_offset=32,
+                                 bq=16, bk=16, interpret=True)
+    want = attention_ref(_bhsd(q), _bhsd(k), _bhsd(v), causal=True,
+                         q_offset=32)
+    want = want.reshape(1, 4, 16, 32).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@hypothesis.given(
+    seq=st.sampled_from([16, 40, 64]),
+    heads=st.sampled_from([(4, 4), (4, 2), (8, 1)]),
+    seed=st.integers(0, 50),
+)
+@hypothesis.settings(deadline=None, max_examples=10)
+def test_property_flash_attention_rowsum(seq, heads, seed):
+    """Softmax invariant: with v = ones, output must be exactly ones."""
+    Hq, Hk = heads
+    q, k, _ = _qkv(jax.random.PRNGKey(seed), 1, seq, seq, Hq, Hk, 16,
+                   jnp.float32)
+    v = jnp.ones((1, seq, Hk, 16), jnp.float32)
+    got = fa_ops.flash_attention(q, k, v, causal=True, bq=16, bk=16,
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(got), 1.0, rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# flash_decode
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,Sk,Hq,Hk,d,bk",
+    [
+        (1, 128, 4, 4, 32, 64),
+        (2, 100, 4, 2, 32, 32),   # ragged + GQA
+        (4, 256, 8, 1, 64, 128),  # MQA
+    ])
+def test_flash_decode_matches_oracle(B, Sk, Hq, Hk, d, bk, dtype):
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    q = jax.random.normal(k1, (B, 1, Hq, d), jnp.float32).astype(dtype)
+    kc = jax.random.normal(k2, (B, Sk, Hk, d), jnp.float32).astype(dtype)
+    vc = jax.random.normal(k3, (B, Sk, Hk, d), jnp.float32).astype(dtype)
+    lengths = jax.random.randint(k4, (B,), 1, Sk + 1)
+    got = fd_ops.flash_decode(q, kc, vc, lengths, bk=bk, interpret=True)
+    want = decode_ref(
+        q[:, 0].transpose(0, 1, 2).reshape(B * Hq, d),
+        kc.transpose(0, 2, 1, 3).reshape(B * Hk, Sk, d),
+        vc.transpose(0, 2, 1, 3).reshape(B * Hk, Sk, d),
+        jnp.repeat(lengths, Hq))
+    want = want.reshape(B, Hq, 1, d).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_flash_decode_matches_model_decode_attention():
+    """Cross-check against the model-layer reference decode attention."""
+    from repro.models.attention import decode_attention
+    from repro.models.config import ModelConfig
+    cfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=64,
+                      n_heads=4, n_kv_heads=2, head_dim=16, d_ff=64,
+                      vocab=32, dtype="float32", param_dtype="float32")
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (2, 1, 4, 16))
+    kc = jax.random.normal(jax.random.PRNGKey(4), (2, 64, 2, 16))
+    vc = jax.random.normal(jax.random.PRNGKey(5), (2, 64, 2, 16))
+    lengths = jnp.asarray([10, 50])
+    got = fd_ops.flash_decode(q, kc, vc, lengths, bk=32, interpret=True)
+    want = decode_attention(q, kc, vc, lengths, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# qp_codec
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("N,bs", [(16, 8), (100, 32), (1024, 512)])
+def test_qp_codec_matches_oracle(N, bs):
+    key = jax.random.PRNGKey(0)
+    blocks = jax.random.uniform(key, (N, 8, 8))
+    qp = jax.random.uniform(jax.random.PRNGKey(1), (N,), minval=20,
+                            maxval=51)
+    rec, bits = qp_codec_blocks(blocks, qp, bs=bs, interpret=True)
+    rec_ref_, bits_ref_ = qp_codec_ref(blocks, qp)
+    np.testing.assert_allclose(np.asarray(rec), np.asarray(rec_ref_),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(bits), np.asarray(bits_ref_),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_qp_codec_frame_matches_video_codec():
+    """The kernel path must agree with repro.video.codec end to end."""
+    from repro.video.scenes import make_scene
+    f = jnp.asarray(make_scene("retail", False, 0, h=64, w=64).render(0))
+    qp = jnp.full((8, 8), 30.0)
+    rec_k, bits_k = qp_codec_frame(f, qp, bs=16, interpret=True)
+    rec_o = codec_ref.decode(codec_ref.encode(f, qp))
+    bits_o = codec_ref.encode(f, qp).bits
+    np.testing.assert_allclose(np.asarray(rec_k), np.asarray(rec_o),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(bits_k), float(bits_o), rtol=1e-5)
+
+
+@hypothesis.given(qp_lo=st.floats(20, 35), dq=st.floats(3, 16),
+                  seed=st.integers(0, 20))
+@hypothesis.settings(deadline=None, max_examples=10)
+def test_property_qp_codec_rate_monotone(qp_lo, dq, seed):
+    blocks = jax.random.uniform(jax.random.PRNGKey(seed), (32, 8, 8))
+    _, b1 = qp_codec_blocks(blocks, jnp.full((32,), qp_lo), bs=32,
+                            interpret=True)
+    _, b2 = qp_codec_blocks(blocks, jnp.full((32,), qp_lo + dq), bs=32,
+                            interpret=True)
+    assert float(b2.sum()) <= float(b1.sum()) + 1e-3

@@ -1,0 +1,163 @@
+"""Family-level smoke tests on hand-rolled tiny configs.
+
+(Per-assigned-architecture smoke tests live in test_arch_smoke.py; these
+exercise each family's forward / loss / prefill / decode consistency.)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig, MoEConfig, RGLRUConfig, SSMConfig
+
+BATCH, SEQ = 2, 32
+
+
+def tiny(family, **kw):
+    base = dict(
+        name=f"tiny-{family}", family=family, n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab=256,
+        attn_block_q=8, attn_block_kv=8, blocked_threshold=1 << 30,
+        dtype="float32", param_dtype="float32",
+    )
+    base.update(kw)
+    return ModelConfig(**base).validate()
+
+
+CFGS = {
+    "dense": tiny("dense", qk_norm=True),
+    # capacity_factor=2.0 makes routing drop-free at S=32/E=4/k=2 so that
+    # batched (forward) and incremental (decode) routing agree exactly;
+    # with drops they legitimately differ (GShard capacity semantics).
+    "moe": tiny("moe", moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=64,
+                                     capacity_factor=2.0)),
+    "ssm": tiny("ssm", n_heads=4, ssm=SSMConfig(d_state=16, headdim=16, chunk=8)),
+    "hybrid": tiny("hybrid", n_layers=3, n_kv_heads=1, local_window=16,
+                   rglru=RGLRUConfig(lru_width=64)),
+}
+
+
+@pytest.fixture(params=list(CFGS))
+def cfg(request):
+    return CFGS[request.param]
+
+
+def _batch(cfg, seq=SEQ):
+    key = jax.random.PRNGKey(0)
+    tokens = jax.random.randint(key, (BATCH, seq), 0, cfg.vocab)
+    return {"tokens": tokens, "labels": tokens}
+
+
+def test_forward_shapes_and_finite(cfg):
+    params = tfm.init(jax.random.PRNGKey(1), cfg)
+    logits, aux = tfm.forward(params, _batch(cfg), cfg)
+    assert logits.shape == (BATCH, SEQ, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert np.isfinite(float(aux))
+
+
+def test_loss_and_grads_finite(cfg):
+    params = tfm.init(jax.random.PRNGKey(1), cfg)
+    (loss, metrics), grads = jax.value_and_grad(
+        tfm.loss_fn, has_aux=True)(params, _batch(cfg), cfg)
+    assert np.isfinite(float(loss))
+    leaves = jax.tree.leaves(grads)
+    assert leaves and all(np.isfinite(np.asarray(g)).all() for g in leaves)
+
+
+def test_prefill_matches_forward(cfg):
+    params = tfm.init(jax.random.PRNGKey(1), cfg)
+    batch = _batch(cfg)
+    logits_full, _ = tfm.forward(params, batch, cfg)
+    logits_last, cache = tfm.prefill(params, batch, cfg)
+    np.testing.assert_allclose(
+        np.asarray(logits_last[:, 0]), np.asarray(logits_full[:, -1]),
+        rtol=2e-4, atol=2e-4)
+    assert int(cache["length"]) == SEQ
+
+
+def test_decode_matches_forward(cfg):
+    """Teacher-forced decode must reproduce the parallel forward logits."""
+    params = tfm.init(jax.random.PRNGKey(1), cfg)
+    batch = _batch(cfg)
+    logits_full, _ = tfm.forward(params, batch, cfg)
+
+    prompt = {"tokens": batch["tokens"][:, : SEQ // 2]}
+    logits_last, cache = tfm.prefill(params, prompt, cfg,
+                                     max_len=SEQ if cfg.family != "ssm" else None)
+    step_fn = jax.jit(lambda p, c, b: tfm.decode_step(p, c, b, cfg))
+    outs = [np.asarray(logits_last[:, 0])]
+    for t in range(SEQ // 2, SEQ - 1):
+        logits, cache = step_fn(params, cache, {"tokens": batch["tokens"][:, t:t + 1]})
+        outs.append(np.asarray(logits[:, 0]))
+    got = np.stack(outs, axis=1)  # (B, SEQ/2, V) predictions at SEQ/2-1 .. SEQ-2
+    want = np.asarray(logits_full[:, SEQ // 2 - 1: SEQ - 1])
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_blocked_path_equals_full(cfg):
+    if cfg.family == "ssm":
+        pytest.skip("no attention")
+    params = tfm.init(jax.random.PRNGKey(1), cfg)
+    batch = _batch(cfg)
+    full, _ = tfm.forward(params, batch, cfg)
+    blocked, _ = tfm.forward(params, batch, cfg.replace(blocked_threshold=8))
+    np.testing.assert_allclose(np.asarray(blocked), np.asarray(full),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_moe_gather_matches_gshard():
+    """The scatter/gather dispatch must agree exactly with the GShard
+    one-hot formulation (same arrival-order capacity semantics)."""
+    import dataclasses
+    from repro.models import moe as moe_lib
+    cfg = CFGS["moe"]
+    params = tfm.init(jax.random.PRNGKey(1), cfg)
+    layer0 = jax.tree.map(lambda p: p[0], params["layers"])
+    x = jax.random.normal(jax.random.PRNGKey(2), (BATCH, SEQ, cfg.d_model))
+    y1, aux1 = moe_lib.moe_apply_gshard(layer0["moe"], x, cfg)
+    cfg_g = cfg.replace(moe=dataclasses.replace(cfg.moe, moe_impl="gather"))
+    y2, aux2 = moe_lib.moe_apply_gather(layer0["moe"], x, cfg_g)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(float(aux1), float(aux2), rtol=1e-5)
+
+
+def test_moe_gather_with_drops_matches_gshard():
+    """Equivalence must hold when capacity drops occur too."""
+    import dataclasses
+    base = CFGS["moe"]
+    tight = dataclasses.replace(base.moe, capacity_factor=0.5)
+    from repro.models import moe as moe_lib
+    cfg = base.replace(moe=tight)
+    params = tfm.init(jax.random.PRNGKey(1), cfg)
+    layer0 = jax.tree.map(lambda p: p[0], params["layers"])
+    x = jax.random.normal(jax.random.PRNGKey(3), (BATCH, SEQ, cfg.d_model))
+    y1, _ = moe_lib.moe_apply_gshard(layer0["moe"], x, cfg)
+    y2, _ = moe_lib.moe_apply_gather(layer0["moe"], x, cfg)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_int8_kv_cache_close_to_fp():
+    """int8 KV (per-token-per-head scales) must track the fp cache decode
+    closely (serving memory optimization, DESIGN.md §Perf)."""
+    cfg = CFGS["dense"]
+    params = tfm.init(jax.random.PRNGKey(1), cfg)
+    batch = _batch(cfg)
+    prompt = {"tokens": batch["tokens"][:, :16]}
+    logits_fp, cache_fp = tfm.prefill(params, prompt, cfg, max_len=24)
+    cfg8 = cfg.replace(kv_cache_dtype="int8")
+    logits_q, cache_q = tfm.prefill(params, prompt, cfg8, max_len=24)
+    np.testing.assert_allclose(np.asarray(logits_q), np.asarray(logits_fp),
+                               rtol=0.1, atol=0.15)
+    step = {"tokens": batch["tokens"][:, 16:17]}
+    out_fp, _ = tfm.decode_step(params, cache_fp, step, cfg)
+    out_q, _ = tfm.decode_step(params, cache_q, step, cfg8)
+    # logit agreement within quantization noise; top-1 must match mostly
+    top_fp = np.argmax(np.asarray(out_fp[:, 0]), -1)
+    top_q = np.argmax(np.asarray(out_q[:, 0]), -1)
+    assert (top_fp == top_q).mean() >= 0.5
+    np.testing.assert_allclose(np.asarray(out_q), np.asarray(out_fp),
+                               rtol=0.2, atol=0.3)

@@ -1,0 +1,114 @@
+"""Codec simulator tests incl. hypothesis property tests on RD invariants."""
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.video import codec
+from repro.video.scenes import decode_glyph, glyph_pattern, make_scene
+
+
+def _frame(seed=0, h=64, w=64):
+    rng = np.random.default_rng(seed)
+    sc = make_scene("retail", False, seed, h=h, w=w)
+    return sc.render(0)
+
+
+def test_roundtrip_near_lossless_at_qmin():
+    f = _frame()
+    qp = np.full((8, 8), float(codec.QP_MIN), np.float32)
+    rec, enc = codec.roundtrip(jnp.asarray(f), jnp.asarray(qp))
+    assert float(codec.psnr(jnp.asarray(f), rec)) > 33.0
+
+
+def test_rate_monotone_in_qp():
+    f = jnp.asarray(_frame())
+    bits = []
+    for qp in (20, 28, 36, 44, 51):
+        enc = codec.encode(f, jnp.full((8, 8), float(qp)))
+        bits.append(float(enc.bits))
+    assert all(a > b for a, b in zip(bits, bits[1:])), bits
+
+
+def test_distortion_monotone_in_qp():
+    f = jnp.asarray(_frame())
+    psnrs = []
+    for qp in (20, 32, 44):
+        rec, _ = codec.roundtrip(f, jnp.full((8, 8), float(qp)))
+        psnrs.append(float(codec.psnr(f, rec)))
+    assert psnrs[0] > psnrs[1] > psnrs[2]
+
+
+def test_rate_control_hits_target():
+    f = _frame(h=128, w=128)
+    for target in (3e4, 1e5, 4e5):
+        qp, enc = codec.rate_control(
+            jnp.asarray(f), jnp.zeros((16, 16), jnp.float32),
+            jnp.float32(target))
+        # within 25% (or pinned at the QP boundary when unreachable)
+        at_bound = (float(qp.max()) >= codec.QP_MAX - 0.6 or
+                    float(qp.min()) <= codec.QP_MIN + 0.6)
+        assert at_bound or abs(float(enc.bits) - target) / target < 0.25
+
+
+def test_per_block_qp_prioritizes_region():
+    """Lower QP on a region must raise its fidelity vs elsewhere."""
+    f = jnp.asarray(_frame(h=128, w=128))
+    qp = np.full((16, 16), 48.0, np.float32)
+    qp[4:10, 4:10] = 20.0
+    rec, _ = codec.roundtrip(f, jnp.asarray(qp))
+    err = np.abs(np.asarray(rec) - np.asarray(f))
+    roi = err[32:80, 32:80].mean()
+    rest = np.concatenate([err[:32].ravel(), err[80:].ravel()]).mean()
+    assert roi < 0.5 * rest
+
+
+@hypothesis.given(
+    qp1=st.floats(min_value=20, max_value=50),
+    dqp=st.floats(min_value=0.5, max_value=15),
+    seed=st.integers(min_value=0, max_value=10),
+)
+@hypothesis.settings(deadline=None, max_examples=15)
+def test_property_rate_decreases_with_qp(qp1, dqp, seed):
+    f = jnp.asarray(_frame(seed))
+    b1 = float(codec.encode(f, jnp.full((8, 8), qp1)).bits)
+    b2 = float(codec.encode(f, jnp.full((8, 8), min(qp1 + dqp, 51.0))).bits)
+    assert b2 <= b1 + 1e-3
+
+
+@hypothesis.given(code=st.integers(min_value=0, max_value=(1 << 12) - 1),
+                  cell=st.sampled_from([3, 4, 6, 8]))
+@hypothesis.settings(deadline=None, max_examples=25)
+def test_property_glyph_roundtrip_clean(code, cell):
+    g = glyph_pattern(code, cell)
+    got, margin = decode_glyph(g, cell)
+    assert got == code
+    assert margin > 0.9
+
+
+def test_glyph_unreadable_when_blurred_flat():
+    g = np.full((32, 32), 0.5, np.float32)
+    _, margin = decode_glyph(g, 8)
+    assert margin < 0.2
+
+
+def test_glyph_degrades_with_bitrate():
+    """Small glyphs must die at low bitrate but survive high bitrate."""
+    sc = make_scene("document", False, seed=3, h=128, w=128)
+    f = sc.render(0)
+    # cells are jittered per object; test the finest glyph in the scene
+    obj = min(sc.objects, key=lambda o: o.cell)
+    y, x = obj.pos(0)
+    y = int(np.clip(y, 0, sc.h - obj.size)); x = int(np.clip(x, 0, sc.w - obj.size))
+
+    def read_at(bits):
+        _, enc = codec.rate_control(jnp.asarray(f),
+                                    np.zeros((16, 16), np.float32),
+                                    jnp.float32(bits))
+        rx = np.asarray(codec.decode(enc))
+        code, margin = decode_glyph(rx[y:y + obj.size, x:x + obj.size], obj.cell)
+        return code == obj.code and margin > 0.3
+
+    assert read_at(4e5)      # 4000 kbps @10fps equivalent
+    assert not read_at(6e3)  # starved
