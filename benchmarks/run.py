@@ -13,9 +13,9 @@ from benchmarks.common import QUICK
 
 def main() -> None:
     from benchmarks import (bench_confidence, bench_devibench, bench_e2e,
-                            bench_kernels, bench_measurement, bench_overhead,
-                            bench_recapabr, bench_saturation,
-                            bench_zecostream)
+                            bench_fleet, bench_kernels, bench_measurement,
+                            bench_overhead, bench_recapabr,
+                            bench_saturation, bench_zecostream)
     modules = [
         ("fig2_measurement", bench_measurement),
         ("fig3_saturation", bench_saturation),
@@ -26,6 +26,7 @@ def main() -> None:
         ("fig14_15_overhead", bench_overhead),
         ("table2_devibench", bench_devibench),
         ("kernels", bench_kernels),
+        ("fleet", bench_fleet),
     ]
     all_rows = []
     failures = []

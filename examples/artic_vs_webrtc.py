@@ -2,11 +2,13 @@
 
     WebRTC | +ReCapABR | +ZeCoStream | Artic   x   {GCC, BBR}
 
+All eight cells run as ONE fleet call: the sessions advance in lockstep
+ticks with a single batched codec dispatch per tick (repro.core.fleet).
+
 Run:  PYTHONPATH=src python examples/artic_vs_webrtc.py
 """
-import numpy as np
-
-from repro.core.session import QASample, SessionConfig, run_session
+from repro.core.fleet import FleetSession, run_fleet
+from repro.core.session import QASample, SessionConfig
 from repro.net.traces import mobility_trace
 from repro.video.scenes import make_scene
 
@@ -26,16 +28,24 @@ def main():
                    answer_window=3.4)
           for i in range(int(duration / 4) - 2)]
 
+    cells = [(cc, name, flags) for cc in ("gcc", "bbr")
+             for name, flags in SYSTEMS.items()]
+    metrics = run_fleet([
+        FleetSession(scene=scene, qa_samples=qa, trace=trace,
+                     cfg=SessionConfig(duration=duration, cc_kind=cc,
+                                       **flags))
+        for cc, _, flags in cells])
+
     print(f"{'system':20s} {'acc':>6s} {'avg ms':>8s} {'p95 ms':>8s} "
           f"{'Mbps':>6s} {'drops':>6s}")
-    for cc in ("gcc", "bbr"):
-        print(f"--- {cc.upper()} ---")
-        for name, flags in SYSTEMS.items():
-            m = run_session(scene, qa, trace, SessionConfig(
-                duration=duration, cc_kind=cc, **flags))
-            print(f"{name:20s} {m.accuracy:6.2f} {m.avg_latency_ms:8.0f} "
-                  f"{m.p95_latency_ms:8.0f} {m.bandwidth_used / 1e6:6.2f} "
-                  f"{m.dropped_frames:6d}")
+    last_cc = None
+    for (cc, name, _), m in zip(cells, metrics):
+        if cc != last_cc:
+            print(f"--- {cc.upper()} ---")
+            last_cc = cc
+        print(f"{name:20s} {m.accuracy:6.2f} {m.avg_latency_ms:8.0f} "
+              f"{m.p95_latency_ms:8.0f} {m.bandwidth_used / 1e6:6.2f} "
+              f"{m.dropped_frames:6d}")
 
 
 if __name__ == "__main__":

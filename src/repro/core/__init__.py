@@ -1,3 +1,7 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+# The paper's primary contribution — the Artic system: ReCapABR +
+# ZeCoStream + the trace-driven session engines.
+#
+# repro.core.session — one client<->MLLM session as an explicit state
+#   machine (ClientState / ServerState, heapq event queues, step()).
+# repro.core.fleet — N sessions in lockstep ticks with one batched
+#   codec dispatch + one vectorized channel advance per tick.

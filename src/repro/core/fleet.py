@@ -1,0 +1,319 @@
+"""Fleet-scale session engine: N client<->MLLM sessions in one program.
+
+The serial `repro.core.session.run_session` advances one session with a
+per-frame Python loop in which every encode is its own device dispatch.
+This module runs N independent sessions — heterogeneous scenes, traces,
+CC algorithms and system variants (WebRTC / +ReCapABR / +ZeCoStream /
+Artic) — in **lockstep ticks**, batching all device work so a whole
+fleet tick costs two dispatches regardless of N.
+
+Tick architecture
+-----------------
+Every session shares the frame clock (same fps/duration); each tick t:
+
+1. **Client phase** (per session, pure Python/NumPy): deliver due
+   server->client feedback from the session's downlink min-heap, run CC
+   on the vectorized ack stats, ReCapABR (Eq. 1-2), and the ZeCoStream
+   QP surface (Eq. 3-4).  This is `session.client_encode_plan` — exactly
+   the code the serial path runs.
+2. **Batched encode** (one dispatch): the N rendered frames are stacked
+   into a (N, H, W) batch and `codec.rate_control_batch` runs the
+   vmapped QP-offset bisection with per-session targets and QP surfaces.
+3. **Vectorized channel**: `net.channel.ChannelBank` advances all N
+   drop-tail queues against stacked trace arrays with (N,) NumPy ops —
+   shared tick timestamps mean the trace-step boundaries are scalar and
+   only backlogs/budgets/latencies are per-session vectors.
+4. **Batched receive** (one dispatch): `codec.decode_delivered_batch`
+   decodes every delivered frame; sessions with a partial packet drop
+   re-quantize the cached coefficients toward the delivered bits first.
+5. **Server phase** (per session): arrived frames pop off the uplink
+   min-heap into the OracleServer's visual memory, feedback packets are
+   pushed onto the downlink heap with the inference+downlink delay, and
+   conversational QA opens/commits questions.
+
+Event queues
+------------
+In-flight frames (uplink) and feedback packets (downlink) live in
+per-session `heapq` min-heaps keyed on (time, seq) — O(log n) per event,
+with `seq` preserving insertion order for simultaneous events.  The same
+heaps serve the serial wrapper, so fleet and serial execution order are
+identical event for event.
+
+Parity
+------
+Because steps 2 and 4 are vmaps of the exact single-frame jitted
+functions and the ChannelBank mirrors `Channel` op for op, a fleet of N
+sessions reproduces N serial `run_session` calls metric for metric
+(tests/test_fleet.py asserts this at N=4).  The Pallas fused codec
+kernel has a fleet-batched wrapper too
+(`repro.kernels.qp_codec.ops.qp_codec_frames`) — one kernel launch for
+all N frames — benchmarked in benchmarks/bench_fleet.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.confidence import PlattCalibrator
+from repro.core.grounding import detect_cards_batch
+from repro.core.recap_abr import CCOnlyABRBank, ReCapABRBank
+from repro.core.session import (QASample, SessionConfig, SessionMetrics,
+                                SessionState, build_plan,
+                                client_record_send, deliver_feedback,
+                                finalize, make_session_state,
+                                pop_due_arrivals, push_arrival,
+                                server_emit)
+from repro.net.cc import make_cc_bank
+from repro.net.channel import ChannelBank
+from repro.net.traces import Trace
+from repro.video import codec
+from repro.video.scenes import (_PAYLOAD_IDX, _PAYLOAD_WEIGHTS, GLYPH_GRID,
+                                Scene)
+
+
+class _LazyFrames:
+    """A decoded (N, H, W) batch left on device until first read.
+
+    Arrival events queue a per-session getter; the single device->host
+    transfer happens at the first server ingestion — by which point the
+    asynchronously dispatched decode has long finished.  On that first
+    read the batch is sliced into per-session row copies and both the
+    device array and the host batch are released, so a congested
+    channel with long-in-flight frames pins one (H, W) frame per
+    arrival (as the serial path does), not whole (N, H, W) batches."""
+
+    __slots__ = ("dev", "_keys", "_rows")
+
+    def __init__(self, dev):
+        self.dev = dev
+        self._keys = []
+        self._rows = None
+
+    def _materialize(self) -> None:
+        if self._rows is None:
+            batch = np.asarray(self.dev)
+            self._rows = {k: batch[k].copy() for k in self._keys}
+            self.dev = None
+
+    def getter(self, k: int):
+        self._keys.append(k)
+
+        def fetch() -> np.ndarray:
+            self._materialize()
+            return self._rows.pop(k)
+        return fetch
+
+
+def _ingest_batched(states: List[SessionState],
+                    due: List[Tuple[int, float, np.ndarray]]) -> None:
+    """Tick-batched server ingestion: what OracleServer.ingest does per
+    frame, with the full-frame work (card detection) and the per-object
+    glyph decoding (grouped by glyph geometry) run as stacked array ops
+    across every frame ingested this tick.  Float-op ordering matches
+    the serial path, so results are identical to per-session ingestion.
+    """
+    if not due:
+        return
+    frames = np.stack([f for _, _, f in due])
+    boxes_all = detect_cards_batch(frames)
+
+    # group every (frame, object) patch by glyph geometry
+    groups = {}  # (size, cell) -> [patches], [(item, obj_idx)]
+    metas = []
+    for i, (k, t_cap, frame) in enumerate(due):
+        srv = states[k].server.server
+        frame_idx = int(round(t_cap * srv.cfg.fps))
+        epoch = srv.scene.epoch(frame_idx)
+        metas.append((srv, epoch))
+        for oi, obj in enumerate(srv.scene.objects):
+            y0, x0, y1, x1 = obj.bbox(frame_idx)
+            # integer clamp == the serial path's np.clip on int coords
+            y0 = min(max(y0, 0), srv.scene.h - obj.size)
+            x0 = min(max(x0, 0), srv.scene.w - obj.size)
+            patches, owners = groups.setdefault((obj.size, obj.cell),
+                                                ([], []))
+            patches.append(frame[y0:y0 + obj.size, x0:x0 + obj.size])
+            owners.append((i, oi))
+
+    # one vectorized decode_glyph per geometry group
+    results = {}  # (item, obj_idx) -> (code, margin)
+    for (size, cell), (patches, owners) in groups.items():
+        p = np.stack(patches)[:, :GLYPH_GRID * cell, :GLYPH_GRID * cell]
+        cells = p.reshape(len(patches), GLYPH_GRID, cell, GLYPH_GRID,
+                          cell).mean(axis=(2, 4))
+        lo = cells.min(axis=(1, 2))
+        hi = cells.max(axis=(1, 2))
+        thresh = 0.5 * (lo + hi)
+        denom = np.maximum(hi - lo, 1e-6)
+        margin = np.clip(
+            np.abs(cells - thresh[:, None, None])
+            / (0.5 * denom)[:, None, None], 0, 1).mean(axis=(1, 2))
+        # matches serial float64 promotion: float(mean) * float(contrast)
+        margin = (margin.astype(np.float64)
+                  * np.clip((hi - lo) / 0.5, 0, 1).astype(np.float64))
+        hard = cells.reshape(len(patches), -1)[:, _PAYLOAD_IDX] > \
+            thresh[:, None]
+        codes = (hard * _PAYLOAD_WEIGHTS).sum(axis=1)
+        for g, owner in enumerate(owners):
+            results[owner] = (int(codes[g]), float(margin[g]))
+
+    # apply per-frame updates in arrival order (matches serial ingest)
+    for i, (k, t_cap, _) in enumerate(due):
+        srv, epoch = metas[i]
+        srv.frames_seen += 1
+        margins = []
+        for oi in range(len(srv.scene.objects)):
+            code, margin = results[(i, oi)]
+            margins.append(margin)
+            best = srv.memory.get((oi, epoch), (0.0, -1))
+            if margin > best[0]:
+                srv.memory[(oi, epoch)] = (margin, code)
+        srv.last_margins = margins or [0.0]
+        srv.predictor.observe(t_cap, boxes_all[i])
+
+
+@dataclasses.dataclass
+class FleetSession:
+    """Spec for one fleet member; members may differ in everything but
+    fps, duration and frame size."""
+    scene: Scene
+    qa_samples: List[QASample]
+    trace: Trace
+    cfg: SessionConfig
+    calibrator: Optional[PlattCalibrator] = None
+
+
+class Fleet:
+    """N lockstep sessions with batched codec + vectorized channel."""
+
+    def __init__(self, sessions: Sequence[FleetSession]):
+        if not sessions:
+            raise ValueError("fleet needs at least one session")
+        self.specs = list(sessions)
+        cfg0 = self.specs[0].cfg
+        hw0 = (self.specs[0].scene.h, self.specs[0].scene.w)
+        for s in self.specs:
+            if (s.cfg.fps, s.cfg.duration) != (cfg0.fps, cfg0.duration):
+                raise ValueError(
+                    "fleet sessions must share fps and duration")
+            if (s.scene.h, s.scene.w) != hw0:
+                raise ValueError("fleet sessions must share frame size")
+            if s.cfg.rc_probe_stride != cfg0.rc_probe_stride:
+                raise ValueError(
+                    "fleet sessions must share rc_probe_stride")
+        self._probe_stride = cfg0.rc_probe_stride
+        # last tick timestamp: arrivals past it can never be ingested,
+        # so their getters are not queued (keeps _LazyFrames batches
+        # from being pinned by events that will never fire)
+        self._t_last = (int(cfg0.duration * cfg0.fps) - 1) * (1.0 / cfg0.fps)
+        self.states: List[SessionState] = [
+            make_session_state(s.scene, s.qa_samples, s.cfg, s.calibrator)
+            for s in self.specs]
+        for st in self.states:
+            # CC/ABR advance through the vectorized banks below; the
+            # per-session objects would otherwise sit stale and mislead
+            st.client.cc = None
+            st.client.abr = None
+        self.bank = ChannelBank([s.trace for s in self.specs])
+        self.n = len(self.specs)
+        # vectorized CC / ABR: sessions grouped by algorithm, each group
+        # advanced by one bank call per tick (same math as the scalar
+        # objects the serial path uses)
+        self._cc_groups = []
+        for kind in sorted({s.cfg.cc_kind for s in self.specs}):
+            idx = np.asarray([k for k, s in enumerate(self.specs)
+                              if s.cfg.cc_kind == kind])
+            self._cc_groups.append((idx, make_cc_bank(kind, len(idx))))
+        self._abr_groups = []
+        recap = np.asarray([k for k, s in enumerate(self.specs)
+                            if s.cfg.use_recap])
+        if len(recap):
+            self._abr_groups.append((recap, ReCapABRBank(
+                [self.specs[k].cfg.tau for k in recap],
+                [self.specs[k].cfg.gamma for k in recap])))
+        follow = np.asarray([k for k, s in enumerate(self.specs)
+                             if not s.cfg.use_recap])
+        if len(follow):
+            self._abr_groups.append((follow, CCOnlyABRBank(len(follow))))
+
+    # ------------------------------------------------------------------
+    def tick(self, t: float) -> None:
+        """Advance every session by one frame interval."""
+        # client phase: feedback delivery per session, then CC + ABR for
+        # the whole fleet as grouped (M,) array ops
+        acks = self.bank.ack_stats_arrays()
+        for st in self.states:
+            deliver_feedback(st, t)
+        conf = np.asarray([st.client.confidence for st in self.states])
+        b_hat = np.empty(self.n)
+        for idx, cc_bank in self._cc_groups:
+            b_hat[idx] = cc_bank.estimate(
+                {key: val[idx] for key, val in acks.items()})
+        rate = np.empty(self.n)
+        for idx, abr_bank in self._abr_groups:
+            rate[idx] = abr_bank.update(conf[idx], b_hat[idx])
+        plans = [build_plan(st, t, float(rate[k]))
+                 for k, st in enumerate(self.states)]
+
+        # one dispatch: vmapped rate-controlled encode of the whole fleet
+        frames = np.stack([p.frame for p in plans])
+        qp_shapes = np.stack([p.qp_shape for p in plans])
+        targets = np.asarray([p.target_bits for p in plans], np.float32)
+        _, enc = codec.rate_control_batch(frames, qp_shapes, targets,
+                                          probe_stride=self._probe_stride)
+        bits = np.asarray(enc.bits, np.float64)
+
+        # vectorized channel: N queues advance together
+        rep = self.bank.send_frames(t, bits)
+        for k, st in enumerate(self.states):
+            client_record_send(st, float(bits[k]), float(rep.latency[k]))
+
+        # one dispatch: decode what each uplink delivered (partial drops
+        # re-quantize the cached coefficients toward the delivered bits).
+        # The requantize pass only compiles in when some frame actually
+        # needs it, and the decoded batch stays on device — frames are
+        # first read by server ingestion one or more ticks later, so the
+        # transfer is deferred (LazyFrames) and the decode compute
+        # overlaps the per-session Python below.
+        finite = np.isfinite(rep.latency)
+        needs = finite & rep.dropped & (rep.bits_delivered < rep.bits_sent)
+        if needs.any():
+            delivered = np.maximum(rep.bits_delivered, 1e3).astype(np.float32)
+            rx = _LazyFrames(codec.decode_delivered_batch(
+                enc, qp_shapes, delivered, needs,
+                probe_stride=self._probe_stride))
+        else:
+            rx = _LazyFrames(codec.decode_batch(enc))
+
+        for k, st in enumerate(self.states):
+            # skip arrivals landing after the final tick: the serial path
+            # queues (and never reads) them; queuing their getters here
+            # would pin the tick's whole decoded batch until teardown
+            if finite[k] and t + float(rep.latency[k]) <= self._t_last:
+                push_arrival(st, t, float(rep.latency[k]), rx.getter(k))
+
+        # server phase: ingestion batched across all sessions, then the
+        # per-session feedback/QA emission
+        due = [(k, t_cap, frame)
+               for k, st in enumerate(self.states)
+               for t_cap, frame in pop_due_arrivals(st, t)]
+        _ingest_batched(self.states, due)
+        for st in self.states:
+            server_emit(st, t)
+
+    def run(self) -> List[SessionMetrics]:
+        cfg0 = self.specs[0].cfg
+        n_frames = int(cfg0.duration * cfg0.fps)
+        dt = 1.0 / cfg0.fps
+        for i in range(n_frames):
+            self.tick(i * dt)
+        return [finalize(st, self.bank.reports_for(k))
+                for k, st in enumerate(self.states)]
+
+
+def run_fleet(sessions: Sequence[FleetSession]) -> List[SessionMetrics]:
+    """Run N sessions to completion; returns per-session SessionMetrics
+    in input order."""
+    return Fleet(sessions).run()

@@ -87,6 +87,30 @@ class TrajectoryPredictor:
 # --------------------------------------------------------------------------
 # Detector-based server grounding (benchmark scale)
 # --------------------------------------------------------------------------
+def split_runs(idx: np.ndarray, min_gap: int = 4):
+    """Split a sorted index array into (start, end) runs at gaps."""
+    brk = np.flatnonzero(np.diff(idx) > min_gap)
+    starts = np.concatenate(([0], brk + 1))
+    ends = np.concatenate((brk, [len(idx) - 1]))
+    return [(int(idx[s]), int(idx[e])) for s, e in zip(starts, ends)]
+
+
+def _boxes_from_mask(mask: np.ndarray, row_runs, min_size: int
+                     ) -> List[Box]:
+    """Greedy connected-ish split: cluster columns by projection gaps
+    within each (r0, r1) row run."""
+    boxes: List[Box] = []
+    for r0, r1 in row_runs:
+        sub = mask[r0:r1 + 1]
+        cidx = np.where(sub.any(axis=0))[0]
+        if len(cidx) == 0:
+            continue
+        for c0, c1 in split_runs(cidx):
+            if (r1 - r0) >= min_size and (c1 - c0) >= min_size:
+                boxes.append((float(r0), float(c0), float(r1), float(c1)))
+    return boxes
+
+
 def detect_cards(frame: np.ndarray, min_size: int = 8,
                  bright: float = 0.75) -> List[Box]:
     """Find bright card regions (the glyph carriers) by row/col projection.
@@ -96,31 +120,53 @@ def detect_cards(frame: np.ndarray, min_size: int = 8,
     mask = frame > bright
     if mask.sum() < min_size * min_size:
         return []
-    # greedy connected-ish split: cluster columns by gaps in the projection
     rows = np.where(mask.any(axis=1))[0]
     cols = np.where(mask.any(axis=0))[0]
     if len(rows) == 0 or len(cols) == 0:
         return []
-    boxes: List[Box] = []
+    return _boxes_from_mask(mask, split_runs(rows), min_size)
 
-    def split_runs(idx: np.ndarray, min_gap: int = 4):
-        runs, start = [], idx[0]
-        for a, b in zip(idx[:-1], idx[1:]):
-            if b - a > min_gap:
-                runs.append((start, a))
-                start = b
-        runs.append((start, idx[-1]))
-        return runs
 
-    for r0, r1 in split_runs(rows):
-        sub = mask[r0:r1 + 1]
-        cidx = np.where(sub.any(axis=0))[0]
-        if len(cidx) == 0:
+def _merge_runs(starts: np.ndarray, ends: np.ndarray, min_gap: int = 4):
+    """Merge mask-transition runs separated by gaps <= min_gap — the
+    same clustering `split_runs` applies to a nonzero-index array."""
+    runs = [(int(starts[0]), int(ends[0]))]
+    for s, e in zip(starts[1:], ends[1:]):
+        if s - runs[-1][1] > min_gap:
+            runs.append((int(s), int(e)))
+        else:
+            runs[-1] = (runs[-1][0], int(e))
+    return runs
+
+
+def detect_cards_batch(frames: np.ndarray, min_size: int = 8,
+                       bright: float = 0.75) -> List[List[Box]]:
+    """`detect_cards` over a stacked (M, H, W) batch.
+
+    The full-frame thresholding, projections, and row-run transitions
+    run as single array ops across the batch (the fleet engine's
+    tick-batched ingestion); only the per-run column work stays per
+    item.  Results are identical to mapping `detect_cards` over the
+    frames (a nonempty row projection implies a nonempty column
+    projection, so the serial path's separate cols check is subsumed)."""
+    M, H, _ = frames.shape
+    masks = frames > bright
+    sums = masks.sum(axis=(1, 2))
+    rows_any = np.zeros((M, H + 2), np.int8)
+    rows_any[:, 1:-1] = masks.any(axis=2)
+    d = np.diff(rows_any, axis=1)
+    sm, sr = np.nonzero(d == 1)    # run starts, grouped by frame
+    em, er = np.nonzero(d == -1)   # run ends (exclusive)
+    bound_s = np.searchsorted(sm, np.arange(M + 1))
+    out: List[List[Box]] = []
+    for m in range(M):
+        b0, b1 = bound_s[m], bound_s[m + 1]
+        if b1 == b0 or sums[m] < min_size * min_size:
+            out.append([])
             continue
-        for c0, c1 in split_runs(cidx):
-            if (r1 - r0) >= min_size and (c1 - c0) >= min_size:
-                boxes.append((float(r0), float(c0), float(r1), float(c1)))
-    return boxes
+        out.append(_boxes_from_mask(
+            masks[m], _merge_runs(sr[b0:b1], er[b0:b1] - 1), min_size))
+    return out
 
 
 # --------------------------------------------------------------------------

@@ -16,6 +16,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 
 @dataclasses.dataclass
 class ReCapABR:
@@ -56,4 +58,40 @@ class CCOnlyABR:
     def update(self, confidence: float, bw_estimate: float) -> float:
         del confidence
         self.rate = max(bw_estimate, self.min_rate)
+        return self.rate
+
+
+# --------------------------------------------------------------------------
+# Vectorized banks: Eq. 1-2 elementwise over (M,) session arrays, for the
+# fleet engine.  Same arithmetic as the scalar classes above (per-session
+# tau; gamma=2 keeps |delta|^(gamma-1) an exact no-op power).
+# --------------------------------------------------------------------------
+class ReCapABRBank:
+    def __init__(self, taus, gammas, min_rate: float = 150e3,
+                 init_rate: float = 1e6):
+        self.tau = np.asarray(taus, np.float64)
+        self.gamma = np.asarray(gammas, np.float64)
+        self.min_rate = min_rate
+        self.rate = np.full(len(self.tau), init_rate)
+
+    def update(self, confidence: np.ndarray, bw_estimate: np.ndarray
+               ) -> np.ndarray:
+        delta = (self.tau - confidence) / self.tau
+        w = delta * np.abs(delta) ** (self.gamma - 1.0)
+        r = np.minimum(bw_estimate,
+                       self.rate + w * (bw_estimate - self.rate))
+        self.rate = np.maximum(r, self.min_rate)
+        return self.rate
+
+
+class CCOnlyABRBank:
+    def __init__(self, m: int, min_rate: float = 150e3,
+                 init_rate: float = 1e6):
+        self.min_rate = min_rate
+        self.rate = np.full(m, init_rate)
+
+    def update(self, confidence: np.ndarray, bw_estimate: np.ndarray
+               ) -> np.ndarray:
+        del confidence
+        self.rate = np.maximum(bw_estimate, self.min_rate)
         return self.rate

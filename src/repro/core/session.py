@@ -22,8 +22,9 @@ System variants (paper §7 baselines) come from two switches:
 """
 from __future__ import annotations
 
-import bisect
 import dataclasses
+import heapq
+import itertools
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -31,7 +32,7 @@ import numpy as np
 from repro.core.confidence import ConfidenceHead, PlattCalibrator
 from repro.core.grounding import TrajectoryPredictor, detect_cards
 from repro.core.recap_abr import CCOnlyABR, ReCapABR
-from repro.core.zecostream import TimedBoxes, ZeCoStream
+from repro.core.zecostream import TimedBoxes, ZeCoStream, zero_surface
 from repro.net.cc import make_cc
 from repro.net.channel import Channel
 from repro.net.traces import Trace
@@ -64,6 +65,11 @@ class SessionConfig:
     downlink_delay: float = 0.05    # feedback packet delay (tiny payload)
     feedback_period: float = 0.5    # server feedback cadence (s)
     readable_margin: float = 0.35   # detector margin for a confident read
+    # rate-control bisection probe stride: 1 = exact (default); s probes
+    # 1/s^2 of the blocks per iteration (final encode stays exact) — a
+    # fleet-scale throughput knob, applied identically in serial and
+    # fleet execution so the two paths stay bit-identical to each other
+    rc_probe_stride: int = 1
     seed: int = 0
 
 
@@ -189,123 +195,262 @@ class SessionMetrics:
         return float(np.mean(lat < ms)) if len(lat) else 0.0
 
 
+# ==========================================================================
+# State-machine session engine
+#
+# The per-frame loop is decomposed into explicit dataclass states plus
+# phase functions, so the same transition logic drives both the serial
+# `run_session` wrapper below and the vectorized fleet engine
+# (repro.core.fleet), which interleaves a batched codec dispatch between
+# the client and receiver phases:
+#
+#   client_encode_plan(state, t, ack)   # feedback -> CC -> ABR -> QP plan
+#       |        (codec.rate_control / rate_control_batch)
+#   client_record_send(state, rep)      # uplink accounting
+#       |        (codec.decode / decode_delivered_batch)
+#   push_arrival(state, t, latency, rx) # uplink in-flight event queue
+#   server_tick(state, t)               # ingest -> feedback -> QA
+#
+# Event queues (uplink arrivals, downlink feedback) are heapq min-heaps
+# keyed on (time, seq): O(log n) per push, with seq preserving the
+# insertion order of simultaneous events (what the old stable sort did).
+# ==========================================================================
+@dataclasses.dataclass
+class EncodePlan:
+    """What the client wants encoded this tick."""
+    frame: np.ndarray        # (H, W) rendered source frame
+    qp_shape: np.ndarray     # (H//8, W//8) relative QP surface
+    target_bits: float       # rate budget for this frame
+
+
+@dataclasses.dataclass
+class ClientState:
+    """Uplink-side state: CC / ABR / ZeCoStream plus the downlink
+    feedback queue and the client-side metric accumulators."""
+    cc: object
+    abr: object
+    zeco: ZeCoStream
+    confidence: float = 0.5   # belief before the first feedback arrives
+    # min-heap of (t_recv, seq, confidence, TimedBoxes) in-flight feedback
+    feedbacks: List[Tuple[float, int, float, Optional[TimedBoxes]]] = \
+        dataclasses.field(default_factory=list)
+    rates: List[float] = dataclasses.field(default_factory=list)
+    confs: List[float] = dataclasses.field(default_factory=list)
+    latencies: List[float] = dataclasses.field(default_factory=list)
+    zeco_engaged: int = 0
+    bits_total: float = 0.0
+
+
+@dataclasses.dataclass
+class ServerState:
+    """MLLM-side state: visual memory / tracks / the open question, plus
+    the uplink in-flight queue and QA bookkeeping."""
+    server: OracleServer
+    # min-heap of (t_arrival, seq, t_capture, frame) in-flight frames
+    arrivals: List[Tuple[float, int, float, np.ndarray]] = \
+        dataclasses.field(default_factory=list)
+    next_feedback_t: float = 0.0
+    qa_sorted: List[QASample] = dataclasses.field(default_factory=list)
+    qa_i: int = 0
+    qa_results: List[bool] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class SessionState:
+    """Everything one client<->server session evolves over time."""
+    scene: Scene
+    cfg: SessionConfig
+    client: ClientState
+    server: ServerState
+    channel: Optional[Channel] = None   # owned by ChannelBank in fleet mode
+    seq: itertools.count = dataclasses.field(default_factory=itertools.count)
+
+    @property
+    def frame_hw(self) -> Tuple[int, int]:
+        return (self.scene.h, self.scene.w)
+
+
+def make_session_state(scene: Scene, qa_samples: List[QASample],
+                       cfg: SessionConfig,
+                       calibrator: Optional[PlattCalibrator] = None,
+                       channel: Optional[Channel] = None) -> SessionState:
+    client = ClientState(
+        cc=make_cc(cfg.cc_kind),
+        abr=(ReCapABR(tau=cfg.tau, gamma=cfg.gamma) if cfg.use_recap
+             else CCOnlyABR()),
+        zeco=ZeCoStream())
+    server = ServerState(
+        server=OracleServer(scene, cfg, calibrator),
+        qa_sorted=sorted(qa_samples, key=lambda q: q.t_ask))
+    return SessionState(scene=scene, cfg=cfg, client=client, server=server,
+                        channel=channel)
+
+
+def deliver_feedback(state: SessionState, t: float) -> None:
+    """1. deliver pending server->client feedback."""
+    c = state.client
+    while c.feedbacks and c.feedbacks[0][0] <= t:
+        _, _, c.confidence, boxes_fb = heapq.heappop(c.feedbacks)
+        if boxes_fb is not None:
+            c.zeco.on_feedback(boxes_fb)
+
+
+def build_plan(state: SessionState, t: float, rate: float) -> EncodePlan:
+    """4. render + ZeCoStream QP surface for an already-chosen bitrate."""
+    cfg, c = state.cfg, state.client
+    c.rates.append(rate)
+    i = int(round(t * cfg.fps))
+    frame = state.scene.render(i)
+    if cfg.use_zeco:
+        qp_shape, engaged = c.zeco.qp_shape(t, state.frame_hw, rate,
+                                            c.confidence, cfg.tau)
+        c.zeco_engaged += int(engaged)
+    else:
+        qp_shape = zero_surface(state.scene.h // 8, state.scene.w // 8)
+    return EncodePlan(frame=frame, qp_shape=np.asarray(qp_shape),
+                      target_bits=rate * (1.0 / cfg.fps))
+
+
+def client_encode_plan(state: SessionState, t: float, ack: Dict
+                       ) -> EncodePlan:
+    """Client phase: deliver due feedback, run CC + ABR, shape QPs.
+
+    (The fleet engine runs the same three sub-phases with CC and ABR
+    advanced by the vectorized banks in net.cc / core.recap_abr.)"""
+    deliver_feedback(state, t)
+    c = state.client
+    # 2. CC estimate from channel acks
+    b_hat = c.cc.estimate(ack)
+    # 3. ReCapABR (Eq. 1-2) or CC-follow
+    rate = c.abr.update(c.confidence, b_hat)
+    return build_plan(state, t, rate)
+
+
+def client_record_send(state: SessionState, enc_bits: float,
+                       latency: float) -> None:
+    """Uplink accounting after the encoded frame is handed to the channel."""
+    state.client.bits_total += enc_bits
+    state.client.latencies.append(latency)
+
+
+def push_arrival(state: SessionState, t: float, latency: float,
+                 rx: np.ndarray) -> None:
+    """Queue a decoded frame for server ingestion at its arrival time."""
+    heapq.heappush(state.server.arrivals,
+                   (t + latency, next(state.seq), t, rx))
+
+
+def pop_due_arrivals(state: SessionState, t: float
+                     ) -> List[Tuple[float, np.ndarray]]:
+    """Drain (t_capture, frame) pairs that have arrived by t, in arrival
+    order.  A queued frame may be a zero-arg callable: the fleet engine
+    defers device->host materialization of the decoded batch until first
+    ingestion."""
+    due = []
+    sv = state.server
+    while sv.arrivals and sv.arrivals[0][0] <= t:
+        _, _, t_cap, rx = heapq.heappop(sv.arrivals)
+        due.append((t_cap, rx() if callable(rx) else rx))
+    return due
+
+
+def server_emit(state: SessionState, t: float) -> None:
+    """Post-ingestion server phase: emit feedback, progress QA."""
+    cfg, sv, c = state.cfg, state.server, state.client
+    # 7. server emits feedback at its cadence
+    if t >= sv.next_feedback_t and sv.server.frames_seen:
+        conf, fb = sv.server.feedback(t)
+        t_recv = t + cfg.inference_delay + cfg.downlink_delay
+        heapq.heappush(c.feedbacks, (t_recv, next(state.seq), conf, fb))
+        sv.next_feedback_t = t + cfg.feedback_period
+    # 8. conversational QA: a question opens at t_ask (the server grounds
+    # the queried region from then on) and the response is committed at
+    # t_ask + answer_window
+    if (sv.server.active_question is None and sv.qa_i < len(sv.qa_sorted)
+            and sv.qa_sorted[sv.qa_i].t_ask <= t):
+        sv.server.active_question = sv.qa_sorted[sv.qa_i]
+        sv.qa_i += 1
+    q = sv.server.active_question
+    if q is not None and t >= q.t_ask + q.answer_window:
+        sv.qa_results.append(sv.server.answer(q))
+        sv.server.active_question = None
+    c.confs.append(c.confidence)
+
+
+def server_tick(state: SessionState, t: float) -> None:
+    """Server phase: ingest arrived frames, emit feedback, progress QA.
+    (The fleet engine runs the same two sub-phases, with ingestion
+    batched across all sessions of a tick.)"""
+    # 6. server ingests frames that have arrived by now
+    for t_cap, rx in pop_due_arrivals(state, t):
+        state.server.server.ingest(t_cap, rx)
+    server_emit(state, t)
+
+
+def step(state: SessionState, t: float) -> SessionState:
+    """One frame tick of the serial state machine.
+
+    All evolving session state lives in (and is returned through) `state`;
+    the fleet engine runs the same phases with the codec and channel calls
+    batched across sessions."""
+    plan = client_encode_plan(state, t, state.channel.ack_stats())
+    _, enc = codec.rate_control(plan.frame, plan.qp_shape,
+                                np.float32(plan.target_bits),
+                                probe_stride=state.cfg.rc_probe_stride)
+    bits = float(enc.bits)
+    # 5. ship over the uplink
+    rep = state.channel.send_frame(t, bits)
+    client_record_send(state, bits, rep.latency)
+    if np.isfinite(rep.latency):
+        # receiver decodes the (possibly partially dropped) frame
+        if rep.dropped and rep.bits_delivered < rep.bits_sent:
+            # partial loss: re-quantize the cached coefficients toward the
+            # delivered budget (no second DCT + full bisection)
+            enc2 = codec.requantize(
+                enc.coeffs, enc.qp_blocks, plan.qp_shape,
+                np.float32(max(rep.bits_delivered, 1e3)),
+                probe_stride=state.cfg.rc_probe_stride)
+            rx = codec.decode(enc2)
+        else:
+            rx = codec.decode(enc)
+        push_arrival(state, t, rep.latency, np.asarray(rx))
+    server_tick(state, t)
+    return state
+
+
+def finalize(state: SessionState, reports) -> SessionMetrics:
+    """Flush open QA and assemble SessionMetrics from the final state."""
+    cfg, sv, c = state.cfg, state.server, state.client
+    # flush: commit any open question and ask the rest at session end
+    if sv.server.active_question is not None:
+        sv.qa_results.append(sv.server.answer(sv.server.active_question))
+        sv.server.active_question = None
+    while sv.qa_i < len(sv.qa_sorted):
+        sv.qa_results.append(sv.server.answer(sv.qa_sorted[sv.qa_i]))
+        sv.qa_i += 1
+    return SessionMetrics(
+        latencies=c.latencies,
+        accuracy=(float(np.mean(sv.qa_results)) if sv.qa_results else 1.0),
+        n_qa=len(sv.qa_results),
+        avg_bitrate=c.bits_total / cfg.duration,
+        bandwidth_used=sum(r.bits_sent for r in reports) / cfg.duration,
+        confidences=c.confs,
+        rates=c.rates,
+        zeco_engaged_frames=c.zeco_engaged,
+        qa_results=sv.qa_results,
+        dropped_frames=sum(r.dropped for r in reports),
+    )
+
+
 def run_session(scene: Scene, qa_samples: List[QASample], trace: Trace,
                 cfg: SessionConfig,
                 calibrator: Optional[PlattCalibrator] = None
                 ) -> SessionMetrics:
-    channel = Channel(trace)
-    cc = make_cc(cfg.cc_kind)
-    abr = (ReCapABR(tau=cfg.tau, gamma=cfg.gamma) if cfg.use_recap
-           else CCOnlyABR())
-    zeco = ZeCoStream()
-    server = OracleServer(scene, cfg, calibrator)
-
-    frame_hw = (scene.h, scene.w)
+    """Serial compatibility wrapper: one session through the state machine."""
+    state = make_session_state(scene, qa_samples, cfg, calibrator,
+                               channel=Channel(trace))
     n_frames = int(cfg.duration * cfg.fps)
     dt = 1.0 / cfg.fps
-
-    # event queues: (time, payload)
-    arrivals: List[Tuple[float, float, np.ndarray]] = []  # (t_arr, t_cap, frame)
-    feedbacks: List[Tuple[float, float, TimedBoxes]] = []  # (t_recv, conf, boxes)
-    next_feedback_t = 0.0
-
-    confidence = 0.5  # client's current belief (before first feedback)
-    boxes_fb: Optional[TimedBoxes] = None
-    latencies, confs, rates = [], [], []
-    zeco_engaged = 0
-    bits_total = 0.0
-
-    qa_sorted = sorted(qa_samples, key=lambda q: q.t_ask)
-    qa_i, qa_results = 0, []
-
     for i in range(n_frames):
-        t = i * dt
-
-        # 1. deliver pending server->client feedback
-        while feedbacks and feedbacks[0][0] <= t:
-            _, confidence, boxes_fb = feedbacks.pop(0)
-            if boxes_fb is not None:
-                zeco.on_feedback(boxes_fb)
-
-        # 2. CC estimate from channel acks
-        b_hat = cc.estimate(channel.ack_stats())
-
-        # 3. ReCapABR (Eq. 1-2) or CC-follow
-        rate = abr.update(confidence, b_hat)
-        rates.append(rate)
-
-        # 4. encode: ZeCoStream QP surface when engaged, else uniform
-        frame = scene.render(i)
-        if cfg.use_zeco:
-            qp_shape, engaged = zeco.qp_shape(t, frame_hw, rate,
-                                              confidence, cfg.tau)
-            zeco_engaged += int(engaged)
-        else:
-            qp_shape = np.zeros((scene.h // 8, scene.w // 8), np.float32)
-        target_bits = rate * dt
-        qp_blocks, enc = codec.rate_control(
-            frame, np.asarray(qp_shape), np.float32(target_bits))
-        bits_total += float(enc.bits)
-
-        # 5. ship over the uplink
-        rep = channel.send_frame(t, float(enc.bits))
-        latencies.append(rep.latency)
-        if np.isfinite(rep.latency):
-            # receiver decodes the (possibly partially dropped) frame
-            if rep.dropped and rep.bits_delivered < rep.bits_sent:
-                # re-encode at the delivered rate to emulate partial loss
-                qp2, enc2 = codec.rate_control(
-                    frame, np.asarray(qp_shape),
-                    np.float32(max(rep.bits_delivered, 1e3)))
-                rx = codec.decode(enc2)
-            else:
-                rx = codec.decode(enc)
-            arrivals.append((t + rep.latency, t, np.asarray(rx)))
-            arrivals.sort(key=lambda e: e[0])
-
-        # 6. server ingests frames that have arrived by now
-        while arrivals and arrivals[0][0] <= t:
-            t_arr, t_cap, rx = arrivals.pop(0)
-            server.ingest(t_cap, rx)
-
-        # 7. server emits feedback at its cadence
-        if t >= next_feedback_t and server.frames_seen:
-            conf, fb = server.feedback(t)
-            t_recv = t + cfg.inference_delay + cfg.downlink_delay
-            feedbacks.append((t_recv, conf, fb))
-            feedbacks.sort(key=lambda e: e[0])
-            next_feedback_t = t + cfg.feedback_period
-
-        # 8. conversational QA: a question opens at t_ask (the server
-        # grounds the queried region from then on) and the response is
-        # committed at t_ask + answer_window
-        if (server.active_question is None and qa_i < len(qa_sorted)
-                and qa_sorted[qa_i].t_ask <= t):
-            server.active_question = qa_sorted[qa_i]
-            qa_i += 1
-        q = server.active_question
-        if q is not None and t >= q.t_ask + q.answer_window:
-            qa_results.append(server.answer(q))
-            server.active_question = None
-        confs.append(confidence)
-
-    # flush: commit any open question and ask the rest at session end
-    if server.active_question is not None:
-        qa_results.append(server.answer(server.active_question))
-        server.active_question = None
-    while qa_i < len(qa_sorted):
-        qa_results.append(server.answer(qa_sorted[qa_i]))
-        qa_i += 1
-
-    return SessionMetrics(
-        latencies=latencies,
-        accuracy=float(np.mean(qa_results)) if qa_results else 1.0,
-        n_qa=len(qa_results),
-        avg_bitrate=bits_total / cfg.duration,
-        bandwidth_used=sum(r.bits_sent for r in channel.reports) / cfg.duration,
-        confidences=confs,
-        rates=rates,
-        zeco_engaged_frames=zeco_engaged,
-        qa_results=qa_results,
-        dropped_frames=sum(r.dropped for r in channel.reports),
-    )
+        step(state, i * dt)
+    return finalize(state, state.channel.reports)

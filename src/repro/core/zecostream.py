@@ -19,6 +19,7 @@ protects the background for visual memory.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import List, Optional, Sequence, Tuple
 
 import jax
@@ -30,14 +31,36 @@ from repro.video.codec import QP_MAX, QP_MIN
 Box = Tuple[float, float, float, float]  # (y0, x0, y1, x1) pixels
 
 
-def importance_map(boxes: Sequence[Box], frame_hw: Tuple[int, int],
-                   patch: int = 64, mu: float = 0.5) -> np.ndarray:
-    """Eq. 3 over the patch grid. Empty boxes -> all-zeros (uniform low)."""
+@functools.lru_cache(maxsize=64)
+def zero_surface(nby: int, nbx: int) -> np.ndarray:
+    """Cached all-zeros relative QP surface (the disengaged path would
+    otherwise allocate one per session per tick)."""
+    out = np.zeros((nby, nbx), np.float32)
+    out.setflags(write=False)  # shared via the lru_cache
+    return out
+
+
+@functools.lru_cache(maxsize=64)
+def _patch_centers(frame_hw: Tuple[int, int], patch: int):
+    """Cached (yy, xx) patch-center grids (rebuilt identically per call
+    otherwise — the fleet engine evaluates Eq. 3 every session, every
+    tick)."""
     H, W = frame_hw
     gy, gx = H // patch, W // patch
     cy = (np.arange(gy) + 0.5) * patch
     cx = (np.arange(gx) + 0.5) * patch
     yy, xx = np.meshgrid(cy, cx, indexing="ij")
+    yy.setflags(write=False)  # shared via the lru_cache
+    xx.setflags(write=False)
+    return yy, xx
+
+
+def importance_map(boxes: Sequence[Box], frame_hw: Tuple[int, int],
+                   patch: int = 64, mu: float = 0.5) -> np.ndarray:
+    """Eq. 3 over the patch grid. Empty boxes -> all-zeros (uniform low)."""
+    H, W = frame_hw
+    gy, gx = H // patch, W // patch
+    yy, xx = _patch_centers((H, W), patch)
     if not boxes:
         return np.zeros((gy, gx), np.float32)
     diag = float(np.hypot(H, W))
@@ -118,10 +141,10 @@ class ZeCoStream:
         nby, nbx = H // 8, W // 8
         if (not self.should_engage(rate_bps, confidence, tau)
                 or self.last_feedback is None):
-            return np.zeros((nby, nbx), np.float32), False
+            return zero_surface(nby, nbx), False
         boxes = self.last_feedback.at(t)
         if not boxes:
-            return np.zeros((nby, nbx), np.float32), False
+            return zero_surface(nby, nbx), False
         rho = importance_map(boxes, frame_hw, self.patch, self.mu)
         qp = qp_map(rho, self.q_min, self.q_max)
         # expand patch grid -> 8x8 block grid

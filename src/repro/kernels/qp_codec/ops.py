@@ -28,3 +28,24 @@ def qp_codec_frame(frame: jnp.ndarray, qp_blocks: jnp.ndarray, *,
                                 bs=bs, interpret=interpret)
     rec = rec.reshape(nby, nbx, 8, 8).transpose(0, 2, 1, 3).reshape(H, W)
     return rec, jnp.sum(bits)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def qp_codec_frames(frames: jnp.ndarray, qp_blocks: jnp.ndarray, *,
+                    bs: int = 512, interpret=None):
+    """Fleet-batched fused encode+decode: frames (N, H, W), qp
+    (N, H//8, W//8) -> (reconstructions (N, H, W), per-frame bits (N,)).
+
+    All N frames' blocks are flattened into ONE kernel launch, so a whole
+    fleet tick's codec work is a single device dispatch."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    N, H, W = frames.shape
+    nby, nbx = H // 8, W // 8
+    blocks = frames.reshape(N, nby, 8, nbx, 8).transpose(0, 1, 3, 2, 4)
+    blocks = blocks.reshape(N * nby * nbx, 8, 8)
+    rec, bits = qp_codec_blocks(blocks, qp_blocks.reshape(-1),
+                                bs=bs, interpret=interpret)
+    rec = rec.reshape(N, nby, nbx, 8, 8).transpose(0, 1, 3, 2, 4)
+    rec = rec.reshape(N, H, W)
+    return rec, bits.reshape(N, nby * nbx).sum(axis=1)

@@ -103,3 +103,74 @@ class BBR(CongestionControl):
 
 def make_cc(kind: str, **kw) -> CongestionControl:
     return {"gcc": GCC, "bbr": BBR}[kind](**kw)
+
+
+# --------------------------------------------------------------------------
+# Vectorized banks: the same per-tick arithmetic as GCC / BBR, elementwise
+# over (M,) session arrays — the fleet engine groups its sessions by CC
+# kind and advances each group with one bank call per tick.  Results are
+# identical to M serial objects (asserted via the fleet parity test).
+# --------------------------------------------------------------------------
+class GCCBank:
+    def __init__(self, m: int, init_rate: float = 1e6, beta: float = 0.85,
+                 eta: float = 1.05, overuse_thresh: float = 0.010):
+        self.beta, self.eta, self.overuse_thresh = beta, eta, overuse_thresh
+        self.rate = np.full(m, init_rate)
+        self._prev_delay = np.full(m, np.nan)   # nan == "no sample yet"
+        self._capacity = np.full(m, init_rate)
+
+    def estimate(self, ack: Dict) -> np.ndarray:
+        delay = ack["avg_latency"] - ack["min_latency"]
+        grad = np.where(np.isnan(self._prev_delay), 0.0,
+                        delay - self._prev_delay)
+        self._prev_delay = delay
+
+        decrease = ((grad > self.overuse_thresh) | (ack["loss"] > 0.1)
+                    | (delay > 0.3))
+        hold = ~decrease & (grad < -self.overuse_thresh / 2)
+
+        measured = np.maximum(ack["delivery_rate"], 1e4)
+        app_limited = ack["app_limited"] > 0.5
+        self._capacity = np.where(
+            app_limited, self._capacity,
+            0.7 * self._capacity + 0.3 * measured)
+        dec_rate = np.where(app_limited,
+                            np.minimum(self.rate, 1.2 * self._capacity),
+                            self.beta * measured)
+        inc_cap = np.where(app_limited, 2.0 * self._capacity + 1e5,
+                           1.5 * measured + 1e5)
+        inc_rate = np.minimum(self.rate * self.eta, inc_cap)
+        rate = np.where(decrease, dec_rate,
+                        np.where(hold, self.rate, inc_rate))
+        self.rate = np.clip(rate, 5e4, 2e7)
+        return self.rate
+
+
+class BBRBank:
+    GAIN_CYCLE = BBR.GAIN_CYCLE
+
+    def __init__(self, m: int, init_rate: float = 1e6, window: int = 10):
+        self.window = window
+        self._samples = np.full((window, m), -np.inf)
+        self._samples[0] = init_rate
+        self._count = 1
+        self._phase = 0
+
+    def estimate(self, ack: Dict) -> np.ndarray:
+        measured = np.maximum(ack["delivery_rate"], 1e4)
+        btlbw_prev = self._samples.max(axis=0)
+        measured = np.where(ack["app_limited"] > 0.5,
+                            np.maximum(measured, btlbw_prev), measured)
+        # ring append, keeping the last `window` samples
+        self._samples[self._count % self.window] = measured
+        self._count += 1
+        btlbw = self._samples.max(axis=0)
+        gain = self.GAIN_CYCLE[self._phase % len(self.GAIN_CYCLE)]
+        self._phase += 1
+        gain = np.where(ack["avg_latency"] - ack["min_latency"] > 0.25,
+                        min(gain, 0.75), gain)
+        return np.clip(btlbw * gain, 5e4, 2e7)
+
+
+def make_cc_bank(kind: str, m: int):
+    return {"gcc": GCCBank, "bbr": BBRBank}[kind](m)

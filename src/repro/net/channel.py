@@ -11,11 +11,11 @@ manifests in the end-to-end loop.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, NamedTuple
+from typing import Dict, List, NamedTuple, Sequence
 
 import numpy as np
 
-from repro.net.traces import Trace
+from repro.net.traces import Trace, TraceBank
 
 MTU_BITS = 1500 * 8
 QUEUE_PACKETS = 60
@@ -127,3 +127,169 @@ class Channel:
             "loss": float(np.mean([r.dropped for r in recent])),
             "app_limited": app_limited,
         }
+
+
+class BankReport(NamedTuple):
+    """One tick's FrameReports for all N sessions, as (N,) arrays."""
+    send_time: float
+    latency: np.ndarray         # float64, inf where nothing was admitted
+    bits_sent: np.ndarray       # int64
+    bits_delivered: np.ndarray  # int64
+    dropped: np.ndarray         # bool
+    queue_delay: np.ndarray     # float64
+
+
+class ChannelBank:
+    """N drop-tail uplink queues advanced in lockstep with array ops.
+
+    The fleet engine sends every session's frame at the same tick
+    timestamps, so `now` and the trace-step boundaries are shared scalars
+    and every per-session quantity (backlog, budget, latency) is a (N,)
+    NumPy vector — no per-session Python Channel objects on the hot path.
+    The arithmetic mirrors `Channel` operation for operation, so a bank of
+    N queues is numerically identical to N serial channels (asserted by
+    tests/test_fleet.py)."""
+
+    def __init__(self, traces: Sequence[Trace],
+                 queue_packets: int = QUEUE_PACKETS):
+        self.bank = TraceBank.stack(list(traces))
+        self.n = self.bank.n
+        self.queue_packets = queue_packets
+        self.now = 0.0
+        self._queue_bits = np.zeros(self.n)
+        self._queue_pkts = np.zeros(self.n, np.int64)
+        # per-tick history: rectangular because every session sends exactly
+        # one frame per tick
+        self._send_times: List[float] = []
+        self._latency: List[np.ndarray] = []
+        self._bits_sent: List[np.ndarray] = []
+        self._bits_delivered: List[np.ndarray] = []
+        self._dropped: List[np.ndarray] = []
+        self._queue_delay: List[np.ndarray] = []
+
+    # ------------------------------------------------------------------
+    def _drain(self, until: float):
+        """Advance shared time, servicing all backlogs at trace bandwidth."""
+        t = self.now
+        dt = self.bank.dt
+        while t < until:
+            step_end = (np.floor(t / dt + 1e-9) + 1) * dt
+            if step_end <= t + 1e-12:  # float-boundary guard
+                step_end = t + dt
+            step_end = min(until, step_end)
+            budget = self.bank.at(t) * (step_end - t)
+            self._queue_bits = self._queue_bits - np.minimum(
+                budget, self._queue_bits)
+            t = step_end
+        self._queue_pkts = np.ceil(self._queue_bits / MTU_BITS).astype(
+            np.int64)
+        self.now = until
+
+    def _time_to_send(self, t: float, bits: np.ndarray) -> np.ndarray:
+        """Seconds from t until each session's `bits` of backlog depart."""
+        dt = self.bank.dt
+        tt = t
+        remaining = np.asarray(bits, np.float64).copy()
+        out = np.empty(self.n)
+        done = np.zeros(self.n, bool)
+        for _ in range(int(300.0 / dt)):
+            bw = np.maximum(self.bank.at(tt), 1e3)
+            step_end = (np.floor(tt / dt + 1e-9) + 1) * dt
+            if step_end <= tt + 1e-12:  # float-boundary guard
+                step_end = tt + dt
+            budget = bw * (step_end - tt)
+            fin = ~done & (budget >= remaining)
+            out[fin] = tt + remaining[fin] / bw[fin] - t
+            done |= fin
+            if done.all():
+                return out
+            remaining = np.where(done, remaining, remaining - budget)
+            tt = step_end
+        out[~done] = tt - t  # capped at 300 s
+        return out
+
+    def send_frames(self, t: float, bits: np.ndarray) -> BankReport:
+        """Send one frame per session at shared time t (time-ordered)."""
+        bits = np.asarray(bits, np.float64)
+        t = max(t, self.now)
+        self._drain(t)
+        bw_now = np.maximum(self.bank.at(t), 1e3)
+        queue_delay = self._queue_bits / bw_now
+
+        n_pkts = np.maximum(np.ceil(bits / MTU_BITS).astype(np.int64), 1)
+        free = np.maximum(self.queue_packets - self._queue_pkts, 0)
+        admitted_pkts = np.minimum(n_pkts, free)
+        admitted_bits = np.minimum(bits, admitted_pkts * MTU_BITS)
+        dropped = admitted_pkts < n_pkts
+
+        backlog_incl = self._queue_bits + admitted_bits
+        latency = np.where(admitted_pkts > 0,
+                           self._time_to_send(t, backlog_incl), np.inf)
+        self._queue_bits = backlog_incl
+        self._queue_pkts = self._queue_pkts + admitted_pkts
+
+        rep = BankReport(send_time=t, latency=latency,
+                         bits_sent=bits.astype(np.int64),
+                         bits_delivered=admitted_bits.astype(np.int64),
+                         dropped=dropped, queue_delay=queue_delay)
+        self._send_times.append(t)
+        self._latency.append(latency)
+        self._bits_sent.append(rep.bits_sent)
+        self._bits_delivered.append(rep.bits_delivered)
+        self._dropped.append(dropped)
+        self._queue_delay.append(queue_delay)
+        return rep
+
+    # ------------------------------------------------------------------
+    @property
+    def queue_bits(self) -> np.ndarray:
+        return self._queue_bits
+
+    def ack_stats_arrays(self, window: int = 20) -> Dict[str, np.ndarray]:
+        """CC feedback for all N sessions as (N,) arrays, computed with
+        one set of array ops over the rolling (window, N) history —
+        consumed directly by the vectorized CC banks (net.cc)."""
+        if len(self._send_times) < 2:
+            return {"delivery_rate": np.zeros(self.n),
+                    "avg_latency": np.full(self.n, 0.05),
+                    "min_latency": np.full(self.n, 0.05),
+                    "loss": np.zeros(self.n),
+                    "app_limited": np.ones(self.n)}
+        st = self._send_times[-window:]
+        lat = np.stack(self._latency[-window:])                 # (w, N)
+        deliv = np.stack(self._bits_delivered[-window:])
+        drop = np.stack(self._dropped[-window:])
+        qd = np.stack(self._queue_delay[-window:])
+        span = max(st[-1] - st[0], 1e-6)
+        bits = deliv[:-1].sum(axis=0)
+        finite = np.isfinite(lat)
+        cnt = finite.sum(axis=0)
+        # min / loss / app_limited are order-independent reductions, so
+        # they vectorize exactly; the latency *mean* must use the same
+        # pairwise np.mean as the serial path to stay bit-identical
+        avg_lat = np.asarray([float(np.mean(lat[finite[:, k], k]))
+                              if cnt[k] else 1.0 for k in range(self.n)])
+        min_lat = np.where(cnt > 0,
+                           np.where(finite, lat, np.inf).min(axis=0), 0.0)
+        return {"delivery_rate": bits / span,
+                "avg_latency": avg_lat,
+                "min_latency": min_lat,
+                "loss": drop.mean(axis=0),
+                "app_limited": (qd < 0.02).mean(axis=0)}
+
+    def ack_stats(self, window: int = 20) -> List[Dict]:
+        """Per-session CC feedback dicts (serial-compatible view of
+        `ack_stats_arrays`)."""
+        arr = self.ack_stats_arrays(window)
+        return [{key: float(val[k]) for key, val in arr.items()}
+                for k in range(self.n)]
+
+    def reports_for(self, k: int) -> List[FrameReport]:
+        """Materialize session k's history as serial-style FrameReports."""
+        return [FrameReport(send_time=self._send_times[i],
+                            latency=float(self._latency[i][k]),
+                            bits_sent=int(self._bits_sent[i][k]),
+                            bits_delivered=int(self._bits_delivered[i][k]),
+                            dropped=bool(self._dropped[i][k]),
+                            queue_delay=float(self._queue_delay[i][k]))
+                for i in range(len(self._send_times))]

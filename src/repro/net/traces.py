@@ -37,6 +37,43 @@ class Trace:
         return Trace(np.tile(self.bw, reps)[:n], self.dt, self.name)
 
 
+@dataclasses.dataclass
+class TraceBank:
+    """N traces stacked for vectorized lookup.
+
+    All member traces must share `dt`; the per-trace bandwidth arrays are
+    concatenated (they may have different lengths) and a shared-timestamp
+    lookup becomes one fancy-indexing op returning a (N,) vector — the
+    stacked-array substrate the fleet's ChannelBank advances against."""
+    concat: np.ndarray     # all bw arrays back to back (bits/s)
+    offsets: np.ndarray    # (N,) start index of each trace in `concat`
+    lengths: np.ndarray    # (N,) length of each trace
+    dt: float
+
+    @classmethod
+    def stack(cls, traces: List["Trace"]) -> "TraceBank":
+        if not traces:
+            raise ValueError("TraceBank needs at least one trace")
+        dts = {t.dt for t in traces}
+        if len(dts) != 1:
+            raise ValueError(f"all traces must share dt, got {sorted(dts)}")
+        lengths = np.asarray([len(t.bw) for t in traces], np.int64)
+        offsets = np.concatenate([[0], np.cumsum(lengths[:-1])])
+        concat = np.concatenate([np.asarray(t.bw, np.float64)
+                                 for t in traces])
+        return cls(concat=concat, offsets=offsets, lengths=lengths,
+                   dt=traces[0].dt)
+
+    @property
+    def n(self) -> int:
+        return len(self.lengths)
+
+    def at(self, t: float) -> np.ndarray:
+        """Bandwidth of every trace at shared time t -> (N,) bits/s."""
+        k = int(t / self.dt)
+        return self.concat[self.offsets + (k % self.lengths)]
+
+
 def static_trace(duration: float = 60.0, dt: float = 0.05,
                  mbps: float = 5.0, jitter: float = 0.03,
                  seed: int = 0) -> Trace:

@@ -13,6 +13,7 @@ Everything is seeded and pure-numpy so benchmark videos are reproducible.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -35,8 +36,12 @@ SCENE_CATEGORIES = [
 ]
 
 
+@functools.lru_cache(maxsize=4096)
 def glyph_pattern(code: int, cell: int) -> np.ndarray:
-    """Render a GLYPH_GRID^2-cell glyph; corners are anchors (1,0,0,1)."""
+    """Render a GLYPH_GRID^2-cell glyph; corners are anchors (1,0,0,1).
+
+    Cached per (code, cell): scenes re-stamp the same glyph every frame
+    within a code epoch, and callers never mutate the returned array."""
     bits = [(code >> i) & 1 for i in range(GLYPH_BITS)]
     grid = np.zeros((GLYPH_GRID, GLYPH_GRID), np.float32)
     anchors = {(0, 0): 1, (0, GLYPH_GRID - 1): 0,
@@ -49,7 +54,17 @@ def glyph_pattern(code: int, cell: int) -> np.ndarray:
             else:
                 grid[r, c] = bits[bi]
                 bi += 1
-    return np.kron(grid, np.ones((cell, cell), np.float32))
+    out = np.kron(grid, np.ones((cell, cell), np.float32))
+    out.setflags(write=False)  # shared via the lru_cache
+    return out
+
+
+# payload-cell flat indices and their bit weights (corners are anchors)
+_PAYLOAD_IDX = np.asarray(
+    [r * GLYPH_GRID + c for r in range(GLYPH_GRID) for c in range(GLYPH_GRID)
+     if (r, c) not in ((0, 0), (0, GLYPH_GRID - 1), (GLYPH_GRID - 1, 0),
+                       (GLYPH_GRID - 1, GLYPH_GRID - 1))], np.int64)
+_PAYLOAD_WEIGHTS = (1 << np.arange(GLYPH_BITS, dtype=np.int64))
 
 
 def decode_glyph(patch: np.ndarray, cell: int) -> Tuple[int, float]:
@@ -63,19 +78,12 @@ def decode_glyph(patch: np.ndarray, cell: int) -> Tuple[int, float]:
     cells = p.reshape(GLYPH_GRID, cell, GLYPH_GRID, cell).mean(axis=(1, 3))
     lo, hi = cells.min(), cells.max()
     thresh = 0.5 * (lo + hi)
-    hard = (cells > thresh).astype(np.int32)
     denom = max(hi - lo, 1e-6)
     margin = float(np.clip(np.abs(cells - thresh) / (0.5 * denom), 0, 1).mean())
     # low-contrast patches are unreadable regardless of threshold geometry
     margin *= float(np.clip((hi - lo) / 0.5, 0, 1))
-    code, bi = 0, 0
-    for r in range(GLYPH_GRID):
-        for c in range(GLYPH_GRID):
-            if (r, c) in ((0, 0), (0, GLYPH_GRID - 1),
-                          (GLYPH_GRID - 1, 0), (GLYPH_GRID - 1, GLYPH_GRID - 1)):
-                continue
-            code |= int(hard[r, c]) << bi
-            bi += 1
+    hard = (cells.reshape(-1)[_PAYLOAD_IDX] > thresh)
+    code = int((_PAYLOAD_WEIGHTS * hard).sum())
     return code, margin
 
 
@@ -137,10 +145,19 @@ class Scene:
         tex = rng.standard_normal((self.h // 8, self.w // 8)).astype(np.float32)
         tex = np.kron(tex, np.ones((8, 8), np.float32))
         self._bg = np.clip(self._bg + self.texture_amp * 0.15 * tex, 0.05, 0.95)
+        self._render_key = None
+        self._render_cache = None
 
     def render(self, t: int) -> np.ndarray:
-        frame = self._bg.copy()
+        # frame content is fully determined by (code epoch, object
+        # positions): static scenes re-render identical frames every tick
+        # (until the epoch rolls), so memoize the last one.  Callers
+        # treat rendered frames as read-only.
         epoch = self.epoch(t)
+        key = (epoch, tuple(obj.pos(t) for obj in self.objects))
+        if key == self._render_key:
+            return self._render_cache
+        frame = self._bg.copy()
         for obj in self.objects:
             y, x = obj.pos(t)
             g = glyph_pattern(obj.code_at(epoch), obj.cell)
@@ -153,6 +170,8 @@ class Scene:
             y1, x1 = min(y + s + pad, self.h), min(x + s + pad, self.w)
             frame[y0:y1, x0:x1] = 0.9
             frame[y:y + s, x:x + s] = 0.15 + 0.7 * g
+        frame.setflags(write=False)  # shared via the cache from here on
+        self._render_key, self._render_cache = key, frame
         return frame
 
 

@@ -1,0 +1,70 @@
+"""Import hypothesis if available, else a single-example no-op fallback.
+
+Several test modules use hypothesis property tests.  The library is an
+optional dev dependency (see requirements-dev.txt); when it is missing
+the suite must still collect and run, so this shim provides `given` /
+`settings` / `strategies` stand-ins that run each property test once on
+a representative example instead of skipping the whole module at import
+time.
+
+Usage (in test modules):
+    from _hypothesis_compat import HAVE_HYPOTHESIS, hypothesis, st
+"""
+from __future__ import annotations
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import functools
+    import types
+    import warnings
+
+    HAVE_HYPOTHESIS = False
+    warnings.warn(
+        "hypothesis is not installed: property tests run a single "
+        "representative example each (pip install -r requirements-dev.txt "
+        "for full property coverage)", RuntimeWarning)
+
+    class _Strategy:
+        """Carries one representative example for the fallback run."""
+
+        def __init__(self, example):
+            self.example = example
+
+    def _floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(0.5 * (float(min_value) + float(max_value)))
+
+    def _integers(min_value=0, max_value=1, **_kw):
+        return _Strategy(int((int(min_value) + int(max_value)) // 2))
+
+    def _sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(elements[len(elements) // 2])
+
+    def _booleans():
+        return _Strategy(True)
+
+    st = types.SimpleNamespace(floats=_floats, integers=_integers,
+                               sampled_from=_sampled_from,
+                               booleans=_booleans)
+
+    def _given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper():
+                return fn(**{name: s.example
+                             for name, s in strategies.items()})
+            # pytest must see the zero-arg signature, not the wrapped
+            # function's parameters (it would treat them as fixtures)
+            del wrapper.__wrapped__
+            return wrapper
+        return deco
+
+    def _settings(**_kw):
+        def deco(fn):
+            return fn
+        return deco
+
+    hypothesis = types.SimpleNamespace(given=_given, settings=_settings)

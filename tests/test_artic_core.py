@@ -1,7 +1,6 @@
 """Artic core tests: ReCapABR (Eq. 1-2), ZeCoStream (Eq. 3-4),
 grounding-then-prediction, confidence calibration, end-to-end session."""
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_compat import hypothesis, st  # noqa: hypothesis optional
 import numpy as np
 import pytest
 

@@ -1,0 +1,197 @@
+"""Fleet engine tests: serial<->batched parity, batched codec entry
+points, vectorized channel bank, and batched ingestion helpers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fleet import Fleet, FleetSession, run_fleet
+from repro.core.grounding import detect_cards, detect_cards_batch
+from repro.core.session import QASample, SessionConfig, run_session
+from repro.kernels.qp_codec.ops import qp_codec_frame, qp_codec_frames
+from repro.net.channel import Channel, ChannelBank
+from repro.net.traces import (elevator_trace, fluctuating_trace,
+                              mobility_trace, static_trace)
+from repro.video import codec
+from repro.video.scenes import make_scene
+
+
+def _spec(k: int, duration: float = 12.0) -> FleetSession:
+    """Heterogeneous fleet member: scene category, motion, trace family,
+    CC algorithm and system variant all differ across k."""
+    sc = make_scene(["retail", "street", "office", "document"][k % 4],
+                    k % 2 == 1, seed=k, code_period_frames=40)
+    tr = [static_trace(duration, mbps=0.5, seed=k),          # starved
+          fluctuating_trace(duration, switches_per_min=6, seed=k),
+          mobility_trace("driving", duration, seed=k),
+          elevator_trace(duration)][k % 4]
+    qa = [QASample(t_ask=4.0 + 3.0 * i, obj_idx=i % len(sc.objects),
+                   answer_window=2.5) for i in range(2)]
+    cfg = SessionConfig(duration=duration, cc_kind=["gcc", "bbr"][k % 2],
+                        use_recap=k % 2 == 0, use_zeco=k < 2, seed=k)
+    return FleetSession(sc, qa, tr, cfg)
+
+
+# --------------------------------------------------------------------------
+# Tentpole acceptance: fleet(N=4) reproduces serial run_session per session
+# --------------------------------------------------------------------------
+def test_fleet_n4_parity_with_serial():
+    specs = [_spec(k) for k in range(4)]
+    serial = [run_session(s.scene, s.qa_samples, s.trace, s.cfg)
+              for s in specs]
+    batched = run_fleet([_spec(k) for k in range(4)])
+    for a, b in zip(serial, batched):
+        assert a.accuracy == b.accuracy
+        assert a.n_qa == b.n_qa and a.qa_results == b.qa_results
+        assert a.latencies == b.latencies
+        assert a.avg_bitrate == b.avg_bitrate
+        assert a.bandwidth_used == b.bandwidth_used
+        assert a.rates == b.rates
+        assert a.confidences == b.confidences
+        assert a.zeco_engaged_frames == b.zeco_engaged_frames
+        assert a.dropped_frames == b.dropped_frames
+
+
+def test_fleet_rejects_mismatched_members():
+    a = _spec(0)
+    b = _spec(1)
+    b.cfg.duration = a.cfg.duration + 10.0
+    with pytest.raises(ValueError):
+        Fleet([a, b])
+    c = _spec(1)
+    c.cfg.rc_probe_stride = 4
+    with pytest.raises(ValueError):
+        Fleet([a, c])
+
+
+# --------------------------------------------------------------------------
+# Batched codec entry points
+# --------------------------------------------------------------------------
+def _frames(n=3, hw=64):
+    return np.stack([make_scene("retail", False, seed=s, h=hw, w=hw)
+                     .render(0) for s in range(n)]).astype(np.float32)
+
+
+def test_rate_control_batch_equals_vmapped_rate_control():
+    frames = _frames()
+    shapes = np.zeros((3, 8, 8), np.float32)
+    targets = np.asarray([2e4, 6e4, 1.5e5], np.float32)
+    qb, eb = codec.rate_control_batch(frames, shapes, targets)
+    qv, ev = jax.jit(jax.vmap(
+        lambda f, q, t: codec.rate_control(f, q, t)))(frames, shapes,
+                                                      targets)
+    assert np.array_equal(np.asarray(qb), np.asarray(qv))
+    assert np.array_equal(np.asarray(eb.coeffs), np.asarray(ev.coeffs))
+    assert np.array_equal(np.asarray(eb.bits), np.asarray(ev.bits))
+
+
+def test_rate_control_batch_matches_serial_per_sample():
+    frames = _frames()
+    shapes = np.zeros((3, 8, 8), np.float32)
+    targets = np.asarray([2e4, 6e4, 1.5e5], np.float32)
+    qb, eb = codec.rate_control_batch(frames, shapes, targets)
+    for i in range(3):
+        qs, es = codec.rate_control(jnp.asarray(frames[i]),
+                                    jnp.asarray(shapes[i]),
+                                    jnp.float32(targets[i]))
+        assert np.array_equal(np.asarray(qb[i]), np.asarray(qs))
+        assert float(eb.bits[i]) == float(es.bits)
+
+
+def test_encode_decode_batch_match_single():
+    frames = _frames()
+    qp = np.full((3, 8, 8), 32.0, np.float32)
+    eb = codec.encode_batch(frames, qp)
+    rb = codec.decode_batch(eb)
+    for i in range(3):
+        es = codec.encode(jnp.asarray(frames[i]), jnp.asarray(qp[i]))
+        assert np.array_equal(np.asarray(eb.coeffs[i]),
+                              np.asarray(es.coeffs))
+        assert np.array_equal(np.asarray(rb[i]),
+                              np.asarray(codec.decode(es)))
+
+
+def test_requantize_moves_bits_toward_delivered_budget():
+    frame = _frames(1)[0]
+    shape = np.zeros((8, 8), np.float32)
+    _, enc = codec.rate_control(jnp.asarray(frame), jnp.asarray(shape),
+                                jnp.float32(2e5))
+    full_bits = float(enc.bits)
+    target = 0.4 * full_bits
+    enc2 = codec.requantize(enc.coeffs, enc.qp_blocks, jnp.asarray(shape),
+                            jnp.float32(target))
+    assert float(enc2.bits) < full_bits
+    assert abs(float(enc2.bits) - target) / target < 0.3
+    # and the requantized frame still decodes to a valid image
+    rec = np.asarray(codec.decode(enc2))
+    assert rec.shape == frame.shape and np.all((rec >= 0) & (rec <= 1))
+
+
+def test_decode_delivered_batch_is_decode_when_nothing_dropped():
+    frames = _frames()
+    shapes = np.zeros((3, 8, 8), np.float32)
+    targets = np.asarray([5e4, 5e4, 5e4], np.float32)
+    _, enc = codec.rate_control_batch(frames, shapes, targets)
+    none = np.zeros(3, bool)
+    out = codec.decode_delivered_batch(enc, shapes, targets, none)
+    assert np.array_equal(np.asarray(out), np.asarray(codec.decode_batch(enc)))
+
+
+def test_qp_codec_frames_matches_per_frame_kernel():
+    frames = _frames(3, hw=64)
+    qp = np.stack([np.full((8, 8), q, np.float32) for q in (24, 32, 44)])
+    rec_b, bits_b = qp_codec_frames(frames, qp, bs=16, interpret=True)
+    for i in range(3):
+        rec_s, bits_s = qp_codec_frame(frames[i], qp[i], bs=16,
+                                       interpret=True)
+        np.testing.assert_allclose(np.asarray(rec_b[i]), np.asarray(rec_s),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(float(bits_b[i]), float(bits_s),
+                                   rtol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# Vectorized channel bank
+# --------------------------------------------------------------------------
+def test_channel_bank_matches_serial_channels():
+    rng = np.random.default_rng(0)
+    traces = [static_trace(20.0, mbps=0.4, seed=1),
+              fluctuating_trace(20.0, switches_per_min=8, seed=2),
+              elevator_trace(20.0)]
+    serial = [Channel(t) for t in traces]
+    bank = ChannelBank(traces)
+    for i in range(120):
+        t = i * 0.1
+        # interleave ack queries exactly as a session tick would
+        acks_s = [ch.ack_stats() for ch in serial]
+        acks_b = bank.ack_stats()
+        for a, b in zip(acks_s, acks_b):
+            assert a == b
+        bits = rng.uniform(2e3, 6e4, size=3)
+        reps = [ch.send_frame(t, float(bits[k]))
+                for k, ch in enumerate(serial)]
+        rep = bank.send_frames(t, bits)
+        for k, r in enumerate(reps):
+            assert r.latency == rep.latency[k]
+            assert r.bits_sent == rep.bits_sent[k]
+            assert r.bits_delivered == rep.bits_delivered[k]
+            assert r.dropped == rep.dropped[k]
+            assert r.queue_delay == rep.queue_delay[k]
+    for k, ch in enumerate(serial):
+        assert bank.reports_for(k) == ch.reports
+
+
+# --------------------------------------------------------------------------
+# Batched ingestion helpers
+# --------------------------------------------------------------------------
+def test_detect_cards_batch_matches_serial():
+    frames = []
+    for s in range(8):
+        sc = make_scene(["retail", "lawn", "street", "document"][s % 4],
+                        s % 2 == 1, seed=s, h=64, w=64)
+        f = sc.render(s)
+        rec, _ = codec.roundtrip(jnp.asarray(f),
+                                 jnp.full((8, 8), 20.0 + 3 * s, jnp.float32))
+        frames.append(np.asarray(rec))
+    frames = np.stack(frames)
+    assert detect_cards_batch(frames) == [detect_cards(f) for f in frames]

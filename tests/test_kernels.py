@@ -1,7 +1,6 @@
 """Pallas kernel validation (interpret mode) vs pure-jnp oracles:
 shape/dtype sweeps + hypothesis property tests on kernel invariants."""
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_compat import hypothesis, st  # noqa: hypothesis optional
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,8 +1,7 @@
 """Property tests for the two recurrent mixers against naive step-by-step
 oracles: the chunked SSD algorithm and the RG-LRU associative scan must
 match exact sequential recurrences for random shapes/chunk sizes."""
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_compat import hypothesis, st  # noqa: hypothesis optional
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,6 +1,5 @@
 """Codec simulator tests incl. hypothesis property tests on RD invariants."""
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_compat import hypothesis, st  # noqa: hypothesis optional
 import jax.numpy as jnp
 import numpy as np
 import pytest
