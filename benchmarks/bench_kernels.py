@@ -15,7 +15,7 @@ import numpy as np
 from benchmarks.common import Row
 from repro.kernels.flash_attention import ops as fa_ops
 from repro.kernels.flash_decode import ops as fd_ops
-from repro.kernels.qp_codec.ops import qp_codec_frame
+from repro.kernels.qp_codec.ops import qp_codec_frame, zeco_codec_frames
 
 
 def _time(fn, *args, reps=3, **kw):
@@ -61,6 +61,17 @@ def run(quick: bool = True):
     us = _time(qp_codec_frame, frame, qp, bs=256, interpret=True)
     rows.append(Row("kernel.qp_codec.interp", us,
                     f"blocks={32 * 32},fused_dct_quant_rate"))
+
+    # fused zeco codec: boxes -> importance -> QP -> bisected encode,
+    # 4 frames per launch
+    frames4 = jax.random.uniform(key, (4, 256, 256))
+    boxes = jnp.asarray(np.tile([[60., 60., 140., 140.],
+                                 [10., 180., 70., 240.]], (4, 1, 1)))
+    us = _time(zeco_codec_frames, frames4, boxes, jnp.full((4,), 2),
+               jnp.ones(4, bool), jnp.full((4,), 8e4), interpret=True)
+    rows.append(Row("kernel.zeco_codec_fused.interp", us,
+                    f"frames=4,blocks={4 * 32 * 32},"
+                    "box_to_bits_one_vmem_pass"))
 
     for r in rows:
         print(f"[kernels] {r.csv()}")

@@ -4,28 +4,155 @@ vs context-agnostic standard encoding at the industry bitrate ladder.
 Also derives the two headline numbers: accuracy preserved at ~290 Kbps
 (paper: 0.39 -> 0.60) and the bitrate needed for 0.9 accuracy (paper:
 3171 -> 908 Kbps).
+
+Fleet-scale additions: per-tick phase breakdown (plan / encode / channel
+/ decode / server) of the vectorized fleet engine at N in {1, 8, 32},
+and the plan-phase speedup of the ZeCoStreamBank's single jitted
+dispatch over the old per-session plan loop.
 """
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
 from benchmarks.common import Row, shared_benchmark, timed
-from repro.core.zecostream import importance_map, qp_map
+from repro.core.fleet import Fleet, FleetSession
+from repro.core.session import SessionConfig
+from repro.core.zecostream import (TimedBoxes, ZeCoStream, ZeCoStreamBank,
+                                   reference_surface)
 from repro.devibench.pipeline import accuracy_at_bitrate
+from repro.net.traces import static_trace
+from repro.video.scenes import make_scene
 
 LADDER = [200, 290, 400, 710, 968, 1700]
+FLEET_SIZES = [1, 8, 32]
 
 
 def _zeco_shape(sc, rec):
     """Oracle-grounded QP surface (boxes around the queried object —
     what the MLLM feedback converges to)."""
     obj = sc.objects[rec.obj_idx]
-    rho = importance_map([obj.bbox(rec.t_frame)], (sc.h, sc.w), patch=64)
-    qp = qp_map(rho)
-    rep = 64 // 8
-    qp_blocks = np.repeat(np.repeat(qp, rep, axis=0), rep, axis=1)
-    qp_blocks = qp_blocks[: sc.h // 8, : sc.w // 8]
-    return (qp_blocks - qp_blocks.mean()).astype(np.float32)
+    return reference_surface([obj.bbox(rec.t_frame)], (sc.h, sc.w),
+                             patch=64)
+
+
+# --------------------------------------------------------------------------
+# Fleet plan-phase instrumentation
+# --------------------------------------------------------------------------
+def _fleet_specs(n: int, duration: float):
+    """Context-aware members on starved uplinks, so ZeCoStream engages."""
+    specs = []
+    for k in range(n):
+        sc = make_scene(["retail", "street", "office", "document"][k % 4],
+                        k % 2 == 1, seed=k, code_period_frames=40)
+        tr = static_trace(duration, mbps=0.35 + 0.05 * (k % 4), seed=k)
+        cfg = SessionConfig(duration=duration, use_recap=k % 2 == 0,
+                            use_zeco=True, cc_kind=["gcc", "bbr"][k % 2],
+                            seed=k)
+        specs.append(FleetSession(sc, [], tr, cfg))
+    return specs
+
+
+def _engaged_state(n: int, hw=(256, 256)):
+    """Identical engaged feedback state in N legacy objects + one bank."""
+    rng = np.random.default_rng(0)
+    legacy = [ZeCoStream() for _ in range(n)]
+    bank = ZeCoStreamBank(n, hw)
+    for k in range(n):
+        times = np.linspace(0.0, 1.5, 6)
+        rows = []
+        for _ in times:
+            row = []
+            for _ in range(3):
+                y0, x0 = rng.uniform(0, 200, 2)
+                row.append((y0, x0, y0 + 40, x0 + 40))
+            rows.append(row)
+        fb = TimedBoxes(times=times, boxes=rows)
+        legacy[k].on_feedback(fb)
+        bank.on_feedback(k, fb)
+    rates = np.full(n, 0.6e6)   # below trigger -> engaged
+    confs = np.full(n, 0.4)
+    return legacy, bank, rates, confs
+
+
+def _pre_bank_plan_step(z, t, hw):
+    """The pre-bank per-session plan step Fleet.tick ran via build_plan:
+    trigger/hysteresis, client-side timestamp matching into a Python box
+    list, then the NumPy Eq. 3/4 composition."""
+    if not z.engage_decision(0.6e6, 0.4):
+        return None
+    boxes = z.last_feedback.at(t)
+    if not boxes:
+        return None
+    return reference_surface(boxes, hw, patch=z.patch, mu=z.mu)
+
+
+def _plan_speedup_rows(quick: bool):
+    """Time the bank's single fleet-wide dispatch against the two
+    per-session plan loops it replaced: the faithful pre-bank NumPy step
+    (`_pre_bank_plan_step`) and the ZeCoStream-object loop (per-session
+    qp_shape calls, now kernel-backed).  Each rep interleaves all three
+    so load swings on the shared box hit them alike; speedups are
+    medians of per-rep ratios (the bench_fleet technique)."""
+    rows = []
+    hw = (256, 256)
+    reps = 30 if quick else 150
+    for n in FLEET_SIZES:
+        legacy, bank, rates, confs = _engaged_state(n, hw)
+        # warmup: compile the surface kernel for both batch shapes
+        [z.qp_shape(0.1, hw, float(rates[k]), float(confs[k]))
+         for k, z in enumerate(legacy)]
+        bank.plan(0.1, rates, confs)
+
+        ts = {"numpy": [], "loop": [], "bank": []}
+        for r in range(reps):
+            t = 0.1 * r
+            t0 = time.perf_counter()
+            for z in legacy:
+                _pre_bank_plan_step(z, t, hw)
+            t1 = time.perf_counter()
+            for k, z in enumerate(legacy):
+                z.qp_shape(t, hw, float(rates[k]), float(confs[k]))
+            t2 = time.perf_counter()
+            bank.plan(t, rates, confs)
+            t3 = time.perf_counter()
+            ts["numpy"].append(t1 - t0)
+            ts["loop"].append(t2 - t1)
+            ts["bank"].append(t3 - t2)
+        med = {k: 1e6 * float(np.median(v)) for k, v in ts.items()}
+        x_np = float(np.median(np.asarray(ts["numpy"])
+                               / np.asarray(ts["bank"])))
+        x_loop = float(np.median(np.asarray(ts["loop"])
+                                 / np.asarray(ts["bank"])))
+        rows.append(Row(
+            f"zeco.plan_speedup@N={n}", med["bank"],
+            f"numpy={med['numpy']:.0f}us,loop={med['loop']:.0f}us,"
+            f"bank={med['bank']:.0f}us,xnumpy{x_np:.1f},xloop{x_loop:.1f}"))
+        print(f"[zeco] plan N={n}: numpy loop {med['numpy']:.0f}us / "
+              f"object loop {med['loop']:.0f}us vs bank "
+              f"{med['bank']:.0f}us ({x_np:.1f}x / {x_loop:.1f}x)")
+    return rows
+
+
+def _fleet_breakdown_rows(quick: bool):
+    """Per-tick wall-clock of each fleet phase at N in {1, 8, 32}."""
+    rows = []
+    duration = 4.0 if quick else 12.0
+    for n in FLEET_SIZES:
+        fleet = Fleet(_fleet_specs(n, duration), profile=True)
+        fleet.run()
+        pt = fleet.phase_times
+        ticks = int(duration * fleet.specs[0].cfg.fps)
+        per_tick = {k: 1e6 * v / ticks for k, v in pt.items()}
+        rows.append(Row(
+            f"fleet.tick_breakdown@N={n}", sum(per_tick.values()),
+            ",".join(f"{k}={per_tick[k]:.0f}us"
+                     for k in ("client", "render", "plan", "encode",
+                               "channel", "decode", "server"))))
+        print(f"[fleet] N={n} per-tick: "
+              + " ".join(f"{k}={per_tick[k]:.0f}us" for k in per_tick))
+    return rows
 
 
 def run(quick: bool = True):
@@ -55,4 +182,7 @@ def run(quick: bool = True):
                     f"zeco={bitrate_for(zeco_acc)}kbps"))
     print(f"[fig11] standard={base_acc} zeco={zeco_acc} "
           "(paper: 0.39->0.60 @290kbps; 0.9 acc at 3171 vs 908 kbps)")
+
+    rows += _plan_speedup_rows(quick)
+    rows += _fleet_breakdown_rows(quick)
     return rows

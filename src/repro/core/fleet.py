@@ -11,11 +11,14 @@ Tick architecture
 -----------------
 Every session shares the frame clock (same fps/duration); each tick t:
 
-1. **Client phase** (per session, pure Python/NumPy): deliver due
-   server->client feedback from the session's downlink min-heap, run CC
-   on the vectorized ack stats, ReCapABR (Eq. 1-2), and the ZeCoStream
-   QP surface (Eq. 3-4).  This is `session.client_encode_plan` — exactly
-   the code the serial path runs.
+1. **Client phase**: deliver due server->client feedback from each
+   session's downlink min-heap (feedback boxes land in the shared
+   `ZeCoStreamBank` as (N, K, B, 4) arrays), then run CC on the
+   vectorized ack stats, ReCapABR (Eq. 1-2) and the ZeCoStream plan
+   (Eq. 3-4) for the WHOLE fleet as (N,) array ops — the QP surfaces for
+   all N sessions come from one jitted bank dispatch
+   (`ZeCoStreamBank.plan`), the same dispatch the serial path runs at
+   N=1 in `session.build_plan`.
 2. **Batched encode** (one dispatch): the N rendered frames are stacked
    into a (N, H, W) batch and `codec.rate_control_batch` runs the
    vmapped QP-offset bisection with per-session targets and QP surfaces.
@@ -52,7 +55,8 @@ all N frames — benchmarked in benchmarks/bench_fleet.py.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -60,11 +64,11 @@ from repro.core.confidence import PlattCalibrator
 from repro.core.grounding import detect_cards_batch
 from repro.core.recap_abr import CCOnlyABRBank, ReCapABRBank
 from repro.core.session import (QASample, SessionConfig, SessionMetrics,
-                                SessionState, build_plan,
-                                client_record_send, deliver_feedback,
-                                finalize, make_session_state,
-                                pop_due_arrivals, push_arrival,
-                                server_emit)
+                                SessionState, client_record_send,
+                                deliver_feedback, finalize,
+                                make_session_state, pop_due_arrivals,
+                                push_arrival, server_emit)
+from repro.core.zecostream import ZeCoStreamBank, rate_control_batch_fused
 from repro.net.cc import make_cc_bank
 from repro.net.channel import ChannelBank
 from repro.net.traces import Trace
@@ -186,9 +190,21 @@ class FleetSession:
 
 
 class Fleet:
-    """N lockstep sessions with batched codec + vectorized channel."""
+    """N lockstep sessions with batched codec + vectorized channel.
 
-    def __init__(self, sessions: Sequence[FleetSession]):
+    `fused_plan=True` routes the plan+encode through
+    `zecostream.rate_control_batch_fused`: the Eq. 3-4 surfaces are
+    computed in-graph from the box arrays and flow straight into the
+    rate-control bisection as one device dispatch (no host-side surface
+    materialization).  `profile=True` accumulates wall-clock per tick
+    phase in `self.phase_times` (seconds): `client` (feedback delivery +
+    CC/ABR), `render` (scene rasterization), `plan` (the ZeCoStream bank
+    dispatch; in fused mode only the host-side decision/selection — the
+    surface kernel is billed to `encode` there, fused into its
+    dispatch), `encode`, `channel`, `decode`, `server`."""
+
+    def __init__(self, sessions: Sequence[FleetSession], *,
+                 fused_plan: bool = False, profile: bool = False):
         if not sessions:
             raise ValueError("fleet needs at least one session")
         self.specs = list(sessions)
@@ -211,13 +227,27 @@ class Fleet:
         self.states: List[SessionState] = [
             make_session_state(s.scene, s.qa_samples, s.cfg, s.calibrator)
             for s in self.specs]
-        for st in self.states:
+        self.n = len(self.specs)
+        # one shared ZeCoStreamBank: every member's context state is a row
+        self.zeco = ZeCoStreamBank(
+            self.n, hw0,
+            tau=[s.cfg.tau for s in self.specs],
+            enabled=[s.cfg.use_zeco for s in self.specs])
+        for k, st in enumerate(self.states):
             # CC/ABR advance through the vectorized banks below; the
             # per-session objects would otherwise sit stale and mislead
             st.client.cc = None
             st.client.abr = None
+            # retarget the N=1 bank from make_session_state at the shared
+            # fleet bank so feedback delivery and metrics hit row k
+            st.client.zeco = self.zeco
+            st.client.zeco_row = k
         self.bank = ChannelBank([s.trace for s in self.specs])
-        self.n = len(self.specs)
+        self._fused = fused_plan
+        self.phase_times: Optional[Dict[str, float]] = (
+            dict(client=0.0, render=0.0, plan=0.0, encode=0.0,
+                 channel=0.0, decode=0.0, server=0.0)
+            if profile else None)
         # vectorized CC / ABR: sessions grouped by algorithm, each group
         # advanced by one bank call per tick (same math as the scalar
         # objects the serial path uses)
@@ -239,10 +269,19 @@ class Fleet:
             self._abr_groups.append((follow, CCOnlyABRBank(len(follow))))
 
     # ------------------------------------------------------------------
+    def _mark(self, phase: str, t0: float) -> float:
+        now = time.perf_counter()
+        if self.phase_times is not None:
+            self.phase_times[phase] += now - t0
+        return now
+
     def tick(self, t: float) -> None:
         """Advance every session by one frame interval."""
-        # client phase: feedback delivery per session, then CC + ABR for
-        # the whole fleet as grouped (M,) array ops
+        # client phase: feedback delivery per session, then CC + ABR +
+        # the ZeCoStream plan for the whole fleet as (N,) array ops — the
+        # QP surfaces for every session come from ONE bank dispatch, with
+        # no per-session Python loop
+        t0 = time.perf_counter()
         acks = self.bank.ack_stats_arrays()
         for st in self.states:
             deliver_feedback(st, t)
@@ -254,21 +293,40 @@ class Fleet:
         rate = np.empty(self.n)
         for idx, abr_bank in self._abr_groups:
             rate[idx] = abr_bank.update(conf[idx], b_hat[idx])
-        plans = [build_plan(st, t, float(rate[k]))
-                 for k, st in enumerate(self.states)]
+        for k, st in enumerate(self.states):
+            st.client.rates.append(float(rate[k]))
+        t0 = self._mark("client", t0)
+        i = int(round(t * self.specs[0].cfg.fps))
+        frames = np.stack([st.scene.render(i) for st in self.states])
+        t0 = self._mark("render", t0)
+        targets = (rate * (1.0 / self.specs[0].cfg.fps)).astype(np.float32)
 
-        # one dispatch: vmapped rate-controlled encode of the whole fleet
-        frames = np.stack([p.frame for p in plans])
-        qp_shapes = np.stack([p.qp_shape for p in plans])
-        targets = np.asarray([p.target_bits for p in plans], np.float32)
-        _, enc = codec.rate_control_batch(frames, qp_shapes, targets,
-                                          probe_stride=self._probe_stride)
+        if self._fused:
+            # fused plan+encode: Eq. 3-4 surfaces are computed inside the
+            # rate-control dispatch straight from the box arrays; they
+            # come back only as a device array for the requantize path
+            boxes, counts, engaged = self.zeco.plan_arrays(t, rate, conf)
+            t0 = self._mark("plan", t0)
+            qp_shapes, _, enc = rate_control_batch_fused(
+                frames, boxes, counts.astype(np.int32), engaged, targets,
+                frame_hw=self.zeco.frame_hw, patch=self.zeco.patch,
+                mu=self.zeco.mu, q_min=self.zeco.q_min,
+                q_max=self.zeco.q_max, probe_stride=self._probe_stride)
+        else:
+            qp_shapes, _ = self.zeco.plan(t, rate, conf)
+            t0 = self._mark("plan", t0)
+            # one dispatch: vmapped rate-controlled encode of the fleet
+            _, enc = codec.rate_control_batch(
+                frames, qp_shapes, targets,
+                probe_stride=self._probe_stride)
         bits = np.asarray(enc.bits, np.float64)
+        t0 = self._mark("encode", t0)
 
         # vectorized channel: N queues advance together
         rep = self.bank.send_frames(t, bits)
         for k, st in enumerate(self.states):
             client_record_send(st, float(bits[k]), float(rep.latency[k]))
+        t0 = self._mark("channel", t0)
 
         # one dispatch: decode what each uplink delivered (partial drops
         # re-quantize the cached coefficients toward the delivered bits).
@@ -293,6 +351,7 @@ class Fleet:
             # would pin the tick's whole decoded batch until teardown
             if finite[k] and t + float(rep.latency[k]) <= self._t_last:
                 push_arrival(st, t, float(rep.latency[k]), rx.getter(k))
+        t0 = self._mark("decode", t0)
 
         # server phase: ingestion batched across all sessions, then the
         # per-session feedback/QA emission
@@ -302,6 +361,7 @@ class Fleet:
         _ingest_batched(self.states, due)
         for st in self.states:
             server_emit(st, t)
+        self._mark("server", t0)
 
     def run(self) -> List[SessionMetrics]:
         cfg0 = self.specs[0].cfg
@@ -313,7 +373,8 @@ class Fleet:
                 for k, st in enumerate(self.states)]
 
 
-def run_fleet(sessions: Sequence[FleetSession]) -> List[SessionMetrics]:
+def run_fleet(sessions: Sequence[FleetSession],
+              **kwargs) -> List[SessionMetrics]:
     """Run N sessions to completion; returns per-session SessionMetrics
-    in input order."""
-    return Fleet(sessions).run()
+    in input order.  kwargs forward to `Fleet` (fused_plan, profile)."""
+    return Fleet(sessions, **kwargs).run()

@@ -50,6 +50,14 @@ class TrackedRegion:
         d = t - t1
         return (b1[0] + vy * d, b1[1] + vx * d, b1[2] + vy * d, b1[3] + vx * d)
 
+    def predict_times(self, times: np.ndarray) -> np.ndarray:
+        """Vectorized `predict` over a (K,) time array -> (K, 4) boxes."""
+        t1, b1 = self.history[-1]
+        vy, vx = self.velocity()
+        d = np.asarray(times, np.float64) - t1
+        shift = np.asarray([vy, vx, vy, vx])
+        return np.asarray(b1, np.float64)[None, :] + d[:, None] * shift
+
 
 class TrajectoryPredictor:
     """Matches observations to tracks (nearest center) and emits TimedBoxes."""
@@ -77,11 +85,23 @@ class TrajectoryPredictor:
 
     def feedback(self, t: float, horizon: float = 1.5, steps: int = 6
                  ) -> TimedBoxes:
-        """Predicted boxes for `steps` future timestamps covering horizon."""
+        """Predicted boxes for `steps` future timestamps covering horizon,
+        emitted directly in the stacked (K, B, 4) array format (one
+        constant-velocity extrapolation op across every track)."""
         times = t + np.linspace(0.0, horizon, steps)
-        boxes = [[tr.predict(float(tt)) for tr in self.tracks]
-                 for tt in times]
-        return TimedBoxes(times=times, boxes=boxes)
+        n = len(self.tracks)
+        if n == 0:
+            return TimedBoxes(times=times,
+                              boxes=np.zeros((steps, 0, 4), np.float32),
+                              counts=np.zeros(steps, np.int32))
+        last_t = np.asarray([tr.history[-1][0] for tr in self.tracks])
+        last_b = np.asarray([tr.history[-1][1] for tr in self.tracks])
+        vel = np.asarray([tr.velocity() for tr in self.tracks])  # (B, 2)
+        shift = vel[:, [0, 1, 0, 1]]                             # (B, 4)
+        d = times[:, None] - last_t[None, :]                     # (K, B)
+        boxes = last_b[None, :, :] + d[:, :, None] * shift[None, :, :]
+        return TimedBoxes(times=times, boxes=boxes.astype(np.float32),
+                          counts=np.full(steps, n, np.int32))
 
 
 # --------------------------------------------------------------------------

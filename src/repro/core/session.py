@@ -32,7 +32,7 @@ import numpy as np
 from repro.core.confidence import ConfidenceHead, PlattCalibrator
 from repro.core.grounding import TrajectoryPredictor, detect_cards
 from repro.core.recap_abr import CCOnlyABR, ReCapABR
-from repro.core.zecostream import TimedBoxes, ZeCoStream, zero_surface
+from repro.core.zecostream import TimedBoxes, ZeCoStreamBank
 from repro.net.cc import make_cc
 from repro.net.channel import Channel
 from repro.net.traces import Trace
@@ -143,8 +143,11 @@ class OracleServer:
                     best = (d, tr)
             if best is not None:
                 times = fb.times
-                boxes = [[best[1].predict(float(tt))] for tt in times]
-                fb = TimedBoxes(times=times, boxes=boxes)
+                fb = TimedBoxes(
+                    times=times,
+                    boxes=best[1].predict_times(times)[:, None, :]
+                    .astype(np.float32),
+                    counts=np.ones(len(times), np.int32))
             return conf, fb
         conf = self.conf_head.from_margin(float(np.mean(self.last_margins)))
         return conf, fb
@@ -226,10 +229,16 @@ class EncodePlan:
 @dataclasses.dataclass
 class ClientState:
     """Uplink-side state: CC / ABR / ZeCoStream plus the downlink
-    feedback queue and the client-side metric accumulators."""
+    feedback queue and the client-side metric accumulators.
+
+    `zeco` is a ZeCoStreamBank row: serial sessions own a bank of size 1;
+    the fleet engine points every member at one shared N-row bank (with
+    `zeco_row` selecting the member's row), so context state always lives
+    in arrays."""
     cc: object
     abr: object
-    zeco: ZeCoStream
+    zeco: ZeCoStreamBank
+    zeco_row: int = 0
     confidence: float = 0.5   # belief before the first feedback arrives
     # min-heap of (t_recv, seq, confidence, TimedBoxes) in-flight feedback
     feedbacks: List[Tuple[float, int, float, Optional[TimedBoxes]]] = \
@@ -237,8 +246,11 @@ class ClientState:
     rates: List[float] = dataclasses.field(default_factory=list)
     confs: List[float] = dataclasses.field(default_factory=list)
     latencies: List[float] = dataclasses.field(default_factory=list)
-    zeco_engaged: int = 0
     bits_total: float = 0.0
+
+    @property
+    def zeco_engaged(self) -> int:
+        return int(self.zeco.engaged_total[self.zeco_row])
 
 
 @dataclasses.dataclass
@@ -278,7 +290,8 @@ def make_session_state(scene: Scene, qa_samples: List[QASample],
         cc=make_cc(cfg.cc_kind),
         abr=(ReCapABR(tau=cfg.tau, gamma=cfg.gamma) if cfg.use_recap
              else CCOnlyABR()),
-        zeco=ZeCoStream())
+        zeco=ZeCoStreamBank(1, (scene.h, scene.w), tau=cfg.tau,
+                            enabled=[cfg.use_zeco]))
     server = ServerState(
         server=OracleServer(scene, cfg, calibrator),
         qa_sorted=sorted(qa_samples, key=lambda q: q.t_ask))
@@ -292,22 +305,22 @@ def deliver_feedback(state: SessionState, t: float) -> None:
     while c.feedbacks and c.feedbacks[0][0] <= t:
         _, _, c.confidence, boxes_fb = heapq.heappop(c.feedbacks)
         if boxes_fb is not None:
-            c.zeco.on_feedback(boxes_fb)
+            c.zeco.on_feedback(c.zeco_row, boxes_fb)
 
 
 def build_plan(state: SessionState, t: float, rate: float) -> EncodePlan:
-    """4. render + ZeCoStream QP surface for an already-chosen bitrate."""
+    """4. render + ZeCoStream QP surface for an already-chosen bitrate.
+
+    The QP surface comes from the session's ZeCoStreamBank at N=1 — the
+    exact dispatch the fleet engine runs for all N rows at once (so the
+    serial and fleet plan phases share one code path)."""
     cfg, c = state.cfg, state.client
     c.rates.append(rate)
     i = int(round(t * cfg.fps))
     frame = state.scene.render(i)
-    if cfg.use_zeco:
-        qp_shape, engaged = c.zeco.qp_shape(t, state.frame_hw, rate,
-                                            c.confidence, cfg.tau)
-        c.zeco_engaged += int(engaged)
-    else:
-        qp_shape = zero_surface(state.scene.h // 8, state.scene.w // 8)
-    return EncodePlan(frame=frame, qp_shape=np.asarray(qp_shape),
+    surfaces, _ = c.zeco.plan(t, np.asarray([rate]),
+                              np.asarray([c.confidence]))
+    return EncodePlan(frame=frame, qp_shape=surfaces[0],
                       target_bits=rate * (1.0 / cfg.fps))
 
 

@@ -15,20 +15,46 @@ the one matching the current timestamp.
 Trigger policy (§3): ZeCoStream engages only when the bitrate is below the
 critical level where accuracy is at risk; otherwise uniform encoding
 protects the background for visual memory.
+
+Array box format
+----------------
+Feedback boxes travel as fixed-capacity stacked arrays rather than Python
+lists, so a whole fleet's context state is a handful of ndarrays:
+
+* one feedback packet (``TimedBoxes``) is ``times (K,) float64`` +
+  ``boxes (K, B, 4) float32`` + ``counts (K,) int32``, where row k holds
+  ``counts[k]`` valid boxes ``(y0, x0, y1, x1)`` in pixels and the
+  remaining ``B - counts[k]`` rows are zero padding;
+* ``ZeCoStreamBank`` stacks N sessions' latest packets into
+  ``(N, K, B, 4)`` boxes + ``(N, K)`` counts + ``(N, K)`` times, with
+  per-session trigger/hysteresis/engaged state as ``(N,)`` arrays.  K and
+  B are capacities that grow (power-of-two) if a packet exceeds them —
+  padding never changes results because distances of masked boxes are
+  +inf under the Eq. 3 min.
+
+Eqs. 3-4 for all N sessions run as ONE jitted mask-over-boxes kernel
+(``surfaces_from_boxes``): no Python loop over boxes or sessions.  The
+legacy per-session ``ZeCoStream`` object routes through the same kernel
+at N=1, so bank and per-session execution are bit-identical (pinned by
+tests/test_zecostream_bank.py); ``importance_map`` / ``qp_map`` /
+``reference_surface`` remain the pure-NumPy semantic reference.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.video import codec
 from repro.video.codec import QP_MAX, QP_MIN
 
 Box = Tuple[float, float, float, float]  # (y0, x0, y1, x1) pixels
+
+FEEDBACK_STEPS = 6  # prediction-horizon timestamps per feedback packet
 
 
 @functools.lru_cache(maxsize=64)
@@ -41,27 +67,57 @@ def zero_surface(nby: int, nbx: int) -> np.ndarray:
 
 
 @functools.lru_cache(maxsize=64)
+def _patch_grid(frame_hw: Tuple[int, int], patch: int) -> Tuple[int, int]:
+    """Ceil-division patch-grid shape: partial trailing patches get their
+    own row/column instead of being silently dropped."""
+    H, W = frame_hw
+    return -(-H // patch), -(-W // patch)
+
+
+@functools.lru_cache(maxsize=64)
 def _patch_centers(frame_hw: Tuple[int, int], patch: int):
     """Cached (yy, xx) patch-center grids (rebuilt identically per call
     otherwise — the fleet engine evaluates Eq. 3 every session, every
-    tick)."""
+    tick).  A partial trailing patch is centered on the strip it actually
+    covers; full patches keep the exact (i + 0.5) * patch centers."""
     H, W = frame_hw
-    gy, gx = H // patch, W // patch
-    cy = (np.arange(gy) + 0.5) * patch
-    cx = (np.arange(gx) + 0.5) * patch
-    yy, xx = np.meshgrid(cy, cx, indexing="ij")
+    gy, gx = _patch_grid(frame_hw, patch)
+
+    def centers(g, size):
+        lo = np.arange(g) * patch
+        hi = np.minimum(lo + patch, size)
+        return 0.5 * (lo + hi)
+
+    yy, xx = np.meshgrid(centers(gy, H), centers(gx, W), indexing="ij")
     yy.setflags(write=False)  # shared via the lru_cache
     xx.setflags(write=False)
     return yy, xx
 
 
+@functools.lru_cache(maxsize=64)
+def _block_to_patch_idx(frame_hw: Tuple[int, int], patch: int):
+    """Static gather indices upsampling a patch grid to the full 8x8-block
+    grid.  `qp[iy][:, ix]` covers every block — including trailing blocks
+    of a partial patch, which the old repeat-then-clip upsample dropped."""
+    H, W = frame_hw
+    iy = (8 * np.arange(H // 8)) // patch
+    ix = (8 * np.arange(W // 8)) // patch
+    iy.setflags(write=False)
+    ix.setflags(write=False)
+    return iy, ix
+
+
 def importance_map(boxes: Sequence[Box], frame_hw: Tuple[int, int],
                    patch: int = 64, mu: float = 0.5) -> np.ndarray:
-    """Eq. 3 over the patch grid. Empty boxes -> all-zeros (uniform low)."""
+    """Eq. 3 over the patch grid (NumPy reference implementation).
+
+    Empty boxes -> all-zeros (uniform low).  The grid uses ceil division,
+    so frames whose H or W is not a patch multiple get a trailing partial
+    row/column instead of losing coverage."""
     H, W = frame_hw
-    gy, gx = H // patch, W // patch
+    gy, gx = _patch_grid(frame_hw, patch)
     yy, xx = _patch_centers((H, W), patch)
-    if not boxes:
+    if not len(boxes):
         return np.zeros((gy, gx), np.float32)
     diag = float(np.hypot(H, W))
     d_min = np.full((gy, gx), np.inf, np.float32)
@@ -81,21 +137,163 @@ def qp_map(rho: np.ndarray, q_min: float = QP_MIN, q_max: float = QP_MAX
     return (q_min + (q_max - q_min) * np.square(1.0 - rho)).astype(np.float32)
 
 
+def reference_surface(boxes: Sequence[Box], frame_hw: Tuple[int, int],
+                      patch: int = 64, mu: float = 0.5,
+                      q_min: float = QP_MIN, q_max: float = QP_MAX
+                      ) -> np.ndarray:
+    """NumPy reference for the full engaged-path surface: Eq. 3 -> Eq. 4
+    -> block upsample -> zero-mean shift.  `surfaces_from_boxes` is the
+    batched jitted equivalent (pinned to this by test_zecostream_bank)."""
+    H, W = frame_hw
+    qp = qp_map(importance_map(boxes, frame_hw, patch, mu), q_min, q_max)
+    iy, ix = _block_to_patch_idx(frame_hw, patch)
+    qp_blocks = qp[iy][:, ix]
+    return (qp_blocks - qp_blocks.mean()).astype(np.float32)
+
+
+# --------------------------------------------------------------------------
+# Array-native feedback packets
+# --------------------------------------------------------------------------
+def boxes_to_array(boxes: Sequence[Box], capacity: Optional[int] = None
+                   ) -> Tuple[np.ndarray, int]:
+    """Pack a list of boxes into a padded (capacity, 4) float32 array."""
+    n = len(boxes)
+    cap = n if capacity is None else capacity
+    out = np.zeros((cap, 4), np.float32)
+    if n:
+        out[:n] = np.asarray(boxes, np.float32)[:cap]
+    return out, min(n, cap)
+
+
 @dataclasses.dataclass
 class TimedBoxes:
-    """A grounding-then-prediction feedback packet: boxes at future times."""
+    """A grounding-then-prediction feedback packet: boxes at future times.
 
-    times: np.ndarray          # (K,) absolute timestamps (s)
-    boxes: List[List[Box]]     # K lists of boxes
+    ``boxes`` is stored as a stacked ``(K, B, 4)`` float32 array with a
+    ``counts (K,)`` mask (see the module docstring); the constructor also
+    accepts the legacy list-of-lists form and packs it."""
+
+    times: np.ndarray                              # (K,) timestamps (s)
+    boxes: Union[np.ndarray, List[List[Box]]]      # (K, B, 4) after init
+    counts: Optional[np.ndarray] = None            # (K,) valid boxes/step
+
+    def __post_init__(self):
+        self.times = np.asarray(self.times, np.float64)
+        if isinstance(self.boxes, (list, tuple)):
+            rows = self.boxes
+            cap = max((len(r) for r in rows), default=0)
+            arr = np.zeros((len(rows), cap, 4), np.float32)
+            cnt = np.zeros(len(rows), np.int32)
+            for k, r in enumerate(rows):
+                cnt[k] = len(r)
+                if r:
+                    arr[k, :len(r)] = np.asarray(r, np.float32)
+            self.boxes, self.counts = arr, cnt
+        else:
+            self.boxes = np.asarray(self.boxes, np.float32)
+            if self.counts is None:
+                # a padded array without its mask would silently promote
+                # zero-padding rows to real boxes at the frame origin
+                raise ValueError(
+                    "TimedBoxes built from a (K, B, 4) array needs the "
+                    "counts mask (use the list-of-lists form otherwise)")
+            self.counts = np.asarray(self.counts, np.int32)
+
+    def at_arrays(self, t: float) -> Tuple[np.ndarray, int]:
+        """Client-side matching of the current timestamp (§5.2): the
+        padded box array + valid count at the nearest packet time."""
+        if len(self.times) == 0:
+            return np.zeros((0, 4), np.float32), 0
+        i = int(np.argmin(np.abs(self.times - t)))
+        return self.boxes[i], int(self.counts[i])
 
     def at(self, t: float) -> List[Box]:
-        """Client-side matching of the current timestamp (§5.2)."""
-        if len(self.times) == 0:
-            return []
-        i = int(np.argmin(np.abs(self.times - t)))
-        return self.boxes[i]
+        """Legacy list-of-tuples view of `at_arrays`."""
+        arr, count = self.at_arrays(t)
+        return [tuple(float(v) for v in arr[j]) for j in range(count)]
 
 
+# --------------------------------------------------------------------------
+# Batched Eq. 3-4: one jitted mask-over-boxes kernel for all N sessions
+# --------------------------------------------------------------------------
+def _surface_one(boxes: jnp.ndarray, count: jnp.ndarray,
+                 engaged: jnp.ndarray, *, frame_hw: Tuple[int, int],
+                 patch: int, mu: float, q_min: float, q_max: float
+                 ) -> jnp.ndarray:
+    """Zero-mean relative QP surface for ONE session from padded boxes.
+
+    boxes (B, 4) float32 with `count` valid rows; masked rows sit at +inf
+    distance so padding never affects the Eq. 3 min.  Returns the
+    (H//8, W//8) float32 surface, all-zeros when `engaged` is false."""
+    H, W = frame_hw
+    yy, xx = _patch_centers(frame_hw, patch)
+    yy = jnp.asarray(yy, jnp.float32)
+    xx = jnp.asarray(xx, jnp.float32)
+    dy = jnp.maximum(jnp.maximum(boxes[:, 0, None, None] - yy,
+                                 yy - boxes[:, 2, None, None]), 0.0)
+    dx = jnp.maximum(jnp.maximum(boxes[:, 1, None, None] - xx,
+                                 xx - boxes[:, 3, None, None]), 0.0)
+    d = jnp.sqrt(dy * dy + dx * dx)
+    valid = jnp.arange(boxes.shape[0])[:, None, None] < count
+    d_min = jnp.min(jnp.where(valid, d, jnp.inf), axis=0)
+    rho = jnp.maximum(0.0, 1.0 - d_min / jnp.float32(mu * np.hypot(H, W)))
+    qp = q_min + (q_max - q_min) * jnp.square(1.0 - rho)
+    iy, ix = _block_to_patch_idx(frame_hw, patch)
+    qp_blocks = qp[jnp.asarray(iy)][:, jnp.asarray(ix)]
+    surf = qp_blocks - jnp.mean(qp_blocks)
+    return jnp.where(engaged, surf, 0.0).astype(jnp.float32)
+
+
+def _surfaces(boxes, counts, engaged, *, frame_hw, patch, mu, q_min, q_max):
+    one = functools.partial(_surface_one, frame_hw=frame_hw, patch=patch,
+                            mu=mu, q_min=q_min, q_max=q_max)
+    return jax.vmap(one)(boxes, counts, engaged)
+
+
+@functools.partial(jax.jit, static_argnames=("frame_hw", "patch", "mu",
+                                             "q_min", "q_max"))
+def surfaces_from_boxes(boxes: jnp.ndarray, counts: jnp.ndarray,
+                        engaged: jnp.ndarray, *,
+                        frame_hw: Tuple[int, int], patch: int = 64,
+                        mu: float = 0.5, q_min: float = float(QP_MIN),
+                        q_max: float = float(QP_MAX)) -> jnp.ndarray:
+    """Eqs. 3-4 for a whole fleet tick in one dispatch.
+
+    boxes (N, B, 4), counts (N,), engaged (N,) -> (N, H//8, W//8) zero-mean
+    relative QP surfaces (zeros for disengaged rows)."""
+    return _surfaces(boxes, counts, engaged, frame_hw=frame_hw, patch=patch,
+                     mu=mu, q_min=q_min, q_max=q_max)
+
+
+@functools.partial(jax.jit, static_argnames=("frame_hw", "patch", "mu",
+                                             "q_min", "q_max", "iters",
+                                             "probe_stride"))
+def rate_control_batch_fused(frames: jnp.ndarray, boxes: jnp.ndarray,
+                             counts: jnp.ndarray, engaged: jnp.ndarray,
+                             target_bits: jnp.ndarray, *,
+                             frame_hw: Tuple[int, int], patch: int = 64,
+                             mu: float = 0.5, q_min: float = float(QP_MIN),
+                             q_max: float = float(QP_MAX), iters: int = 8,
+                             probe_stride: int = 1):
+    """Fused importance -> QP -> rate-controlled encode for a fleet tick.
+
+    The Eq. 3-4 surfaces are computed in-graph from the box arrays and fed
+    straight into `codec.rate_control_batch`, so the fused plan+encode is
+    ONE device dispatch and the QP surface never makes a host round-trip
+    (XLA keeps it an internal buffer of the computation).  Returns
+    (surfaces, qp_blocks, EncodedFrame batch); the surfaces come back as a
+    device array only for the partial-drop requantize path."""
+    surf = _surfaces(boxes, counts, engaged, frame_hw=frame_hw, patch=patch,
+                     mu=mu, q_min=q_min, q_max=q_max)
+    qp, enc = codec.rate_control_batch(frames, surf, target_bits,
+                                       iters=iters,
+                                       probe_stride=probe_stride)
+    return surf, qp, enc
+
+
+# --------------------------------------------------------------------------
+# Per-session legacy object (reference semantics; shares the jitted kernel)
+# --------------------------------------------------------------------------
 @dataclasses.dataclass
 class ZeCoStream:
     patch: int = 64
@@ -115,17 +313,24 @@ class ZeCoStream:
     def on_feedback(self, fb: TimedBoxes):
         self.last_feedback = fb
 
+    def engage_decision(self, rate_bps: float,
+                        confidence: Optional[float] = None,
+                        tau: float = 0.8) -> bool:
+        """Paper §3 trigger with hysteresis, as a PURE decision: engage
+        only when the MLLM struggles to answer AND bandwidth does not
+        permit a higher bitrate.  Does not touch `self.active` — the
+        decision is applied exactly once per tick (in `qp_shape`), so
+        probing it cannot flap the hysteresis state twice in a tick."""
+        struggling = confidence is None or confidence < tau
+        thresh = self.release_bps if self.active else self.trigger_bps
+        return rate_bps < thresh and struggling
+
     def should_engage(self, rate_bps: float,
                       confidence: Optional[float] = None,
                       tau: float = 0.8) -> bool:
-        """Paper §3: trigger only when the MLLM struggles to answer AND
-        bandwidth does not permit a higher bitrate; otherwise uniform
-        encoding protects background visual memory."""
-        struggling = confidence is None or confidence < tau
-        if self.active:
-            self.active = rate_bps < self.release_bps and struggling
-        else:
-            self.active = rate_bps < self.trigger_bps and struggling
+        """Decision + application (back-compat wrapper around
+        `engage_decision`)."""
+        self.active = self.engage_decision(rate_bps, confidence, tau)
         return self.active
 
     def qp_shape(self, t: float, frame_hw: Tuple[int, int],
@@ -139,16 +344,132 @@ class ZeCoStream:
         offset search composes with it."""
         H, W = frame_hw
         nby, nbx = H // 8, W // 8
-        if (not self.should_engage(rate_bps, confidence, tau)
-                or self.last_feedback is None):
+        decision = self.engage_decision(rate_bps, confidence, tau)
+        self.active = decision  # single application site per tick
+        if not decision or self.last_feedback is None:
             return zero_surface(nby, nbx), False
-        boxes = self.last_feedback.at(t)
-        if not boxes:
+        boxes, count = self.last_feedback.at_arrays(t)
+        if count == 0:
             return zero_surface(nby, nbx), False
-        rho = importance_map(boxes, frame_hw, self.patch, self.mu)
-        qp = qp_map(rho, self.q_min, self.q_max)
-        # expand patch grid -> 8x8 block grid
-        rep = self.patch // 8
-        qp_blocks = np.repeat(np.repeat(qp, rep, axis=0), rep, axis=1)
-        qp_blocks = qp_blocks[:nby, :nbx]
-        return (qp_blocks - qp_blocks.mean()).astype(np.float32), True
+        surf = surfaces_from_boxes(
+            boxes[None], np.asarray([count], np.int32),
+            np.asarray([True]), frame_hw=(H, W), patch=self.patch,
+            mu=self.mu, q_min=float(self.q_min), q_max=float(self.q_max))
+        return np.asarray(surf)[0], True
+
+
+# --------------------------------------------------------------------------
+# Fleet-wide bank: N sessions' context state as arrays
+# --------------------------------------------------------------------------
+def _grow(cap: int, need: int) -> int:
+    while cap < need:
+        cap = max(2 * cap, 1)
+    return cap
+
+
+class ZeCoStreamBank:
+    """Vectorized ZeCoStream for N sessions (see the module docstring for
+    the array layout).  Per tick, `plan` runs the trigger/hysteresis
+    update, timestamp matching and Eqs. 3-4 for every session with array
+    ops + ONE jitted kernel dispatch — the serial `ZeCoStream` object's
+    state machine, element-wise over (N,) arrays."""
+
+    def __init__(self, n: int, frame_hw: Tuple[int, int], *,
+                 patch: int = 64, mu: float = 0.5,
+                 q_min: float = QP_MIN, q_max: float = QP_MAX,
+                 trigger_bps: float = 1.2e6, release_bps: float = 1.6e6,
+                 tau=0.8, enabled=None, box_capacity: int = 8,
+                 time_capacity: int = FEEDBACK_STEPS):
+        self.n = n
+        self.frame_hw = (int(frame_hw[0]), int(frame_hw[1]))
+        self.patch, self.mu = patch, mu
+        self.q_min, self.q_max = float(q_min), float(q_max)
+        self.trigger_bps = np.broadcast_to(
+            np.asarray(trigger_bps, np.float64), (n,)).copy()
+        self.release_bps = np.broadcast_to(
+            np.asarray(release_bps, np.float64), (n,)).copy()
+        self.tau = np.broadcast_to(np.asarray(tau, np.float64), (n,)).copy()
+        self.enabled = (np.ones(n, bool) if enabled is None
+                        else np.asarray(enabled, bool).copy())
+        # hysteresis + feedback state, all (N,)-leading arrays
+        self.active = np.zeros(n, bool)
+        self.has_fb = np.zeros(n, bool)
+        self.engaged_total = np.zeros(n, np.int64)
+        self._alloc(time_capacity, max(1, box_capacity))
+
+    def _alloc(self, kcap: int, bcap: int):
+        self.fb_times = np.full((self.n, kcap), np.inf)
+        self.fb_boxes = np.zeros((self.n, kcap, bcap, 4), np.float32)
+        self.fb_counts = np.zeros((self.n, kcap), np.int32)
+        self.fb_len = np.zeros(self.n, np.int32)
+
+    def _ensure_capacity(self, k: int, b: int):
+        kcap, bcap = self.fb_times.shape[1], self.fb_boxes.shape[2]
+        if k <= kcap and b <= bcap:
+            return
+        old = (self.fb_times, self.fb_boxes, self.fb_counts, self.fb_len)
+        self._alloc(_grow(kcap, k), _grow(bcap, b))
+        self.fb_times[:, :kcap] = old[0]
+        self.fb_boxes[:, :kcap, :bcap] = old[1]
+        self.fb_counts[:, :kcap] = old[2]
+        self.fb_len = old[3]
+
+    # -- feedback ingestion --------------------------------------------
+    def on_feedback(self, row: int, fb: TimedBoxes):
+        """Store one session's latest feedback packet into the bank."""
+        k, b = fb.boxes.shape[0], fb.boxes.shape[1]
+        self._ensure_capacity(k, b)
+        self.fb_times[row] = np.inf
+        self.fb_times[row, :k] = fb.times
+        self.fb_boxes[row] = 0.0
+        self.fb_boxes[row, :k, :b] = fb.boxes
+        self.fb_counts[row] = 0
+        self.fb_counts[row, :k] = fb.counts
+        self.fb_len[row] = k
+        self.has_fb[row] = True
+
+    # -- per-tick planning ---------------------------------------------
+    def decide_engage(self, rate_bps: np.ndarray, confidence: np.ndarray
+                      ) -> np.ndarray:
+        """PURE vectorized trigger/hysteresis decision (§3): the array
+        form of `ZeCoStream.engage_decision`.  Application happens once
+        per tick in `plan_arrays`."""
+        struggling = np.asarray(confidence) < self.tau
+        thresh = np.where(self.active, self.release_bps, self.trigger_bps)
+        return self.enabled & struggling & (np.asarray(rate_bps) < thresh)
+
+    def _select(self, t: float) -> Tuple[np.ndarray, np.ndarray]:
+        """Nearest-timestamp boxes for every session: (N, B, 4), (N,)."""
+        i = np.argmin(np.abs(self.fb_times - t), axis=1)
+        rows = np.arange(self.n)
+        counts = np.where(self.fb_len > 0, self.fb_counts[rows, i], 0)
+        return self.fb_boxes[rows, i], counts.astype(np.int32)
+
+    def plan_arrays(self, t: float, rate_bps: np.ndarray,
+                    confidence: np.ndarray
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Apply the engage decision (once) and match timestamps; returns
+        (boxes (N, B, 4), counts (N,), engaged (N,)) ready for either
+        `surfaces_from_boxes` or the fused codec path."""
+        decision = self.decide_engage(rate_bps, confidence)
+        self.active = decision  # single application site per tick
+        boxes, counts = self._select(t)
+        engaged = decision & self.has_fb & (counts > 0)
+        self.engaged_total += engaged
+        return boxes, counts, engaged
+
+    def plan(self, t: float, rate_bps: np.ndarray, confidence: np.ndarray
+             ) -> Tuple[np.ndarray, np.ndarray]:
+        """One fleet-wide plan dispatch: (N, H//8, W//8) relative QP
+        surfaces + the (N,) engaged mask for this tick."""
+        boxes, counts, engaged = self.plan_arrays(t, rate_bps, confidence)
+        nby, nbx = self.frame_hw[0] // 8, self.frame_hw[1] // 8
+        if not engaged.any():
+            # common fully-disengaged tick: skip the device dispatch
+            return (np.broadcast_to(zero_surface(nby, nbx),
+                                    (self.n, nby, nbx)), engaged)
+        surf = surfaces_from_boxes(
+            boxes, counts, engaged, frame_hw=self.frame_hw,
+            patch=self.patch, mu=self.mu, q_min=self.q_min,
+            q_max=self.q_max)
+        return np.asarray(surf), engaged

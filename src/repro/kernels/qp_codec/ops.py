@@ -1,4 +1,5 @@
-"""Jitted wrapper: frame layout (H, W) + per-block QP map (H//8, W//8)."""
+"""Jitted wrappers: frame layout (H, W) + per-block QP map (H//8, W//8),
+plus the fused box-array entry `zeco_codec_frames`."""
 from __future__ import annotations
 
 import functools
@@ -6,7 +7,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.qp_codec.qp_codec import qp_codec_blocks
+from repro.kernels.qp_codec.qp_codec import qp_codec_blocks, zeco_rc_blocks
+from repro.video.codec import QP_MAX, QP_MIN
 
 
 def _on_tpu() -> bool:
@@ -49,3 +51,46 @@ def qp_codec_frames(frames: jnp.ndarray, qp_blocks: jnp.ndarray, *,
     rec = rec.reshape(N, nby, nbx, 8, 8).transpose(0, 1, 3, 2, 4)
     rec = rec.reshape(N, H, W)
     return rec, bits.reshape(N, nby * nbx).sum(axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("patch", "mu", "q_min",
+                                             "q_max", "iters", "interpret"))
+def zeco_codec_frames(frames: jnp.ndarray, boxes: jnp.ndarray,
+                      counts: jnp.ndarray, engaged: jnp.ndarray,
+                      target_bits: jnp.ndarray, *, patch: int = 64,
+                      mu: float = 0.5, q_min: float = float(QP_MIN),
+                      q_max: float = float(QP_MAX), iters: int = 8,
+                      interpret=None):
+    """Fleet-batched FUSED context-aware encode: the kernel takes the
+    ZeCoStream box arrays directly and runs importance (Eq. 3) -> QP
+    surface (Eq. 4) -> rate-control bisection -> DCT -> quantize -> rate
+    -> reconstruction in one VMEM pass per frame — the QP surface never
+    materializes in HBM.
+
+    frames (N, H, W), boxes (N, B, 4), counts (N,), engaged (N,),
+    target_bits (N,) -> (reconstructions (N, H, W), per-frame bits (N,)).
+    Disengaged (or box-less) rows degenerate to uniform-QP rate control.
+
+    This is the TPU encode path (validated in interpret mode by
+    tests/test_kernels.py and timed in benchmarks/bench_kernels.py; the
+    on-chip-surface claim is untested on real TPU hardware).  The fleet
+    engine's `fused_plan` mode uses the jnp-level
+    `zecostream.rate_control_batch_fused` instead — it yields the cached
+    coefficients the partial-drop requantize path needs and supports
+    `probe_stride`, which this kernel's exact bisection does not.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    N, H, W = frames.shape
+    nby, nbx = H // 8, W // 8
+    blocks = frames.reshape(N, nby, 8, nbx, 8).transpose(0, 1, 3, 2, 4)
+    blocks = blocks.reshape(N, nby * nbx, 8, 8)
+    meta = jnp.stack([counts.astype(jnp.float32),
+                      engaged.astype(jnp.float32),
+                      target_bits.astype(jnp.float32)], axis=1)
+    rec, bits = zeco_rc_blocks(blocks, boxes, meta, frame_hw=(H, W),
+                               patch=patch, mu=mu, q_min=q_min,
+                               q_max=q_max, iters=iters,
+                               interpret=interpret)
+    rec = rec.reshape(N, nby, nbx, 8, 8).transpose(0, 1, 3, 2, 4)
+    return rec.reshape(N, H, W), bits.sum(axis=1)

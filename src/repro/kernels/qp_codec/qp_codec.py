@@ -1,4 +1,4 @@
-"""ZeCoStream QP-codec Pallas TPU kernel.
+"""ZeCoStream QP-codec Pallas TPU kernels.
 
 The paper's client-side hot loop: per-8x8-block DCT-II -> per-block-QP
 quantize -> rate proxy -> dequant -> inverse DCT, fused into a single
@@ -7,6 +7,18 @@ HBM).  The 8x8 DCTs are batched into (bs*8, 8) x (8, 8) matmuls so the
 MXU does the transform; one grid step processes `bs` blocks.
 
 VMEM per program @ bs=512: 512*64*4B*4 buffers ~ 0.5 MB.
+
+Two kernel variants:
+
+* `qp_codec_blocks` — takes a precomputed per-block QP map (the original
+  kernel).
+* `_zeco_rc_kernel` (via `repro.kernels.qp_codec.ops.zeco_codec_frames`)
+  — the FUSED context-aware path: takes the ZeCoStream box arrays
+  directly and runs importance (Eq. 3) -> QP surface (Eq. 4, zero-mean)
+  -> rate-control bisection -> DCT -> quantize -> rate -> reconstruction
+  for one frame per grid step, entirely in VMEM.  The (H//8, W//8) QP
+  surface never exists in HBM — it is built, searched over and consumed
+  on-chip.
 """
 from __future__ import annotations
 
@@ -17,7 +29,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.video.codec import RATE_COEF, RATE_OVERHEAD_PER_BLOCK, dct_matrix
+from repro.video.codec import (QP_MAX, QP_MIN, RATE_COEF,
+                               RATE_OVERHEAD_PER_BLOCK, dct_matrix)
 
 
 def _codec_kernel(d_ref, x_ref, qp_ref, rec_ref, bits_ref, *, bs: int):
@@ -75,3 +88,114 @@ def qp_codec_blocks(blocks: jnp.ndarray, qp: jnp.ndarray, *, bs: int = 512,
     )(jnp.asarray(dct_matrix()), blocks.astype(jnp.float32),
       qp.astype(jnp.float32))
     return rec[:N], bits[:N]
+
+
+# --------------------------------------------------------------------------
+# Fused importance -> QP -> rate-controlled encode (box arrays in)
+# --------------------------------------------------------------------------
+def _zeco_rc_kernel(d_ref, x_ref, box_ref, meta_ref, rec_ref, bits_ref, *,
+                    gy: int, gx: int, patch: int, mu_diag: float,
+                    q_min: float, q_max: float, iters: int, nblk: int):
+    """One grid step = one frame: boxes -> Eq. 3/4 surface -> bisected QP
+    offset -> quantized blocks, with every intermediate in VMEM.
+
+    meta_ref row: (box_count, engaged, target_bits) as float32."""
+    D = d_ref[...]                                  # (8, 8) DCT basis
+    x = x_ref[0].astype(jnp.float32) - 0.5          # (nblk, 8, 8)
+    t = jax.lax.dot_general(x, D, (((2,), (1,)), ((), ())))   # x @ D^T
+    coef = jax.lax.dot_general(
+        t.transpose(0, 2, 1), D, (((2,), (1,)), ((), ()))).transpose(0, 2, 1)
+
+    # Eq. 3 on the patch grid, masked over the padded box axis
+    b = box_ref[0]                                  # (B, 4)
+    count, engaged, target = meta_ref[0, 0], meta_ref[0, 1], meta_ref[0, 2]
+    cy = (jax.lax.broadcasted_iota(jnp.float32, (gy, gx), 0) + 0.5) * patch
+    cx = (jax.lax.broadcasted_iota(jnp.float32, (gy, gx), 1) + 0.5) * patch
+    dy = jnp.maximum(jnp.maximum(b[:, 0, None, None] - cy,
+                                 cy - b[:, 2, None, None]), 0.0)
+    dx = jnp.maximum(jnp.maximum(b[:, 1, None, None] - cx,
+                                 cx - b[:, 3, None, None]), 0.0)
+    d = jnp.sqrt(dy * dy + dx * dx)
+    valid = jax.lax.broadcasted_iota(jnp.float32, d.shape, 0) < count
+    d_min = jnp.min(jnp.where(valid, d, jnp.inf), axis=0)
+    rho = jnp.maximum(0.0, 1.0 - d_min / mu_diag)
+
+    # Eq. 4 -> per-block zero-mean relative surface (uniform 0 when
+    # disengaged, so the bisection degenerates to standard rate control)
+    qp = q_min + (q_max - q_min) * jnp.square(1.0 - rho)
+    rep = patch // 8
+    qpb = jnp.repeat(jnp.repeat(qp, rep, axis=0), rep, axis=1).reshape(-1)
+    shape = (qpb - jnp.mean(qpb)) * engaged         # (nblk,)
+
+    # the offset search clips at the codec's global QP range (exactly as
+    # codec.rate_control does) — q_min/q_max only parameterize Eq. 4
+    def rate_at(mid):
+        qpx = jnp.clip(shape + mid, QP_MIN, QP_MAX)
+        qs = jnp.exp2((qpx - 4.0) / 6.0) * (1.0 / 64.0)
+        q = jnp.round(coef / qs[:, None, None])
+        return (RATE_COEF * jnp.sum(jnp.log2(1.0 + jnp.abs(q)))
+                + nblk * RATE_OVERHEAD_PER_BLOCK)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        over = rate_at(mid) > target
+        return jnp.where(over, mid, lo), jnp.where(over, hi, mid)
+
+    lo0 = QP_MIN - jnp.max(shape)
+    hi0 = QP_MAX - jnp.min(shape)
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo0, hi0))
+
+    qp_f = jnp.clip(shape + 0.5 * (lo + hi), QP_MIN, QP_MAX)
+    qs = jnp.exp2((qp_f - 4.0) / 6.0) * (1.0 / 64.0)
+    q = jnp.round(coef / qs[:, None, None])
+    bits_ref[0, :] = (RATE_COEF * jnp.sum(jnp.log2(1.0 + jnp.abs(q)),
+                                          axis=(-1, -2))
+                      + RATE_OVERHEAD_PER_BLOCK)
+    deq = q * qs[:, None, None]
+    t2 = jax.lax.dot_general(deq, D, (((2,), (0,)), ((), ())))  # deq @ D
+    rec = jax.lax.dot_general(
+        t2.transpose(0, 2, 1), D, (((2,), (0,)), ((), ()))).transpose(0, 2, 1)
+    rec_ref[0] = jnp.clip(rec + 0.5, 0.0, 1.0).astype(rec_ref.dtype)
+
+
+def zeco_rc_blocks(blocks: jnp.ndarray, boxes: jnp.ndarray,
+                   meta: jnp.ndarray, *, frame_hw, patch: int = 64,
+                   mu: float = 0.5, q_min: float = float(QP_MIN),
+                   q_max: float = float(QP_MAX), iters: int = 8,
+                   interpret: bool = False):
+    """Fused variant entry on the block-list layout.
+
+    blocks (N, nblk, 8, 8); boxes (N, B, 4); meta (N, 3) float32 rows of
+    (box_count, engaged, target_bits) -> (rec (N, nblk, 8, 8),
+    bits (N, nblk))."""
+    H, W = frame_hw
+    if H % patch or W % patch or patch % 8:
+        raise ValueError("fused kernel needs patch | H, W and 8 | patch")
+    N, nblk = blocks.shape[:2]
+    gy, gx = H // patch, W // patch
+    kern = functools.partial(
+        _zeco_rc_kernel, gy=gy, gx=gx, patch=patch,
+        mu_diag=float(mu * np.hypot(H, W)), q_min=float(q_min),
+        q_max=float(q_max), iters=iters, nblk=nblk)
+    B = boxes.shape[1]
+    return pl.pallas_call(
+        kern,
+        grid=(N,),
+        in_specs=[
+            pl.BlockSpec((8, 8), lambda i: (0, 0)),
+            pl.BlockSpec((1, nblk, 8, 8), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, B, 4), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 3), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, nblk, 8, 8), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, nblk), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, nblk, 8, 8), jnp.float32),
+            jax.ShapeDtypeStruct((N, nblk), jnp.float32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(dct_matrix()), blocks.astype(jnp.float32),
+      boxes.astype(jnp.float32), meta.astype(jnp.float32))

@@ -1,11 +1,13 @@
-"""Pure-jnp oracle for the QP-codec kernel (delegates to repro.video.codec
-math on a block list layout)."""
+"""Pure-jnp oracles for the QP-codec kernels (delegate to
+repro.video.codec math on a block list layout)."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.video.codec import (RATE_COEF, RATE_OVERHEAD_PER_BLOCK,
-                               dct_matrix, qstep)
+from repro.video.codec import (QP_MAX, QP_MIN, RATE_COEF,
+                               RATE_OVERHEAD_PER_BLOCK, dct_matrix, qstep)
 
 
 def qp_codec_ref(blocks: jnp.ndarray, qp: jnp.ndarray):
@@ -20,3 +22,73 @@ def qp_codec_ref(blocks: jnp.ndarray, qp: jnp.ndarray):
     deq = q * qs
     rec = jnp.einsum("ji,njk,kl->nil", D, deq, D)
     return jnp.clip(rec + 0.5, 0.0, 1.0), bits
+
+
+def _zeco_rc_ref_one(frame, boxes, count, engaged, target, *, patch, mu,
+                     q_min, q_max, iters):
+    """jnp oracle mirroring `_zeco_rc_kernel` for ONE frame."""
+    H, W = frame.shape
+    nby, nbx = H // 8, W // 8
+    blocks = frame.reshape(nby, 8, nbx, 8).transpose(0, 2, 1, 3)
+    blocks = blocks.reshape(-1, 8, 8)
+    nblk = blocks.shape[0]
+    D = jnp.asarray(dct_matrix())
+    coef = jnp.einsum("ij,njk,lk->nil", D, blocks - 0.5, D)
+
+    gy, gx = H // patch, W // patch
+    cy = (jnp.arange(gy, dtype=jnp.float32)[:, None] + 0.5) * patch
+    cx = (jnp.arange(gx, dtype=jnp.float32)[None, :] + 0.5) * patch
+    dy = jnp.maximum(jnp.maximum(boxes[:, 0, None, None] - cy,
+                                 cy - boxes[:, 2, None, None]), 0.0)
+    dx = jnp.maximum(jnp.maximum(boxes[:, 1, None, None] - cx,
+                                 cx - boxes[:, 3, None, None]), 0.0)
+    d = jnp.sqrt(dy * dy + dx * dx)
+    valid = jnp.arange(boxes.shape[0])[:, None, None] < count
+    d_min = jnp.min(jnp.where(valid, d, jnp.inf), axis=0)
+    rho = jnp.maximum(0.0, 1.0 - d_min / jnp.float32(mu * np.hypot(H, W)))
+    qp = q_min + (q_max - q_min) * jnp.square(1.0 - rho)
+    rep = patch // 8
+    qpb = jnp.repeat(jnp.repeat(qp, rep, 0), rep, 1).reshape(-1)
+    shape = (qpb - jnp.mean(qpb)) * engaged
+
+    def rate_at(mid):
+        qpx = jnp.clip(shape + mid, QP_MIN, QP_MAX)
+        qs = (qstep(qpx) / 64.0)[:, None, None]
+        q = jnp.round(coef / qs)
+        return (RATE_COEF * jnp.sum(jnp.log2(1.0 + jnp.abs(q)))
+                + nblk * RATE_OVERHEAD_PER_BLOCK)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        over = rate_at(mid) > target
+        return jnp.where(over, mid, lo), jnp.where(over, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body,
+                               (QP_MIN - jnp.max(shape),
+                                QP_MAX - jnp.min(shape)))
+    qp_f = jnp.clip(shape + 0.5 * (lo + hi), QP_MIN, QP_MAX)
+    qs = (qstep(qp_f) / 64.0)[:, None, None]
+    q = jnp.round(coef / qs)
+    bits = (RATE_COEF * jnp.sum(jnp.log2(1.0 + jnp.abs(q)), axis=(-1, -2))
+            + RATE_OVERHEAD_PER_BLOCK)
+    rec = jnp.clip(jnp.einsum("ji,njk,kl->nil", D, q * qs, D) + 0.5,
+                   0.0, 1.0)
+    rec = rec.reshape(nby, nbx, 8, 8).transpose(0, 2, 1, 3)
+    return rec.reshape(H, W), jnp.sum(bits)
+
+
+def zeco_codec_ref(frames, boxes, counts, engaged, target_bits, *,
+                   patch: int = 64, mu: float = 0.5,
+                   q_min: float = float(QP_MIN),
+                   q_max: float = float(QP_MAX), iters: int = 8):
+    """Oracle for `ops.zeco_codec_frames`: (N, H, W) frames + box arrays
+    -> (rec (N, H, W), bits (N,))."""
+    outs = [_zeco_rc_ref_one(
+        jnp.asarray(frames[i], jnp.float32),
+        jnp.asarray(boxes[i], jnp.float32), jnp.float32(counts[i]),
+        jnp.float32(engaged[i]), jnp.float32(target_bits[i]),
+        patch=patch, mu=mu, q_min=q_min, q_max=q_max, iters=iters)
+        for i in range(frames.shape[0])]
+    return (jnp.stack([o[0] for o in outs]),
+            jnp.stack([o[1] for o in outs]))

@@ -62,15 +62,6 @@ def _from_blocks(blocks: jnp.ndarray) -> jnp.ndarray:
     return blocks.transpose(0, 2, 1, 3).reshape(nby * BLOCK, nbx * BLOCK)
 
 
-def block_qp_from_patch_qp(qp_patches: jnp.ndarray, frame_hw: Tuple[int, int],
-                           patch: int) -> jnp.ndarray:
-    """Upsample a (H//patch, W//patch) QP map to per-8x8-block QP."""
-    H, W = frame_hw
-    rep = patch // BLOCK
-    qp = jnp.repeat(jnp.repeat(qp_patches, rep, axis=0), rep, axis=1)
-    return qp[: H // BLOCK, : W // BLOCK]
-
-
 def _dct_blocks(frame: jnp.ndarray) -> jnp.ndarray:
     """Blockwise DCT-II of a (H, W) frame -> (nby, nbx, 8, 8).
 

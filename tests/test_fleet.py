@@ -52,6 +52,21 @@ def test_fleet_n4_parity_with_serial():
         assert a.dropped_frames == b.dropped_frames
 
 
+def test_fleet_fused_plan_matches_default():
+    """The fused plan+encode dispatch (surfaces computed in-graph from the
+    box arrays) reproduces the default bank-plan path exactly."""
+    base = run_fleet([_spec(k, duration=8.0) for k in range(4)])
+    fused = run_fleet([_spec(k, duration=8.0) for k in range(4)],
+                      fused_plan=True)
+    for a, b in zip(base, fused):
+        assert a.accuracy == b.accuracy
+        assert a.latencies == b.latencies
+        assert a.avg_bitrate == b.avg_bitrate
+        assert a.rates == b.rates
+        assert a.confidences == b.confidences
+        assert a.zeco_engaged_frames == b.zeco_engaged_frames
+
+
 def test_fleet_rejects_mismatched_members():
     a = _spec(0)
     b = _spec(1)

@@ -10,9 +10,9 @@ from repro.kernels.flash_attention import ops as fa_ops
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.flash_decode import ops as fd_ops
 from repro.kernels.flash_decode.ref import decode_ref
-from repro.kernels.qp_codec.ops import qp_codec_frame
+from repro.kernels.qp_codec.ops import qp_codec_frame, zeco_codec_frames
 from repro.kernels.qp_codec.qp_codec import qp_codec_blocks
-from repro.kernels.qp_codec.ref import qp_codec_ref
+from repro.kernels.qp_codec.ref import qp_codec_ref, zeco_codec_ref
 from repro.video import codec as codec_ref
 
 TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
@@ -161,6 +161,89 @@ def test_qp_codec_frame_matches_video_codec():
     np.testing.assert_allclose(np.asarray(rec_k), np.asarray(rec_o),
                                rtol=1e-5, atol=1e-5)
     np.testing.assert_allclose(float(bits_k), float(bits_o), rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# fused zeco codec: box arrays -> importance -> QP -> encode in one pass
+# --------------------------------------------------------------------------
+def _zeco_inputs(N=3, hw=128, seed=0):
+    from repro.video.scenes import make_scene
+    frames = np.stack([make_scene("retail", False, seed=s, h=hw, w=hw)
+                       .render(0) for s in range(N)]).astype(np.float32)
+    rng = np.random.default_rng(seed)
+    boxes = rng.uniform(0, hw - 48, (N, 4, 4)).astype(np.float32)
+    boxes[..., 2:] = boxes[..., :2] + rng.uniform(16, 40, (N, 4, 2))
+    counts = np.asarray([2, 0, 4][:N], np.int32)
+    engaged = np.asarray([True, False, True][:N])
+    targets = np.asarray([6e4, 4e4, 1.2e5][:N], np.float32)
+    return frames, boxes, counts, engaged, targets
+
+
+def test_zeco_codec_frames_matches_oracle():
+    frames, boxes, counts, engaged, targets = _zeco_inputs()
+    rec_k, bits_k = zeco_codec_frames(frames, boxes, counts, engaged,
+                                      targets, patch=32, interpret=True)
+    rec_r, bits_r = zeco_codec_ref(frames, boxes, counts, engaged,
+                                   targets, patch=32)
+    np.testing.assert_allclose(np.asarray(rec_k), np.asarray(rec_r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(bits_k), np.asarray(bits_r),
+                               rtol=1e-5)
+
+
+def test_zeco_codec_frames_matches_unfused_pipeline():
+    """Fused kernel == surfaces_from_boxes -> rate_control_batch -> decode
+    (the two-dispatch jnp path it replaces)."""
+    from repro.core.zecostream import surfaces_from_boxes
+    frames, boxes, counts, engaged, targets = _zeco_inputs(seed=3)
+    hw = frames.shape[1:]
+    rec_k, bits_k = zeco_codec_frames(frames, boxes, counts, engaged,
+                                      targets, patch=32, interpret=True)
+    surf = surfaces_from_boxes(boxes, counts, engaged, frame_hw=hw,
+                               patch=32)
+    _, enc = codec_ref.rate_control_batch(frames, np.asarray(surf),
+                                          targets)
+    rec_u = codec_ref.decode_batch(enc)
+    np.testing.assert_allclose(np.asarray(bits_k), np.asarray(enc.bits),
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(rec_k), np.asarray(rec_u),
+                               atol=1e-3)
+
+
+def test_zeco_codec_frames_nondefault_qp_bounds_match_unfused():
+    """q_min/q_max parameterize Eq. 4 only; the offset search still clips
+    at the codec's global QP range, exactly like codec.rate_control."""
+    from repro.core.zecostream import surfaces_from_boxes
+    frames, boxes, counts, engaged, targets = _zeco_inputs(seed=9)
+    hw = frames.shape[1:]
+    rec_k, bits_k = zeco_codec_frames(frames, boxes, counts, engaged,
+                                      targets, patch=32, q_min=30.0,
+                                      q_max=45.0, interpret=True)
+    surf = surfaces_from_boxes(boxes, counts, engaged, frame_hw=hw,
+                               patch=32, q_min=30.0, q_max=45.0)
+    _, enc = codec_ref.rate_control_batch(frames, np.asarray(surf),
+                                          targets)
+    np.testing.assert_allclose(np.asarray(bits_k), np.asarray(enc.bits),
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(rec_k),
+                               np.asarray(codec_ref.decode_batch(enc)),
+                               atol=1e-3)
+
+
+def test_zeco_codec_frames_hits_rate_target():
+    frames, boxes, counts, engaged, targets = _zeco_inputs(seed=5)
+    _, bits = zeco_codec_frames(frames, boxes, counts, engaged, targets,
+                                patch=32, interpret=True)
+    bits = np.asarray(bits)
+    # bisection lands at or below target within the usual probe slack
+    assert np.all(bits <= targets * 1.15)
+
+
+def test_zeco_codec_rejects_nondivisible_patch():
+    frames, boxes, counts, engaged, targets = _zeco_inputs(N=1, hw=64)
+    with pytest.raises(ValueError):
+        zeco_codec_frames(frames, boxes, counts, engaged, targets,
+                          patch=48, interpret=True)
 
 
 @hypothesis.given(qp_lo=st.floats(20, 35), dq=st.floats(3, 16),
