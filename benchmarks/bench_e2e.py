@@ -5,9 +5,10 @@ Four systems x two CC algorithms on mobility traces with embedded QA:
 Reports accuracy + average frame latency per cell; headline deltas are
 Artic vs WebRTC (paper: +15.12% accuracy, -135.31 ms with BBR).
 
-The whole (cc x system x seed) grid runs as ONE fleet call: every cell's
-sessions advance in lockstep ticks with a single batched codec dispatch
-per tick (repro.core.fleet), instead of the old serial per-episode loop.
+The whole (cc x system x seed) grid is declared as `ScenarioSpec`s and
+runs through ONE `run_scenarios` call: the compiler folds every cell
+into a single cohort whose sessions advance in lockstep ticks with one
+batched codec dispatch per tick (repro.core.fleet underneath).
 """
 from __future__ import annotations
 
@@ -16,33 +17,7 @@ import time
 import numpy as np
 
 from benchmarks.common import Row, shared_calibrator
-from repro.core.fleet import Fleet, FleetSession
-from repro.core.session import QASample, SessionConfig
-from repro.net.traces import fluctuating_trace, mobility_trace
-from repro.video.scenes import make_scene
-
-SYSTEMS = {
-    "webrtc": dict(use_recap=False, use_zeco=False),
-    "webrtc+recap": dict(use_recap=True, use_zeco=False),
-    "webrtc+zeco": dict(use_recap=False, use_zeco=True),
-    "artic": dict(use_recap=True, use_zeco=True),
-}
-
-
-def _qa(scene, duration, fps=10.0):
-    """One question shortly after each content epoch begins — the user asks
-    about what just appeared (§4.1 'newly appeared content'), giving every
-    system the same runway within the epoch."""
-    period = scene.code_period_frames / fps
-    out, i = [], 0
-    t = period + 0.5
-    while t < duration * 0.95:
-        out.append(QASample(t_ask=float(t),
-                            obj_idx=i % len(scene.objects),
-                            answer_window=min(4.0, period - 0.6)))
-        i += 1
-        t += period
-    return out
+from repro.api import SYSTEMS, grid, run_scenarios
 
 
 def _tuned_tau(cal) -> float:
@@ -51,23 +26,21 @@ def _tuned_tau(cal) -> float:
     return float(np.clip(cal(0.5), 0.55, 0.92))
 
 
-def _spec(cc: str, flags: dict, seed: int, duration: float, cal
-          ) -> FleetSession:
-    # code epochs every 4 s: questions target *current* content, so late
-    # or corrupted frames genuinely cost accuracy (paper §4.1 seen/unseen)
-    sc = make_scene(["retail", "street", "office"][seed % 3],
-                    seed % 2 == 1, seed=seed, code_period_frames=40)
-    # paper §7.1: walking/driving segments filtered for *significant*
-    # fluctuation — frequent switches across the full industry ladder
-    # (incl. 290/400 Kbps levels) plus mobility fades
-    if seed % 2:
-        tr = mobility_trace("driving", duration, seed=seed)
-    else:
-        tr = fluctuating_trace(duration, switches_per_min=6, seed=seed)
-    cfg = SessionConfig(duration=duration, cc_kind=cc, seed=seed,
-                        tau=_tuned_tau(cal), **flags)
-    return FleetSession(scene=sc, qa_samples=_qa(sc, duration), trace=tr,
-                        cfg=cfg, calibrator=cal)
+def _seeded(spec):
+    """Fill the seed-derived content/network axes of one grid point.
+
+    Code epochs every 4 s ("fig13" preset): questions target *current*
+    content, so late or corrupted frames genuinely cost accuracy (paper
+    §4.1 seen/unseen).  Traces follow §7.1: walking/driving segments
+    filtered for *significant* fluctuation — frequent switches across
+    the full industry ladder (incl. 290/400 Kbps levels) plus mobility
+    fades."""
+    s = spec.seed
+    return spec.with_(
+        scene=["retail", "street", "office"][s % 3], moving=s % 2 == 1,
+        scene_seed=s, trace_seed=s,
+        trace="mobility.driving" if s % 2 else "fluctuating",
+        trace_kwargs={} if s % 2 else dict(switches_per_min=6))
 
 
 def run(quick: bool = True):
@@ -76,25 +49,23 @@ def run(quick: bool = True):
     seeds = [0, 1] if quick else [0, 1, 2, 3, 4, 5]
     ccs = ["gcc", "bbr"]
 
-    cells = [(cc, name, flags) for cc in ccs
-             for name, flags in SYSTEMS.items()]
-    specs = [_spec(cc, flags, s, duration, cal)
-             for cc, name, flags in cells for s in seeds]
+    specs = [_seeded(p) for p in grid(
+        "fig13", cc_kind=ccs, system=list(SYSTEMS), seed=seeds,
+        duration=duration, tau=_tuned_tau(cal))]
     t0 = time.perf_counter()
-    metrics = Fleet(specs).run()
+    result = run_scenarios(specs, calibrator=cal)
     us_total = (time.perf_counter() - t0) * 1e6
 
-    # the whole grid is one fleet call, so per-cell wall time is not
-    # individually measurable; the aggregate row carries the real cost
+    # the whole grid is one run_scenarios call, so per-cell wall time is
+    # not individually measurable; the aggregate row carries the real cost
     rows = [Row("fig13.fleet_run", us_total,
-                f"cells={len(cells)},sessions={len(specs)}")]
-    results = {}
-    for ci, (cc, name, _) in enumerate(cells):
-        ms = metrics[ci * len(seeds):(ci + 1) * len(seeds)]
-        acc = float(np.mean([m.accuracy for m in ms]))
-        lat = float(np.mean([m.avg_latency_ms for m in ms]))
-        used = float(np.mean([m.bandwidth_used for m in ms]))
-        results[(cc, name)] = (acc, lat, used)
+                f"cells={len(ccs) * len(SYSTEMS)},sessions={len(specs)}")]
+    agg = result.aggregate(by=("cc_kind", "system"),
+                           fields=("accuracy", "avg_latency_ms",
+                                   "bandwidth_used"))
+    results = {k: (v["accuracy"], v["avg_latency_ms"], v["bandwidth_used"])
+               for k, v in agg.items()}
+    for (cc, name), (acc, lat, used) in results.items():
         rows.append(Row(f"fig13.{cc}.{name}", 0.0,
                         f"acc={acc:.3f},latency={lat:.0f}ms,"
                         "time=see:fig13.fleet_run"))

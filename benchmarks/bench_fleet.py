@@ -7,9 +7,12 @@ thumbnail-tier workload (64x64 frames) where the serial loop is
 dispatch-bound.  Also reports the per-tick batched encode time of the
 jnp rate-controlled path and of the fused Pallas qp_codec kernel.
 
-Serial and fleet cells run the *same* session specs (same scenes,
-traces, configs, rc probe stride), interleaved and median-aggregated so
-background load on shared machines does not bias either side.
+Members are declared via the "fleet-thumb" scenario preset; the serial
+cells materialize the same specs through `build_session` and the fleet
+cells compile them through `build_fleet`, so both sides run literally
+identical sessions (same scenes, traces, configs, rc probe stride),
+interleaved and median-aggregated so background load on shared machines
+does not bias either side.
 """
 from __future__ import annotations
 
@@ -18,37 +21,29 @@ import time
 import numpy as np
 
 from benchmarks.common import Row
-from repro.core.fleet import Fleet, FleetSession
-from repro.core.session import SessionConfig, run_session
+from repro.api import build_fleet, build_session, preset, run_session
 from repro.kernels.qp_codec.ops import qp_codec_frames
-from repro.net.traces import fluctuating_trace
 from repro.video import codec
-from repro.video.scenes import make_scene
 
 NS = (1, 8, 32, 128)
 HW = 64
 TARGET_N, TARGET_X = 32, 5.0
 
 
-def _spec(k: int, duration: float) -> FleetSession:
-    sc = make_scene("lawn", k % 2 == 1, seed=k, h=HW, w=HW,
-                    code_period_frames=40)
-    tr = fluctuating_trace(duration, switches_per_min=6, seed=k,
-                           levels_kbps=[1710, 1130, 710])
-    cfg = SessionConfig(duration=duration, cc_kind="gcc", use_recap=True,
-                        use_zeco=True, rc_probe_stride=2, seed=k)
-    return FleetSession(sc, [], tr, cfg)
+def _spec(k: int, duration: float):
+    return preset("fleet-thumb").with_(duration=duration, moving=k % 2 == 1,
+                                       scene_seed=k, trace_seed=k, seed=k)
 
 
 def _serial_once(duration: float, seed: int) -> float:
-    s = _spec(seed, duration)
+    s = build_session(_spec(seed, duration))
     t0 = time.perf_counter()
     run_session(s.scene, s.qa_samples, s.trace, s.cfg)
     return time.perf_counter() - t0
 
 
 def _fleet_once(duration: float, n: int) -> float:
-    fl = Fleet([_spec(k, duration) for k in range(n)])
+    fl = build_fleet([_spec(k, duration) for k in range(n)])
     t0 = time.perf_counter()
     fl.run()
     return time.perf_counter() - t0
@@ -56,7 +51,7 @@ def _fleet_once(duration: float, n: int) -> float:
 
 def _encode_tick_us(n: int, reps: int = 10) -> float:
     """Per-tick batched rate-controlled encode (one fleet dispatch)."""
-    frames = np.stack([_spec(k, 1.0).scene.render(0)
+    frames = np.stack([build_session(_spec(k, 1.0)).scene.render(0)
                        for k in range(n)]).astype(np.float32)
     qps = np.zeros((n, HW // 8, HW // 8), np.float32)
     tgt = np.full((n,), 5e4, np.float32)
@@ -71,7 +66,7 @@ def _encode_tick_us(n: int, reps: int = 10) -> float:
 
 def _pallas_tick_us(n: int, reps: int = 5) -> float:
     """Per-tick fused Pallas encode+decode over the whole fleet batch."""
-    frames = np.stack([_spec(k, 1.0).scene.render(0)
+    frames = np.stack([build_session(_spec(k, 1.0)).scene.render(0)
                        for k in range(n)]).astype(np.float32)
     qps = np.full((n, HW // 8, HW // 8), 30.0, np.float32)
     qp_codec_frames(frames, qps)[1].block_until_ready()

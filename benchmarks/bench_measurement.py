@@ -10,20 +10,16 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import Row, timed
-from repro.core.session import SessionConfig, run_session
-from repro.net.traces import elevator_trace
-from repro.video.scenes import make_scene
+from repro.api import preset, run_scenarios
 
 
 def run(quick: bool = True):
-    sc = make_scene("retail", False, seed=0)
-    tr = elevator_trace(50.0)
-    cfg = SessionConfig(duration=50.0, use_recap=False, use_zeco=False,
-                        cc_kind="gcc")
-    m, us = timed(run_session, sc, [], tr, cfg)
+    spec = preset("webrtc").with_(duration=50.0, trace="elevator")
+    result, us = timed(run_scenarios, spec)
+    m = result.metrics[0]
 
     lat = np.asarray([l for l in m.latencies if np.isfinite(l)]) * 1e3
-    fps = cfg.fps
+    fps = spec.fps
     pre = lat[: int(25 * fps)]
     spike_win = lat[int(26 * fps): int(33 * fps)]
     spike = float(spike_win.max()) if len(spike_win) else float("nan")

@@ -9,20 +9,9 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import Row, shared_calibrator, timed
-from repro.core.session import SessionConfig, run_session
-from repro.net.traces import fluctuating_trace
-from repro.video.scenes import make_scene
+from repro.api import grid, run_scenarios
 
 DUR = 60.0
-
-
-def _avg_latency(use_recap: bool, freq: float, seed: int, cal) -> tuple:
-    sc = make_scene("retail", False, seed=seed)
-    tr = fluctuating_trace(DUR, switches_per_min=freq, seed=seed)
-    m = run_session(sc, [], tr, SessionConfig(
-        duration=DUR, use_recap=use_recap, use_zeco=False, cc_kind="gcc",
-        seed=seed), calibrator=cal)
-    return m.avg_latency_ms, m.frac_below(200.0)
 
 
 def run(quick: bool = True):
@@ -31,13 +20,18 @@ def run(quick: bool = True):
     seeds = [0] if quick else [0, 1, 2]
     rows, gains = [], {}
     for f in freqs:
-        base, recap, cdf_b, cdf_r, us_tot = [], [], [], [], 0.0
-        for s in seeds:
-            (b, cb), us1 = timed(_avg_latency, False, f, s, cal)
-            (r, cr), us2 = timed(_avg_latency, True, f, s, cal)
-            base.append(b); recap.append(r)
-            cdf_b.append(cb); cdf_r.append(cr)
-            us_tot += us1 + us2
+        specs = [s.with_(scene_seed=s.seed, trace_seed=s.seed)
+                 for s in grid("webrtc", duration=DUR,
+                               trace_kwargs=dict(switches_per_min=f),
+                               system=["webrtc", "webrtc+recap"],
+                               seed=seeds)]
+        result, us_tot = timed(run_scenarios, specs, calibrator=cal)
+        base_r = result.select(system="webrtc")
+        recap_r = result.select(system="webrtc+recap")
+        base = base_r.values("avg_latency_ms")
+        recap = recap_r.values("avg_latency_ms")
+        cdf_b = [m.frac_below(200.0) for m in base_r.metrics]
+        cdf_r = [m.frac_below(200.0) for m in recap_r.metrics]
         gain = np.mean(base) - np.mean(recap)
         gains[f] = gain
         rows.append(Row(f"fig9a.latency_gain@{f}fluct_per_min", us_tot,

@@ -17,13 +17,10 @@ import time
 import numpy as np
 
 from benchmarks.common import Row, shared_benchmark, timed
-from repro.core.fleet import Fleet, FleetSession
-from repro.core.session import SessionConfig
+from repro.api import grid, run_scenarios
 from repro.core.zecostream import (TimedBoxes, ZeCoStream, ZeCoStreamBank,
                                    reference_surface)
 from repro.devibench.pipeline import accuracy_at_bitrate
-from repro.net.traces import static_trace
-from repro.video.scenes import make_scene
 
 LADDER = [200, 290, 400, 710, 968, 1700]
 FLEET_SIZES = [1, 8, 32]
@@ -42,16 +39,14 @@ def _zeco_shape(sc, rec):
 # --------------------------------------------------------------------------
 def _fleet_specs(n: int, duration: float):
     """Context-aware members on starved uplinks, so ZeCoStream engages."""
-    specs = []
-    for k in range(n):
-        sc = make_scene(["retail", "street", "office", "document"][k % 4],
-                        k % 2 == 1, seed=k, code_period_frames=40)
-        tr = static_trace(duration, mbps=0.35 + 0.05 * (k % 4), seed=k)
-        cfg = SessionConfig(duration=duration, use_recap=k % 2 == 0,
-                            use_zeco=True, cc_kind=["gcc", "bbr"][k % 2],
-                            seed=k)
-        specs.append(FleetSession(sc, [], tr, cfg))
-    return specs
+    return [p.with_(
+        scene=["retail", "street", "office", "document"][k % 4],
+        moving=k % 2 == 1, scene_seed=k, trace_seed=k, seed=k,
+        trace_kwargs=dict(mbps=0.35 + 0.05 * (k % 4)),
+        system=["artic", "webrtc+zeco"][k % 2],
+        cc_kind=["gcc", "bbr"][k % 2])
+        for k, p in enumerate(grid("zeco-starved", duration=duration,
+                                   seed=list(range(n))))]
 
 
 def _engaged_state(n: int, hw=(256, 256)):
@@ -140,10 +135,10 @@ def _fleet_breakdown_rows(quick: bool):
     rows = []
     duration = 4.0 if quick else 12.0
     for n in FLEET_SIZES:
-        fleet = Fleet(_fleet_specs(n, duration), profile=True)
-        fleet.run()
-        pt = fleet.phase_times
-        ticks = int(duration * fleet.specs[0].cfg.fps)
+        specs = _fleet_specs(n, duration)
+        result = run_scenarios(specs, profile=True)
+        [pt] = result.phase_times
+        ticks = int(duration * specs[0].fps)
         per_tick = {k: 1e6 * v / ticks for k, v in pt.items()}
         rows.append(Row(
             f"fleet.tick_breakdown@N={n}", sum(per_tick.values()),

@@ -2,50 +2,40 @@
 
     WebRTC | +ReCapABR | +ZeCoStream | Artic   x   {GCC, BBR}
 
-All eight cells run as ONE fleet call: the sessions advance in lockstep
-ticks with a single batched codec dispatch per tick (repro.core.fleet).
+The eight cells are declared as a scenario grid and run through ONE
+`run_scenarios` call: the compiler folds them into a single cohort of
+lockstep sessions with one batched codec dispatch per tick
+(repro.core.fleet underneath).
 
 Run:  PYTHONPATH=src python examples/artic_vs_webrtc.py
 """
-from repro.core.fleet import FleetSession, run_fleet
-from repro.core.session import QASample, SessionConfig
-from repro.net.traces import mobility_trace
-from repro.video.scenes import make_scene
+from repro.api import SYSTEMS, ScenarioSpec, grid, run_scenarios
 
-SYSTEMS = {
-    "WebRTC": dict(use_recap=False, use_zeco=False),
-    "WebRTC+ReCapABR": dict(use_recap=True, use_zeco=False),
-    "WebRTC+ZeCoStream": dict(use_recap=False, use_zeco=True),
-    "Artic": dict(use_recap=True, use_zeco=True),
-}
+PRETTY = {"webrtc": "WebRTC", "webrtc+recap": "WebRTC+ReCapABR",
+          "webrtc+zeco": "WebRTC+ZeCoStream", "artic": "Artic"}
 
 
 def main():
     duration = 60.0
-    scene = make_scene("street", moving=True, seed=1, code_period_frames=40)
-    trace = mobility_trace("driving", duration, seed=1)
-    qa = [QASample(t_ask=4.5 + 4.0 * i, obj_idx=i % len(scene.objects),
-                   answer_window=3.4)
-          for i in range(int(duration / 4) - 2)]
-
-    cells = [(cc, name, flags) for cc in ("gcc", "bbr")
-             for name, flags in SYSTEMS.items()]
-    metrics = run_fleet([
-        FleetSession(scene=scene, qa_samples=qa, trace=trace,
-                     cfg=SessionConfig(duration=duration, cc_kind=cc,
-                                       **flags))
-        for cc, _, flags in cells])
+    base = ScenarioSpec(duration=duration, scene="street", moving=True,
+                        scene_seed=1, code_period_frames=40,
+                        trace="mobility.driving", trace_seed=1,
+                        qa="periodic",
+                        qa_kwargs=dict(count=int(duration / 4) - 2,
+                                       answer_window=3.4))
+    result = run_scenarios(grid(base, cc_kind=["gcc", "bbr"],
+                                system=list(SYSTEMS)))
 
     print(f"{'system':20s} {'acc':>6s} {'avg ms':>8s} {'p95 ms':>8s} "
           f"{'Mbps':>6s} {'drops':>6s}")
     last_cc = None
-    for (cc, name, _), m in zip(cells, metrics):
-        if cc != last_cc:
-            print(f"--- {cc.upper()} ---")
-            last_cc = cc
-        print(f"{name:20s} {m.accuracy:6.2f} {m.avg_latency_ms:8.0f} "
-              f"{m.p95_latency_ms:8.0f} {m.bandwidth_used / 1e6:6.2f} "
-              f"{m.dropped_frames:6d}")
+    for s, m in zip(result.specs, result.metrics):
+        if s.cc_kind != last_cc:
+            print(f"--- {s.cc_kind.upper()} ---")
+            last_cc = s.cc_kind
+        print(f"{PRETTY[s.system]:20s} {m.accuracy:6.2f} "
+              f"{m.avg_latency_ms:8.0f} {m.p95_latency_ms:8.0f} "
+              f"{m.bandwidth_used / 1e6:6.2f} {m.dropped_frames:6d}")
 
 
 if __name__ == "__main__":

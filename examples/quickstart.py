@@ -2,32 +2,36 @@
 
 Renders a synthetic retail scene, streams it over a fluctuating 5G uplink
 under (a) WebRTC and (b) Artic, and prints the QoE comparison — the
-paper's Figure 13 in miniature.
+paper's Figure 13 in miniature, declared through the scenario API:
+a workload is a `ScenarioSpec`, `grid()` expands axes of it, and
+`run_scenarios` compiles the specs into fleet cohorts and runs them.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core.session import QASample, SessionConfig, run_session
-from repro.net.traces import fluctuating_trace
-from repro.video.scenes import make_scene
+from repro.api import ScenarioSpec, build_session, grid, run_scenarios
 
 
 def main():
-    scene = make_scene("retail", moving=False, seed=0,
-                       code_period_frames=40)
-    trace = fluctuating_trace(duration=40.0, switches_per_min=6, seed=0)
-    qa = [QASample(t_ask=4.5 + 4.0 * i, obj_idx=i % len(scene.objects),
-                   answer_window=3.4) for i in range(8)]
+    base = ScenarioSpec(scene="retail", code_period_frames=40,
+                        trace="fluctuating",
+                        trace_kwargs=dict(switches_per_min=6),
+                        duration=40.0,
+                        qa="periodic", qa_kwargs=dict(count=8,
+                                                      answer_window=3.4))
+    specs = grid(base, system=["webrtc", "artic"])
 
-    print(f"scene: {scene.category}, {len(scene.objects)} objects "
-          f"(glyph cells {[o.cell for o in scene.objects]} px)")
-    print(f"trace: {trace.name}, mean {np.mean(trace.bw) / 1e6:.2f} Mbps\n")
+    # peek at what one spec materializes into
+    s = build_session(specs[0])
+    print(f"scene: {s.scene.category}, {len(s.scene.objects)} objects "
+          f"(glyph cells {[o.cell for o in s.scene.objects]} px)")
+    print(f"trace: {s.trace.name}, mean {np.mean(s.trace.bw) / 1e6:.2f} "
+          "Mbps\n")
 
-    for name, flags in (("WebRTC (GCC)", dict(use_recap=False, use_zeco=False)),
-                        ("Artic", dict(use_recap=True, use_zeco=True))):
-        m = run_session(scene, qa, trace,
-                        SessionConfig(duration=40.0, cc_kind="gcc", **flags))
+    result = run_scenarios(specs)   # both systems, one fleet cohort
+    for spec, m in zip(result.specs, result.metrics):
+        name = "WebRTC (GCC)" if spec.system == "webrtc" else "Artic"
         print(f"{name:14s} accuracy={m.accuracy:.2f}  "
               f"avg latency={m.avg_latency_ms:6.0f} ms  "
               f"p95={m.p95_latency_ms:6.0f} ms  "

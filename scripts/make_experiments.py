@@ -13,6 +13,43 @@ from repro.roofline import report  # noqa: E402
 from repro.roofline.analysis import HBM_BW, ICI_BW, PEAK_FLOPS  # noqa: E402
 
 DRYRUN = "experiments/dryrun"
+SCENARIO_JSON = "experiments/scenarios.json"
+
+
+def scenario_section() -> str:
+    """Run a small declarative scenario grid through `run_scenarios`
+    and render the spec -> cohort -> RunResult chain as a table.
+
+    The grid mixes frame sizes so the cohort compiler visibly
+    partitions it; the exported RunResult JSON lands next to the
+    dry-run artifacts and is schema-validated."""
+    from repro.api import (RUN_RESULT_SCHEMA, ScenarioSpec, grid,
+                           run_scenarios, validate_run_result_json)
+    specs = grid(ScenarioSpec(duration=8.0, code_period_frames=40,
+                              qa="epoch"),
+                 system=["webrtc", "artic"], cc_kind=["gcc", "bbr"],
+                 trace=["fluctuating", "mobility.driving"])
+    specs += grid(ScenarioSpec(duration=8.0, scene="lawn", frame_h=64,
+                               frame_w=64, rc_probe_stride=2),
+                  system=["webrtc", "artic"])
+    result = run_scenarios(specs)
+    os.makedirs(os.path.dirname(SCENARIO_JSON), exist_ok=True)
+    validate_run_result_json(result.to_json(SCENARIO_JSON))
+
+    lines = [
+        f"{len(result)} scenarios compiled into {len(result.cohorts)} "
+        f"cohorts (grouped by fps / duration / frame size / probe "
+        f"stride); full per-session metrics exported to "
+        f"`{SCENARIO_JSON}` (schema `{RUN_RESULT_SCHEMA}`).\n",
+        "| system | cc | trace | frame | accuracy | avg ms | Mbps |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for s, m in zip(result.specs, result.metrics):
+        lines.append(
+            f"| {s.system} | {s.cc_kind} | {s.trace} "
+            f"| {s.frame_h}x{s.frame_w} | {m.accuracy:.2f} "
+            f"| {m.avg_latency_ms:.0f} | {m.bandwidth_used / 1e6:.2f} |")
+    return "\n".join(lines)
 
 
 def bench_csv():
@@ -73,6 +110,8 @@ def main():
     print(H3_NARRATIVE)
     print(TEMPLATE_PAPER)
     print("```\n" + bench_csv() + "\n```")
+    print(TEMPLATE_SCENARIOS)
+    print(scenario_section())
     print(TEMPLATE_TAIL)
 
 
@@ -232,6 +271,15 @@ reproduction target, absolute Kbps/ms are simulator-scale.
 ### Benchmark CSV (name,us_per_call,derived)
 """
 
+TEMPLATE_SCENARIOS = """
+## §Scenario grid (declarative workload API)
+
+Workloads are declared as `ScenarioSpec`s and run through
+`repro.api.run_scenarios`, which auto-partitions mixed-shape grids into
+fleet cohorts (see README "Scenario API").  The table below is
+regenerated on every `make_experiments.py` run:
+"""
+
 TEMPLATE_TAIL = """
 ## Reproduce
 
@@ -239,6 +287,7 @@ TEMPLATE_TAIL = """
 PYTHONPATH=src pytest tests/                      # unit+integration+property
 PYTHONPATH=src python -m benchmarks.run           # paper figures (quick)
 BENCH_QUICK=0 PYTHONPATH=src python -m benchmarks.run   # full size
+PYTHONPATH=src python -m repro.api                # scenario-grid smoke
 PYTHONPATH=src python -m repro.launch.dryrun --all      # all 64 cells
 PYTHONPATH=src python -m repro.launch.dryrun --arch dbrx-132b \\
     --shape train_4k --mesh single --variant moe_bf16_cap1  # a §Perf variant

@@ -1,0 +1,79 @@
+"""Public facade for driving the Artic simulator.
+
+    from repro.api import ScenarioSpec, grid, run_scenarios
+
+    result = run_scenarios(grid("fig13",
+                                system=["webrtc", "artic"],
+                                cc_kind=["gcc", "bbr"],
+                                trace_seed=[0, 1]))
+    print(result.aggregate(by=("cc_kind", "system")))
+
+Workload specs are pure data (`ScenarioSpec`); `run_scenarios` compiles
+them into cohorts of fleet-compatible sessions, runs each cohort as one
+vectorized `Fleet`, and returns a `RunResult` (stacked metrics + tags,
+JSON/CSV export).  `repro.core.fleet` stays available as the lower
+layer; nothing here hand-assembles `FleetSession` lists.
+
+`python -m repro.api` runs a tiny grid end to end and validates the
+exported JSON against the RunResult schema — the CI smoke job.
+"""
+from __future__ import annotations
+
+from repro.core.scenario import (PRESETS, QA_POLICIES, RUN_RESULT_SCHEMA,
+                                 SCALAR_METRICS, SYSTEMS, TRACE_FAMILIES,
+                                 Cohort, RunResult, ScenarioSpec,
+                                 build_fleet, build_session, cohort_key,
+                                 compile_cohorts, grid, preset,
+                                 register_preset, run_scenarios,
+                                 validate_run_result_json)
+from repro.core.session import (QASample, SessionConfig, SessionMetrics,
+                                run_session)
+
+__all__ = [
+    "ScenarioSpec", "RunResult", "Cohort", "run_scenarios", "grid",
+    "preset", "register_preset", "PRESETS", "SYSTEMS", "TRACE_FAMILIES",
+    "QA_POLICIES", "SCALAR_METRICS", "RUN_RESULT_SCHEMA",
+    "build_session", "build_fleet", "cohort_key", "compile_cohorts",
+    "validate_run_result_json",
+    "QASample", "SessionConfig", "SessionMetrics", "run_session",
+]
+
+
+def smoke(out_path: str = "/tmp/artic_scenario_smoke.json") -> RunResult:
+    """Tiny end-to-end grid: 2 system variants x 2 trace families, short
+    duration, mixed frame sizes (so cohort partitioning is exercised),
+    exported to JSON and schema-validated."""
+    import json
+
+    specs = grid(ScenarioSpec(duration=3.0, scene="retail", qa="periodic",
+                              qa_kwargs=dict(start=1.0, period=1.0,
+                                             count=2,
+                                             answer_window=1.0)),
+                 system=["webrtc", "artic"],
+                 trace=["fluctuating", "mobility.driving"])
+    # a thumbnail member lands in its own cohort within the same call
+    specs.append(specs[0].with_(frame_h=64, frame_w=64, scene="lawn"))
+    result = run_scenarios(specs)
+    doc = result.to_json(out_path)
+    validate_run_result_json(doc)
+    with open(out_path) as f:
+        validate_run_result_json(json.load(f))  # survives the round trip
+    print(f"[smoke] {len(result)} scenarios in {len(result.cohorts)} "
+          f"cohorts -> {out_path} (schema {RUN_RESULT_SCHEMA} OK)")
+    for key, agg in result.aggregate(by=("system", "trace")).items():
+        print(f"[smoke]   {key}: acc={agg['accuracy']:.2f} "
+              f"lat={agg['avg_latency_ms']:.0f}ms")
+    return result
+
+
+def _main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="/tmp/artic_scenario_smoke.json",
+                    help="where the smoke grid's RunResult JSON lands")
+    smoke(ap.parse_args().out)
+
+
+if __name__ == "__main__":
+    _main()

@@ -5,3 +5,5 @@
 #   machine (ClientState / ServerState, heapq event queues, step()).
 # repro.core.fleet — N sessions in lockstep ticks with one batched
 #   codec dispatch + one vectorized channel advance per tick.
+# repro.core.scenario — declarative ScenarioSpec workloads compiled into
+#   auto-partitioned fleet cohorts (run via repro.api.run_scenarios).

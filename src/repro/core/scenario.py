@@ -1,0 +1,552 @@
+"""Declarative scenario API: workload specs -> auto-partitioned cohorts.
+
+Every entry point used to hand-assemble `FleetSession` lists and was
+bound by `Fleet.__init__`'s homogeneity rule (same fps / duration /
+frame size / rc_probe_stride across members).  This module moves that
+restriction out of the user-facing API and into an internal
+partitioning step:
+
+    ScenarioSpec         one session's workload as pure data (system
+                         variant, CC, trace family + seed, scene
+                         category, fps/duration/frame size, ABR/ZeCo
+                         knobs, QA policy) — frozen, hashable,
+                         JSON-serializable.
+    preset()/grid()      a registry of named base specs plus a
+                         cartesian-product expander over spec fields.
+    compile_cohorts()    groups specs into cohorts of fleet-compatible
+                         sessions (same fps, duration, frame size,
+                         probe stride, trace dt).
+    run_scenarios()      materializes each spec into a FleetSession,
+                         runs every cohort as one `Fleet`, and
+                         reassembles a `RunResult` (per-session metrics
+                         as stacked arrays + spec tags, JSON/CSV
+                         export, aggregation helpers) in input order.
+
+A mixed-shape grid (several frame sizes x several fps) therefore runs
+in a single `run_scenarios` call, and each cohort reproduces a direct
+`Fleet` over the same sessions bit for bit (tests/test_scenario.py).
+`Fleet`/`FleetSession` remain the lower layer for code that needs
+manual control; `repro.api` is the thin public facade.
+"""
+from __future__ import annotations
+
+import csv
+import dataclasses
+import io
+import itertools
+import json
+from typing import (Any, Callable, Dict, Iterable, List, Optional, Sequence,
+                    Tuple, Union)
+
+import numpy as np
+
+from repro.core.fleet import Fleet, FleetSession
+from repro.core.session import QASample, SessionConfig, SessionMetrics
+from repro.net import traces as trace_lib
+from repro.video.scenes import Scene, make_scene
+
+# --------------------------------------------------------------------------
+# Frozen-kwargs plumbing: spec extension fields are tuples of (key, value)
+# pairs so ScenarioSpec stays hashable; dicts/lists are accepted at
+# construction and frozen automatically.
+# --------------------------------------------------------------------------
+FrozenKwargs = Tuple[Tuple[str, Any], ...]
+_KWARGS_FIELDS = ("trace_kwargs", "scene_kwargs", "qa_kwargs",
+                  "session_kwargs")
+
+
+def _freeze(value, top: bool = True) -> Any:
+    if isinstance(value, dict):
+        if not top:
+            # _thaw cannot tell a frozen dict from a tuple of pairs, so
+            # nesting would come back corrupted — fail loudly instead
+            raise ValueError("nested dicts in *_kwargs are not supported; "
+                             "flatten the value or add a spec field")
+        return tuple((k, _freeze(v, top=False)) for k, v in value.items())
+    if isinstance(value, (list, tuple)):
+        return tuple(_freeze(v, top=False) for v in value)
+    return value
+
+
+def _thaw(kwargs: FrozenKwargs) -> Dict[str, Any]:
+    return {k: (list(v) if isinstance(v, tuple) else v) for k, v in kwargs}
+
+
+# --------------------------------------------------------------------------
+# System variants (paper §7 baselines)
+# --------------------------------------------------------------------------
+SYSTEMS: Dict[str, Dict[str, bool]] = {
+    "webrtc": dict(use_recap=False, use_zeco=False),
+    "webrtc+recap": dict(use_recap=True, use_zeco=False),
+    "webrtc+zeco": dict(use_recap=False, use_zeco=True),
+    "artic": dict(use_recap=True, use_zeco=True),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """One session's workload as pure data.
+
+    Everything the old call sites passed positionally into
+    `make_scene` / trace factories / `SessionConfig` lives here as a
+    named, comparable field; `with_(**overrides)` derives variants and
+    `grid()` expands axes of them.  Extension knobs that are not worth
+    first-class fields ride in the `*_kwargs` tuples (frozen dicts)."""
+    # system variant + congestion control
+    system: str = "artic"             # key into SYSTEMS
+    cc_kind: str = "gcc"              # gcc | bbr
+    # scene (content)
+    scene: str = "retail"             # category, see video.scenes
+    moving: bool = False
+    scene_seed: int = 0
+    frame_h: int = 256
+    frame_w: int = 256
+    code_period_frames: Optional[int] = None
+    scene_kwargs: FrozenKwargs = ()   # extra make_scene kwargs (n_frames…)
+    # trace (network)
+    trace: str = "fluctuating"        # key into TRACE_FAMILIES
+    trace_seed: int = 0
+    trace_kwargs: FrozenKwargs = ()   # family kwargs (mbps, levels_kbps…)
+    # timing
+    fps: float = 10.0
+    duration: float = 40.0
+    # ABR / ZeCoStream knobs
+    tau: float = 0.8
+    gamma: float = 2.0
+    rc_probe_stride: int = 1
+    seed: int = 0                     # SessionConfig seed
+    session_kwargs: FrozenKwargs = () # extra SessionConfig kwargs
+    # conversational QA policy
+    qa: str = "none"                  # key into QA_POLICIES
+    qa_kwargs: FrozenKwargs = ()
+    # free-form label carried through to RunResult tags
+    tag: str = ""
+
+    def __post_init__(self):
+        if self.system not in SYSTEMS:
+            raise ValueError(f"unknown system {self.system!r}; "
+                             f"one of {sorted(SYSTEMS)}")
+        for f in _KWARGS_FIELDS:
+            # accept dicts (or pair lists) and freeze them for hashing
+            object.__setattr__(self, f, _freeze(dict(getattr(self, f))))
+
+    # -- derivation ----------------------------------------------------
+    def with_(self, **overrides) -> "ScenarioSpec":
+        """Functional update; dict values for `*_kwargs` are frozen."""
+        return dataclasses.replace(self, **overrides)
+
+    # -- views ---------------------------------------------------------
+    @property
+    def flags(self) -> Dict[str, bool]:
+        return dict(SYSTEMS[self.system])
+
+    @property
+    def frame_hw(self) -> Tuple[int, int]:
+        return (self.frame_h, self.frame_w)
+
+    def session_config(self) -> SessionConfig:
+        return SessionConfig(fps=self.fps, duration=self.duration,
+                             cc_kind=self.cc_kind, tau=self.tau,
+                             gamma=self.gamma,
+                             rc_probe_stride=self.rc_probe_stride,
+                             seed=self.seed, **self.flags,
+                             **_thaw(self.session_kwargs))
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        for f in _KWARGS_FIELDS:
+            d[f] = _thaw(d[f])
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ScenarioSpec":
+        return cls(**d)
+
+
+# --------------------------------------------------------------------------
+# Trace families, QA policies, presets — three small registries
+# --------------------------------------------------------------------------
+def _mobility(kind: str):
+    def make(duration: float, seed: int, **kw) -> trace_lib.Trace:
+        return trace_lib.mobility_trace(kind, duration, seed=seed, **kw)
+    return make
+
+
+TRACE_FAMILIES: Dict[str, Callable[..., trace_lib.Trace]] = {
+    "static": lambda duration, seed, **kw:
+        trace_lib.static_trace(duration, seed=seed, **kw),
+    "fluctuating": lambda duration, seed, **kw:
+        trace_lib.fluctuating_trace(duration, seed=seed, **kw),
+    "mobility.walking": _mobility("walking"),
+    "mobility.driving": _mobility("driving"),
+    "elevator": lambda duration, seed, **kw:
+        trace_lib.elevator_trace(duration, seed=seed, **kw),
+}
+
+
+def _qa_none(scene: Scene, spec: ScenarioSpec) -> List[QASample]:
+    return []
+
+
+def _qa_epoch(scene: Scene, spec: ScenarioSpec) -> List[QASample]:
+    """One question shortly after each content epoch begins — the user
+    asks about what just appeared (§4.1 'newly appeared content'),
+    giving every system the same runway within the epoch."""
+    period = scene.code_period_frames / spec.fps
+    out, i = [], 0
+    t = period + 0.5
+    while t < spec.duration * 0.95:
+        out.append(QASample(t_ask=float(t),
+                            obj_idx=i % len(scene.objects),
+                            answer_window=min(4.0, period - 0.6)))
+        i += 1
+        t += period
+    return out
+
+
+def _qa_periodic(scene: Scene, spec: ScenarioSpec, *, start: float = 4.5,
+                 period: float = 4.0, answer_window: float = 3.4,
+                 count: Optional[int] = None) -> List[QASample]:
+    """Fixed-cadence questions cycling over the scene's objects."""
+    if count is None:
+        count = int(spec.duration / period) - 2
+    return [QASample(t_ask=start + period * i,
+                     obj_idx=i % len(scene.objects),
+                     answer_window=answer_window)
+            for i in range(count)]
+
+
+QA_POLICIES: Dict[str, Callable[..., List[QASample]]] = {
+    "none": _qa_none,
+    "epoch": _qa_epoch,
+    "periodic": _qa_periodic,
+}
+
+# Named base specs.  These replace the trace/scene/QA setup helpers that
+# were copy-pasted across benchmarks/bench_*.py.
+PRESETS: Dict[str, ScenarioSpec] = {}
+
+
+def register_preset(name: str, spec: ScenarioSpec,
+                    overwrite: bool = False) -> ScenarioSpec:
+    if name in PRESETS and not overwrite:
+        raise ValueError(f"preset {name!r} already registered")
+    PRESETS[name] = spec
+    return spec
+
+
+def preset(name: str) -> ScenarioSpec:
+    try:
+        return PRESETS[name]
+    except KeyError:
+        raise KeyError(f"unknown preset {name!r}; "
+                       f"one of {sorted(PRESETS)}") from None
+
+
+register_preset("artic", ScenarioSpec())
+register_preset("webrtc", ScenarioSpec(system="webrtc"))
+# Fig. 13 cell: epoch-locked QA on a 4 s code period (bench_e2e)
+register_preset("fig13", ScenarioSpec(code_period_frames=40, qa="epoch"))
+# thumbnail-tier fleet member for throughput benchmarks (bench_fleet)
+register_preset("fleet-thumb", ScenarioSpec(
+    scene="lawn", frame_h=64, frame_w=64, code_period_frames=40,
+    trace="fluctuating",
+    trace_kwargs=dict(switches_per_min=6, levels_kbps=[1710, 1130, 710]),
+    rc_probe_stride=2))
+# starved uplink so ZeCoStream engages (bench_zecostream)
+register_preset("zeco-starved", ScenarioSpec(
+    system="webrtc+zeco", code_period_frames=40,
+    trace="static", trace_kwargs=dict(mbps=0.35)))
+
+
+# --------------------------------------------------------------------------
+# Grid expansion
+# --------------------------------------------------------------------------
+def grid(base: Union[ScenarioSpec, str, None] = None,
+         **axes) -> List[ScenarioSpec]:
+    """Cartesian product over spec fields.
+
+    >>> grid("fig13", system=["webrtc", "artic"], cc_kind=["gcc", "bbr"])
+
+    Each axis value may be a list/tuple (expanded) or a scalar (applied
+    to every point).  The first axis varies slowest, so the output order
+    matches nested for-loops in the given keyword order."""
+    if isinstance(base, str):
+        base = preset(base)
+    base = base or ScenarioSpec()
+    keys = list(axes)
+    lists = [v if isinstance(v, (list, tuple, range)) else [v]
+             for v in axes.values()]
+    return [base.with_(**dict(zip(keys, combo)))
+            for combo in itertools.product(*lists)]
+
+
+# --------------------------------------------------------------------------
+# Materialization: spec -> FleetSession
+# --------------------------------------------------------------------------
+def build_session(spec: ScenarioSpec, calibrator=None) -> FleetSession:
+    """Materialize one spec into the lower-layer `FleetSession`."""
+    scene = make_scene(spec.scene, spec.moving, seed=spec.scene_seed,
+                       h=spec.frame_h, w=spec.frame_w,
+                       code_period_frames=spec.code_period_frames,
+                       **_thaw(spec.scene_kwargs))
+    try:
+        trace_factory = TRACE_FAMILIES[spec.trace]
+    except KeyError:
+        raise KeyError(f"unknown trace family {spec.trace!r}; "
+                       f"one of {sorted(TRACE_FAMILIES)}") from None
+    trace = trace_factory(spec.duration, spec.trace_seed,
+                          **_thaw(spec.trace_kwargs))
+    try:
+        qa_policy = QA_POLICIES[spec.qa]
+    except KeyError:
+        raise KeyError(f"unknown QA policy {spec.qa!r}; "
+                       f"one of {sorted(QA_POLICIES)}") from None
+    qa = qa_policy(scene, spec, **_thaw(spec.qa_kwargs))
+    return FleetSession(scene=scene, qa_samples=qa, trace=trace,
+                        cfg=spec.session_config(), calibrator=calibrator)
+
+
+# --------------------------------------------------------------------------
+# Cohort compilation: the homogeneity rule, internalized
+# --------------------------------------------------------------------------
+def cohort_key(spec: ScenarioSpec) -> Tuple:
+    """Fleet-compatibility key: sessions sharing it may run as one
+    `Fleet` (same frame clock, frame size, probe stride and trace time
+    step — everything `Fleet.__init__`/`TraceBank.stack` require)."""
+    trace_dt = dict(spec.trace_kwargs).get("dt",
+                                           trace_lib.DEFAULT_TRACE_DT)
+    return (spec.fps, spec.duration, spec.frame_h, spec.frame_w,
+            spec.rc_probe_stride, trace_dt)
+
+
+@dataclasses.dataclass(frozen=True)
+class Cohort:
+    """A fleet-compatible group of scenario indices (into the input
+    spec list), in input order."""
+    key: Tuple
+    indices: Tuple[int, ...]
+
+    def to_dict(self) -> Dict[str, Any]:
+        fps, duration, h, w, stride, dt = self.key
+        return {"fps": fps, "duration": duration, "frame_h": h,
+                "frame_w": w, "rc_probe_stride": stride, "trace_dt": dt,
+                "sessions": list(self.indices)}
+
+
+def compile_cohorts(specs: Sequence[ScenarioSpec]) -> List[Cohort]:
+    """Partition specs into cohorts, ordered by first occurrence."""
+    groups: Dict[Tuple, List[int]] = {}
+    for i, s in enumerate(specs):
+        groups.setdefault(cohort_key(s), []).append(i)
+    return [Cohort(key=k, indices=tuple(idx)) for k, idx in groups.items()]
+
+
+def build_fleet(specs: Sequence[ScenarioSpec], calibrator=None,
+                **fleet_kwargs) -> Fleet:
+    """Materialize a single-cohort spec list into one `Fleet`.
+
+    For callers (benchmarks) that need the Fleet object itself — e.g. to
+    time `.run()` apart from construction.  Raises if the specs span
+    more than one cohort; use `run_scenarios` for mixed grids."""
+    cohorts = compile_cohorts(specs)
+    if len(cohorts) != 1:
+        raise ValueError(
+            f"specs span {len(cohorts)} cohorts "
+            f"{[c.key for c in cohorts]}; build_fleet needs exactly one "
+            "(run_scenarios handles mixed grids)")
+    return Fleet([build_session(s, calibrator) for s in specs],
+                 **fleet_kwargs)
+
+
+# --------------------------------------------------------------------------
+# RunResult: stacked metrics + tags, export, aggregation
+# --------------------------------------------------------------------------
+RUN_RESULT_SCHEMA = "artic.scenario.run_result/v1"
+
+# scalar per-session metrics stacked into (N,) arrays
+SCALAR_METRICS = ("accuracy", "avg_latency_ms", "p95_latency_ms",
+                  "avg_bitrate", "bandwidth_used", "n_qa",
+                  "dropped_frames", "zeco_engaged_frames")
+
+
+@dataclasses.dataclass
+class RunResult:
+    """Structured output of `run_scenarios`, in input order.
+
+    `metrics[i]` is the full `SessionMetrics` of `specs[i]`; the scalar
+    fields are also stacked into (N,) arrays (`values`, `arrays`) keyed
+    by the spec's fields as tags for selection and aggregation."""
+    specs: List[ScenarioSpec]
+    metrics: List[SessionMetrics]
+    cohorts: List[Cohort]
+    phase_times: Optional[List[Dict[str, float]]] = None  # per cohort
+
+    def __len__(self) -> int:
+        return len(self.specs)
+
+    # -- stacked arrays ------------------------------------------------
+    def values(self, field: str) -> np.ndarray:
+        return np.asarray([getattr(m, field) for m in self.metrics])
+
+    def arrays(self) -> Dict[str, np.ndarray]:
+        return {f: self.values(f) for f in SCALAR_METRICS}
+
+    # -- tag-based selection / aggregation -----------------------------
+    def select(self, **where) -> "RunResult":
+        """Subset by spec-field equality, e.g. select(system='artic').
+
+        `phase_times` is not carried over: it is keyed to the original
+        run's cohorts, which a subset no longer describes."""
+        keep = [i for i, s in enumerate(self.specs)
+                if all(getattr(s, k) == v for k, v in where.items())]
+        sub_specs = [self.specs[i] for i in keep]
+        return RunResult(specs=sub_specs,
+                         metrics=[self.metrics[i] for i in keep],
+                         cohorts=compile_cohorts(sub_specs))
+
+    def aggregate(self, by: Sequence[str],
+                  fields: Sequence[str] = ("accuracy", "avg_latency_ms"),
+                  reduce=np.mean) -> Dict[Tuple, Dict[str, float]]:
+        """Group sessions by spec fields, reduce each metric per group.
+
+        Returns {group-key-tuple: {field: reduced value}}, groups in
+        first-occurrence order."""
+        out: Dict[Tuple, Dict[str, List[float]]] = {}
+        for s, m in zip(self.specs, self.metrics):
+            key = tuple(getattr(s, k) for k in by)
+            acc = out.setdefault(key, {f: [] for f in fields})
+            for f in fields:
+                acc[f].append(getattr(m, f))
+        return {k: {f: float(reduce(v[f])) for f in fields}
+                for k, v in out.items()}
+
+    # -- export --------------------------------------------------------
+    def to_json(self, path: Optional[str] = None,
+                include_series: bool = False) -> Dict[str, Any]:
+        """Schema-stable dict (optionally written to `path`).
+
+        `include_series=True` adds the per-frame latency/rate/confidence
+        series; the default keeps the export compact."""
+        scenarios = []
+        cohort_of = {i: ci for ci, c in enumerate(self.cohorts)
+                     for i in c.indices}
+        for i, (s, m) in enumerate(zip(self.specs, self.metrics)):
+            rec = {"spec": s.to_dict(),
+                   "cohort": cohort_of[i],
+                   "metrics": {f: float(getattr(m, f))
+                               for f in SCALAR_METRICS}}
+            rec["metrics"]["qa_results"] = [bool(b) for b in m.qa_results]
+            if include_series:
+                rec["series"] = {
+                    "latencies": [float(v) for v in m.latencies],
+                    "rates": [float(v) for v in m.rates],
+                    "confidences": [float(v) for v in m.confidences]}
+            scenarios.append(rec)
+        doc = {"schema": RUN_RESULT_SCHEMA,
+               "n_scenarios": len(self.specs),
+               "scenarios": scenarios,
+               "cohorts": [c.to_dict() for c in self.cohorts]}
+        if path is not None:
+            with open(path, "w") as f:
+                json.dump(doc, f, indent=1, default=_json_default)
+        return doc
+
+    def to_csv(self, path: Optional[str] = None) -> str:
+        """One row per scenario: spec fields + scalar metrics."""
+        spec_fields = [f.name for f in dataclasses.fields(ScenarioSpec)
+                       if f.name not in _KWARGS_FIELDS]
+        buf = io.StringIO()
+        w = csv.writer(buf)
+        w.writerow(spec_fields + list(SCALAR_METRICS))
+        for s, m in zip(self.specs, self.metrics):
+            w.writerow([getattr(s, f) for f in spec_fields]
+                       + [getattr(m, f) for f in SCALAR_METRICS])
+        text = buf.getvalue()
+        if path is not None:
+            with open(path, "w") as f:
+                f.write(text)
+        return text
+
+
+def _json_default(o):
+    if isinstance(o, (np.integer,)):
+        return int(o)
+    if isinstance(o, (np.floating,)):
+        return float(o)
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    raise TypeError(f"not JSON-serializable: {type(o)}")
+
+
+def validate_run_result_json(doc: Dict[str, Any]) -> None:
+    """Raise ValueError unless `doc` matches RUN_RESULT_SCHEMA.
+
+    Checked by the CI smoke job; keep in sync with `to_json`."""
+    def need(cond, msg):
+        if not cond:
+            raise ValueError(f"run_result schema violation: {msg}")
+
+    need(doc.get("schema") == RUN_RESULT_SCHEMA,
+         f"schema tag {doc.get('schema')!r} != {RUN_RESULT_SCHEMA!r}")
+    scen = doc.get("scenarios")
+    need(isinstance(scen, list) and len(scen) == doc.get("n_scenarios"),
+         "scenarios list missing or length != n_scenarios")
+    cohorts = doc.get("cohorts")
+    need(isinstance(cohorts, list) and cohorts, "cohorts missing")
+    seen = []
+    for c in cohorts:
+        for k in ("fps", "duration", "frame_h", "frame_w",
+                  "rc_probe_stride", "trace_dt", "sessions"):
+            need(k in c, f"cohort missing key {k!r}")
+        seen.extend(c["sessions"])
+    need(sorted(seen) == list(range(len(scen))),
+         "cohorts do not partition the scenario indices")
+    for i, rec in enumerate(scen):
+        need(isinstance(rec.get("spec"), dict), f"scenario {i}: no spec")
+        ScenarioSpec.from_dict(rec["spec"])  # round-trips
+        need(rec.get("cohort") in range(len(cohorts)),
+             f"scenario {i}: bad cohort index")
+        need(i in cohorts[rec["cohort"]]["sessions"],
+             f"scenario {i}: not listed in its cohort")
+        m = rec.get("metrics")
+        need(isinstance(m, dict), f"scenario {i}: no metrics")
+        for f in SCALAR_METRICS:
+            need(isinstance(m.get(f), (int, float)),
+                 f"scenario {i}: metric {f!r} missing or non-numeric")
+        need(isinstance(m.get("qa_results"), list),
+             f"scenario {i}: qa_results missing")
+
+
+# --------------------------------------------------------------------------
+# The entry point
+# --------------------------------------------------------------------------
+def run_scenarios(specs: Union[ScenarioSpec, str,
+                               Iterable[Union[ScenarioSpec, str]]],
+                  *, calibrator=None, fused_plan: bool = False,
+                  profile: bool = False) -> RunResult:
+    """Compile specs into cohorts, run each cohort as one `Fleet`, and
+    return per-session metrics in input order.
+
+    Accepts a single spec, a preset name, or any iterable mixing the
+    two.  Sessions sharing a cohort advance in lockstep ticks with
+    batched codec dispatches; the partitioning is an internal detail —
+    a grid mixing frame sizes and frame rates is one call."""
+    if isinstance(specs, (ScenarioSpec, str)):
+        specs = [specs]
+    specs = [preset(s) if isinstance(s, str) else s for s in specs]
+    if not specs:
+        raise ValueError("run_scenarios needs at least one spec")
+    cohorts = compile_cohorts(specs)
+    metrics: List[Optional[SessionMetrics]] = [None] * len(specs)
+    phase_times: List[Dict[str, float]] = []
+    for cohort in cohorts:
+        fleet = Fleet([build_session(specs[i], calibrator)
+                       for i in cohort.indices],
+                      fused_plan=fused_plan, profile=profile)
+        for i, m in zip(cohort.indices, fleet.run()):
+            metrics[i] = m
+        if profile:
+            phase_times.append(dict(fleet.phase_times))
+    return RunResult(specs=specs, metrics=metrics, cohorts=cohorts,
+                     phase_times=phase_times if profile else None)

@@ -36,7 +36,7 @@ import numpy as np
 
 from repro.configs import registry, shapes as shape_lib
 from repro.distributed import sharding as shlib
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, use_mesh
 from repro.models import transformer as tfm
 from repro.roofline import analysis as roofline
 from repro.training.optimizer import AdafactorState, AdamWState
@@ -244,7 +244,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     p_axes = tfm.axes(cfg)
     p_sh = shlib.make_shardings(p_axes, p_specs, mesh, rules)
 
-    with shlib.rules_context(rules), jax.set_mesh(mesh):
+    with shlib.rules_context(rules), use_mesh(mesh):
         if spec.kind == "train":
             from repro.training.train_loop import init_state
             train_step = make_train_step(cfg, settings)
@@ -302,9 +302,18 @@ def probe_depths(cfg):
     return 2, 4
 
 
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """Version-compat: `Compiled.cost_analysis()` returns a dict on new
+    JAX but a one-element list of dicts on older releases."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def measure(lowered_compiled):
     compiled = lowered_compiled
-    cost = compiled.cost_analysis() or {}
+    cost = cost_analysis_dict(compiled)
     coll = roofline.collective_bytes_from_hlo(compiled.as_text())
     return (float(cost.get("flops", 0.0)),
             float(cost.get("bytes accessed", 0.0)),
@@ -366,7 +375,7 @@ def collect(lowered, compiled, mesh, cfg, shape_name: str,
             probe: Optional[Dict] = None) -> Dict[str, Any]:
     spec = shape_lib.SHAPES[shape_name]
     chips = int(np.prod(mesh.devices.shape))
-    cost = compiled.cost_analysis() or {}
+    cost = cost_analysis_dict(compiled)
     mem = compiled.memory_analysis()
     hlo = compiled.as_text()
     coll = roofline.collective_bytes_from_hlo(hlo)
@@ -450,7 +459,7 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, out_path: str,
     compiled = lowered.compile()
     t_compile = time.time() - t0
     print(compiled.memory_analysis())
-    print({k: v for k, v in (compiled.cost_analysis() or {}).items()
+    print({k: v for k, v in cost_analysis_dict(compiled).items()
            if k in ("flops", "bytes accessed")})
     probe = None
     if with_probe:

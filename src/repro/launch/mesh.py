@@ -13,6 +13,18 @@ import numpy as np
 import jax
 
 
+def use_mesh(mesh):
+    """Version-compat mesh context: `jax.set_mesh` (new), falling back
+    to `jax.sharding.use_mesh`, falling back to entering the Mesh itself
+    (a context manager on every JAX we support).  Use as
+    `with use_mesh(mesh): ...` wherever the current mesh must be set."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return mesh
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

@@ -13,6 +13,10 @@ from typing import List, Optional
 
 import numpy as np
 
+# shared sampling period of every trace factory (seconds per tick);
+# the scenario compiler's cohort key assumes this default
+DEFAULT_TRACE_DT = 0.05
+
 # Agora VideoEncoderConfiguration industry bitrate levels (Kbps) [23]
 INDUSTRY_LEVELS_KBPS = [5000, 3000, 1710, 1130, 710, 400, 290]
 
@@ -74,7 +78,7 @@ class TraceBank:
         return self.concat[self.offsets + (k % self.lengths)]
 
 
-def static_trace(duration: float = 60.0, dt: float = 0.05,
+def static_trace(duration: float = 60.0, dt: float = DEFAULT_TRACE_DT,
                  mbps: float = 5.0, jitter: float = 0.03,
                  seed: int = 0) -> Trace:
     rng = np.random.default_rng(seed)
@@ -83,7 +87,7 @@ def static_trace(duration: float = 60.0, dt: float = 0.05,
     return Trace(bw, dt, "static")
 
 
-def elevator_trace(duration: float = 60.0, dt: float = 0.05,
+def elevator_trace(duration: float = 60.0, dt: float = DEFAULT_TRACE_DT,
                    event_at: float = 26.25, drop_mbps: float = 1.23,
                    drop_len: float = 12.0, ramp: float = 1.5,
                    seed: int = 0) -> Trace:
@@ -103,7 +107,7 @@ def elevator_trace(duration: float = 60.0, dt: float = 0.05,
     return t
 
 
-def fluctuating_trace(duration: float = 60.0, dt: float = 0.05,
+def fluctuating_trace(duration: float = 60.0, dt: float = DEFAULT_TRACE_DT,
                       switches_per_min: float = 4.0,
                       levels_kbps: Optional[List[float]] = None,
                       seed: int = 0) -> Trace:
@@ -122,7 +126,7 @@ def fluctuating_trace(duration: float = 60.0, dt: float = 0.05,
 
 
 def mobility_trace(kind: str = "walking", duration: float = 120.0,
-                   dt: float = 0.05, seed: int = 0) -> Trace:
+                   dt: float = DEFAULT_TRACE_DT, seed: int = 0) -> Trace:
     """Walking/driving 5G uplink (Ghoshal et al. [37] style): log-normal
     fading around a mobility-dependent mean with occasional outages."""
     rng = np.random.default_rng(seed)

@@ -37,6 +37,16 @@ def test_rules_context_override():
     assert sh.resolve_axis("embed", 4096, SIZES) == "data"
 
 
+def test_use_mesh_shim_is_a_context_manager():
+    """The version-compat shim must yield a usable context on the
+    installed JAX regardless of which mesh API it exposes."""
+    from repro.launch.mesh import use_mesh
+    mesh = jax.sharding.Mesh(
+        np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    with use_mesh(mesh):
+        pass
+
+
 def test_is_axes_leaf():
     from repro.training.train_loop import TrainState
     assert sh.is_axes_leaf(("embed", None))
@@ -52,7 +62,7 @@ SUBPROCESS_SHARDED = textwrap.dedent("""
     import jax, jax.numpy as jnp, numpy as np
     from repro.configs import registry
     from repro.distributed import sharding as sh
-    from repro.launch.mesh import make_debug_mesh
+    from repro.launch.mesh import make_debug_mesh, use_mesh
     from repro.models import transformer as tfm
     from repro.models.config import reduced
     from repro.training.train_loop import TrainSettings, init_state, make_train_step
@@ -62,7 +72,7 @@ SUBPROCESS_SHARDED = textwrap.dedent("""
                   n_kv_heads=2, head_dim=16, d_ff=128)
     mesh = make_debug_mesh((2, 2), ("data", "model"))
     s = TrainSettings(peak_lr=1e-3, warmup_steps=1, total_steps=10)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         state = init_state(jax.random.PRNGKey(0), cfg, s)
         p_sh = sh.make_shardings(tfm.axes(cfg),
                                  jax.eval_shape(lambda: tfm.init(jax.random.PRNGKey(0), cfg)),

@@ -1,0 +1,253 @@
+"""Scenario API tests: spec/grid/preset mechanics, cohort partitioning,
+exact parity of run_scenarios with direct Fleet execution, mixed-shape
+grids in one call, and the RunResult export schema."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import (PRESETS, RunResult, ScenarioSpec, build_fleet,
+                       build_session, cohort_key, compile_cohorts, grid,
+                       preset, register_preset, run_scenarios,
+                       validate_run_result_json)
+from repro.core.fleet import Fleet
+from repro.core.session import run_session
+
+
+def _base(duration: float = 8.0) -> ScenarioSpec:
+    return ScenarioSpec(duration=duration, code_period_frames=40,
+                        qa="periodic",
+                        qa_kwargs=dict(start=3.0, period=2.5, count=2,
+                                       answer_window=2.0))
+
+
+def _hetero_specs(duration: float = 8.0):
+    """Heterogeneous but fleet-compatible: scene category, motion, trace
+    family, CC and system variant all differ across members."""
+    out = []
+    for k in range(4):
+        out.append(_base(duration).with_(
+            scene=["retail", "street", "office", "document"][k % 4],
+            moving=k % 2 == 1, scene_seed=k, trace_seed=k, seed=k,
+            trace=["static", "fluctuating", "mobility.driving",
+                   "elevator"][k % 4],
+            trace_kwargs=dict(mbps=0.5) if k % 4 == 0 else {},
+            cc_kind=["gcc", "bbr"][k % 2],
+            system=["artic", "webrtc+zeco", "webrtc+recap",
+                    "webrtc"][k]))
+    return out
+
+
+def _assert_metrics_equal(a, b):
+    assert a.accuracy == b.accuracy
+    assert a.n_qa == b.n_qa and a.qa_results == b.qa_results
+    assert a.latencies == b.latencies
+    assert a.avg_bitrate == b.avg_bitrate
+    assert a.bandwidth_used == b.bandwidth_used
+    assert a.rates == b.rates
+    assert a.confidences == b.confidences
+    assert a.zeco_engaged_frames == b.zeco_engaged_frames
+    assert a.dropped_frames == b.dropped_frames
+
+
+# --------------------------------------------------------------------------
+# Spec mechanics
+# --------------------------------------------------------------------------
+def test_spec_is_frozen_and_hashable():
+    s = ScenarioSpec(trace_kwargs=dict(mbps=0.4),
+                     qa_kwargs=dict(count=3))
+    assert hash(s) == hash(ScenarioSpec(trace_kwargs=dict(mbps=0.4),
+                                        qa_kwargs=dict(count=3)))
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        s.system = "webrtc"
+
+
+def test_spec_rejects_unknown_system():
+    with pytest.raises(ValueError):
+        ScenarioSpec(system="quic")
+
+
+def test_spec_rejects_nested_dict_kwargs():
+    # freeze/thaw is one level deep; nesting would round-trip corrupted
+    with pytest.raises(ValueError):
+        ScenarioSpec(trace_kwargs=dict(opts=dict(a=1)))
+
+
+def test_spec_dict_round_trip():
+    s = _hetero_specs()[1]
+    assert ScenarioSpec.from_dict(s.to_dict()) == s
+    # survives JSON too (lists/tuples normalize to tuples on the way in)
+    assert ScenarioSpec.from_dict(json.loads(json.dumps(s.to_dict()))) == s
+
+
+def test_with_and_flags():
+    s = ScenarioSpec(system="webrtc").with_(system="artic", cc_kind="bbr")
+    assert s.flags == dict(use_recap=True, use_zeco=True)
+    assert s.session_config().cc_kind == "bbr"
+
+
+def test_grid_order_and_scalars():
+    specs = grid(ScenarioSpec(), system=["webrtc", "artic"],
+                 cc_kind=["gcc", "bbr"], trace_seed=7)
+    assert len(specs) == 4
+    # first axis varies slowest; scalar axes broadcast
+    assert [(s.system, s.cc_kind) for s in specs] == [
+        ("webrtc", "gcc"), ("webrtc", "bbr"),
+        ("artic", "gcc"), ("artic", "bbr")]
+    assert all(s.trace_seed == 7 for s in specs)
+
+
+def test_preset_registry():
+    assert preset("fleet-thumb").frame_hw == (64, 64)
+    with pytest.raises(KeyError):
+        preset("nope")
+    with pytest.raises(ValueError):
+        register_preset("artic", ScenarioSpec())
+    register_preset("_test_tmp", ScenarioSpec(tag="x"))
+    assert preset("_test_tmp").tag == "x"
+    del PRESETS["_test_tmp"]
+
+
+# --------------------------------------------------------------------------
+# Cohort partitioning
+# --------------------------------------------------------------------------
+def test_mixed_grid_compiles_to_expected_cohorts():
+    """Two frame sizes x two fps -> four cohorts, grouped by
+    compatibility key and ordered by first occurrence."""
+    specs = grid(_base(duration=4.0), frame_h=[64, 128], fps=[10.0, 5.0],
+                 system=["webrtc", "artic"])
+    assert len(specs) == 8
+    cohorts = compile_cohorts(specs)
+    assert len(cohorts) == 4
+    assert [c.indices for c in cohorts] == [
+        (0, 1), (2, 3), (4, 5), (6, 7)]
+    for c in cohorts:
+        keys = {cohort_key(specs[i]) for i in c.indices}
+        assert keys == {c.key}
+    # partition covers every index exactly once
+    all_idx = sorted(i for c in cohorts for i in c.indices)
+    assert all_idx == list(range(len(specs)))
+
+
+def test_build_fleet_rejects_mixed_cohorts():
+    specs = grid(_base(4.0), frame_h=[64, 128])
+    with pytest.raises(ValueError):
+        build_fleet(specs)
+
+
+# --------------------------------------------------------------------------
+# Exact parity with the lower layer
+# --------------------------------------------------------------------------
+def test_run_scenarios_matches_direct_fleet_bit_for_bit():
+    """The tentpole contract: run_scenarios over one cohort reproduces a
+    hand-built Fleet over the same materialized sessions, metric for
+    metric (every list element equal, no tolerance)."""
+    specs = _hetero_specs()
+    direct = Fleet([build_session(s) for s in specs]).run()
+    result = run_scenarios(specs)
+    assert len(result) == 4 and len(result.cohorts) == 1
+    for a, b in zip(direct, result.metrics):
+        _assert_metrics_equal(a, b)
+
+
+def test_mixed_shape_grid_runs_in_one_call_and_matches_per_cohort_fleets():
+    """A grid mixing frame sizes and fps runs in a single run_scenarios
+    call; each cohort's results are identical to running that cohort as
+    its own Fleet."""
+    specs = grid(_base(duration=4.0), frame_h=[64, 128], fps=[10.0, 5.0],
+                 scene_seed=[0, 1])
+    specs = [s.with_(frame_w=s.frame_h, trace_seed=s.scene_seed,
+                     seed=s.scene_seed) for s in specs]
+    result = run_scenarios(specs)        # one call, four cohorts
+    assert len(result.cohorts) == 4
+    for cohort in result.cohorts:
+        own = Fleet([build_session(specs[i]) for i in cohort.indices]).run()
+        for i, m in zip(cohort.indices, own):
+            _assert_metrics_equal(m, result.metrics[i])
+
+
+def test_single_spec_matches_serial_run_session():
+    """N=1 cohort == serial run_session (the fleet parity, reachable
+    straight from a spec)."""
+    spec = _base(6.0).with_(trace="fluctuating", trace_seed=3, seed=3)
+    s = build_session(spec)
+    serial = run_session(s.scene, s.qa_samples, s.trace, s.cfg)
+    result = run_scenarios(spec)
+    _assert_metrics_equal(serial, result.metrics[0])
+
+
+def test_preset_name_accepted_directly():
+    r = run_scenarios(["webrtc"], fused_plan=False)
+    assert len(r) == 1 and r.specs[0].system == "webrtc"
+
+
+# --------------------------------------------------------------------------
+# RunResult: arrays, selection, aggregation, export
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def small_result() -> RunResult:
+    specs = grid(_base(4.0), system=["webrtc", "artic"],
+                 trace_seed=[0, 1])
+    return run_scenarios(specs)
+
+
+def test_result_arrays_and_order(small_result):
+    arr = small_result.arrays()
+    assert set(arr) >= {"accuracy", "avg_latency_ms", "bandwidth_used"}
+    assert all(v.shape == (4,) for v in arr.values())
+    np.testing.assert_array_equal(
+        arr["accuracy"],
+        [m.accuracy for m in small_result.metrics])
+
+
+def test_result_select_and_aggregate(small_result):
+    artic = small_result.select(system="artic")
+    assert len(artic) == 2
+    assert all(s.system == "artic" for s in artic.specs)
+    agg = small_result.aggregate(by=("system",), fields=("accuracy",))
+    assert set(agg) == {("webrtc",), ("artic",)}
+    assert agg[("artic",)]["accuracy"] == pytest.approx(
+        float(np.mean(artic.values("accuracy"))))
+
+
+def test_result_json_schema_round_trip(small_result, tmp_path):
+    path = tmp_path / "run.json"
+    doc = small_result.to_json(str(path))
+    validate_run_result_json(doc)
+    validate_run_result_json(json.loads(path.read_text()))
+    # specs survive the export
+    back = [ScenarioSpec.from_dict(rec["spec"]) for rec in doc["scenarios"]]
+    assert back == small_result.specs
+
+
+def test_result_json_schema_rejects_corruption(small_result):
+    doc = small_result.to_json()
+    bad = json.loads(json.dumps(doc))
+    bad["scenarios"][0]["metrics"].pop("accuracy")
+    with pytest.raises(ValueError):
+        validate_run_result_json(bad)
+    bad2 = json.loads(json.dumps(doc))
+    bad2["cohorts"][0]["sessions"] = bad2["cohorts"][0]["sessions"][:-1]
+    with pytest.raises(ValueError):
+        validate_run_result_json(bad2)
+    with pytest.raises(ValueError):
+        validate_run_result_json({"schema": "other"})
+
+
+def test_result_csv(small_result):
+    text = small_result.to_csv()
+    lines = text.strip().splitlines()
+    assert len(lines) == 1 + len(small_result)
+    assert lines[0].startswith("system,")
+    assert "accuracy" in lines[0]
+
+
+def test_profile_exposes_per_cohort_phase_times():
+    specs = grid(_base(3.0).with_(qa="none", qa_kwargs={}),
+                 frame_h=[64, 128])
+    specs = [s.with_(frame_w=s.frame_h) for s in specs]
+    r = run_scenarios(specs, profile=True)
+    assert r.phase_times is not None and len(r.phase_times) == 2
+    assert all(set(pt) >= {"client", "plan", "encode", "channel"}
+               for pt in r.phase_times)
