@@ -1,11 +1,15 @@
 """Fig. 10 — robustness to confidence errors: calibrated confidence vs
-actual accuracy across the bitrate ladder (binned reliability curve)."""
+actual accuracy across the bitrate ladder (binned reliability curve).
+
+The (record x bitrate) margins come from one stacked DeViBench grid and
+the calibration is the vectorized `PlattCalibrator.batch` — no
+per-record loop anywhere."""
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import Row, shared_benchmark, shared_calibrator, timed
-from repro.devibench.pipeline import _answer, _encode_at
+from repro.devibench.engine import bitrate_ladder, evaluate_records
 
 
 def run(quick: bool = True):
@@ -14,16 +18,10 @@ def run(quick: bool = True):
     recs = (bench.test + bench.validation)[: 40 if quick else 200]
 
     def collect():
-        confs, correct = [], []
-        for rec in recs:
-            sc = bench.scene(rec)
-            frame = sc.render(rec.t_frame)
-            for kbps in (200.0, 700.0, 1700.0):
-                rx = _encode_at(frame, kbps)
-                ans, margin = _answer(sc, rec, rx)
-                confs.append(cal(margin))
-                correct.append(float(ans == rec.answer))
-        return np.asarray(confs), np.asarray(correct)
+        res = evaluate_records(bench.scenes, recs,
+                               bitrate_ladder([200.0, 700.0, 1700.0]))
+        return cal.batch(res.margins).ravel(), \
+            res.correct.ravel().astype(np.float64)
 
     (confs, correct), us = timed(collect)
     # reliability: accuracy within confidence bins

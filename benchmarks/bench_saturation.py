@@ -1,24 +1,29 @@
 """Fig. 3 — accuracy saturation: MLLM accuracy vs encoding bitrate on
-DeViBench; the knee mirrors the paper's 968 Kbps saturation point."""
+DeViBench; the knee mirrors the paper's 968 Kbps saturation point.
+
+The whole ladder is evaluated as ONE stacked grid through the
+vectorized DeViBench engine (bit-identical to mapping the serial
+`accuracy_at_bitrate` over the rungs), and the knee is read with
+`repro.core.recap_abr.saturation_point` — the same array op the
+ReCap-ABR tau/gamma fit consumes."""
 from __future__ import annotations
 
 from benchmarks.common import Row, shared_benchmark, timed
-from repro.devibench.pipeline import accuracy_at_bitrate
+from repro.core.recap_abr import saturation_point
+from repro.devibench.pipeline import accuracy_grid
 
 LADDER = [200, 290, 400, 710, 968, 1700, 3000, 4000]
 
 
 def run(quick: bool = True):
     bench = shared_benchmark(quick)
-    rows = []
-    accs = {}
-    for kbps in (LADDER if not quick else [200, 400, 968, 4000]):
-        acc, us = timed(accuracy_at_bitrate, bench, float(kbps))
-        accs[kbps] = acc
-        rows.append(Row(f"fig3.accuracy@{kbps}kbps", us, f"acc={acc:.3f}"))
-    ks = sorted(accs)
-    knee = next((k for k in ks if accs[k] >= 0.95 * accs[ks[-1]]), ks[-1])
-    rows.append(Row("fig3.saturation_knee_kbps", 0.0, f"{knee}"))
-    print(f"[fig3] accuracy curve {accs} -> saturates at ~{knee} kbps "
+    ladder = LADDER if not quick else [200, 400, 968, 4000]
+    accs_arr, us = timed(accuracy_grid, bench, [float(k) for k in ladder])
+    accs = {k: float(a) for k, a in zip(ladder, accs_arr)}
+    rows = [Row(f"fig3.accuracy@{k}kbps", us / len(ladder),
+                f"acc={accs[k]:.3f}") for k in ladder]
+    knee = saturation_point([float(k) for k in ladder], accs_arr)
+    rows.append(Row("fig3.saturation_knee_kbps", 0.0, f"{knee:.0f}"))
+    print(f"[fig3] accuracy curve {accs} -> saturates at ~{knee:.0f} kbps "
           "(paper: 968 kbps)")
     return rows

@@ -19,15 +19,24 @@ exported JSON against the RunResult schema — the CI smoke job.
 """
 from __future__ import annotations
 
-from repro.core.scenario import (PRESETS, QA_POLICIES, RUN_RESULT_SCHEMA,
+from repro.core.scenario import (DEVIBENCH_RESULT_SCHEMA,
+                                 DEVIBENCH_SCALAR_METRICS, PRESETS,
+                                 QA_POLICIES, RUN_RESULT_SCHEMA,
                                  SCALAR_METRICS, SYSTEMS, TRACE_FAMILIES,
-                                 Cohort, RunResult, ScenarioSpec,
-                                 build_fleet, build_session, cohort_key,
-                                 compile_cohorts, grid, preset,
-                                 register_preset, run_scenarios,
+                                 Cohort, DeViBenchCohort,
+                                 DeViBenchRunResult, RunResult,
+                                 ScenarioSpec, build_fleet, build_session,
+                                 cohort_key, compile_cohorts,
+                                 devibench_key, grid, preset,
+                                 register_preset, run_devibench,
+                                 run_scenarios, validate_devibench_json,
                                  validate_run_result_json)
 from repro.core.session import (QASample, SessionConfig, SessionMetrics,
                                 run_session)
+from repro.devibench.engine import (DEGRADATION_KINDS, DegradationSpec,
+                                    GridResult, bitrate_ladder,
+                                    default_degradations)
+from repro.devibench.pipeline import fit_confidence_calibrator
 
 __all__ = [
     "ScenarioSpec", "RunResult", "Cohort", "run_scenarios", "grid",
@@ -35,6 +44,11 @@ __all__ = [
     "QA_POLICIES", "SCALAR_METRICS", "RUN_RESULT_SCHEMA",
     "build_session", "build_fleet", "cohort_key", "compile_cohorts",
     "validate_run_result_json",
+    "DegradationSpec", "DEGRADATION_KINDS", "GridResult",
+    "bitrate_ladder", "default_degradations", "run_devibench",
+    "DeViBenchRunResult", "DeViBenchCohort", "devibench_key",
+    "DEVIBENCH_RESULT_SCHEMA", "DEVIBENCH_SCALAR_METRICS",
+    "validate_devibench_json", "fit_confidence_calibrator",
     "QASample", "SessionConfig", "SessionMetrics", "run_session",
 ]
 
@@ -66,13 +80,59 @@ def smoke(out_path: str = "/tmp/artic_scenario_smoke.json") -> RunResult:
     return result
 
 
+def devibench_smoke(out_path: str = "/tmp/artic_devibench_smoke.json"
+                    ) -> DeViBenchRunResult:
+    """Tiny DeViBench grid end to end: one quick benchmark build, a
+    degradation axis covering every kind, evaluated as one stacked grid
+    through `run_scenarios(workload='devibench')`, exported to JSON and
+    schema-validated, then consumed by the calibrator + ReCap-ABR fit
+    (the benchmark -> saturation point -> ABR cap loop)."""
+    import json
+
+    base = preset("devibench")
+    specs = [base.with_(degradation="bitrate",
+                        degradation_kwargs=dict(kbps=k))
+             for k in (200.0, 700.0, 1700.0, 4000.0)]
+    specs += [base.with_(degradation="requant",
+                         degradation_kwargs=dict(kbps=4000.0, loss=0.5)),
+              base.with_(degradation="drop",
+                         degradation_kwargs=dict(kbps=4000.0,
+                                                 stall_frames=5)),
+              base.with_(degradation="downscale",
+                         degradation_kwargs=dict(kbps=4000.0, scale=2))]
+    result = run_scenarios(specs, workload="devibench")
+    doc = result.to_json(out_path)
+    validate_devibench_json(doc)
+    with open(out_path) as f:
+        validate_devibench_json(json.load(f))  # survives the round trip
+    print(f"[devibench-smoke] {len(result)} scenarios in "
+          f"{len(result.cohorts)} cohort(s) -> {out_path} "
+          f"(schema {DEVIBENCH_RESULT_SCHEMA} OK)")
+    kbps, acc = result.saturation_curve()
+    print(f"[devibench-smoke]   saturation curve: "
+          + ", ".join(f"{int(k)}kbps={a:.2f}" for k, a in zip(kbps, acc)))
+    cal = fit_confidence_calibrator(result)
+    fit = result.fit_recap(calibrator=cal)
+    print(f"[devibench-smoke]   fit: tau={fit['tau']:.2f} "
+          f"gamma={fit['gamma']:.1f} knee={fit['knee_kbps']:.0f}kbps "
+          f"cap={fit['cap_bps'] / 1e3:.0f}kbps")
+    return result
+
+
 def _main() -> None:
     import argparse
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--out", default="/tmp/artic_scenario_smoke.json",
                     help="where the smoke grid's RunResult JSON lands")
-    smoke(ap.parse_args().out)
+    ap.add_argument("--devibench", action="store_true",
+                    help="run the DeViBench degradation-grid smoke "
+                         "instead of the RTC fleet smoke")
+    args = ap.parse_args()
+    if args.devibench:
+        devibench_smoke(args.out)
+    else:
+        smoke(args.out)
 
 
 if __name__ == "__main__":

@@ -54,6 +54,13 @@ class PlattCalibrator:
     def __call__(self, score: float) -> float:
         return float(1.0 / (1.0 + np.exp(-(self.a * score + self.b))))
 
+    def batch(self, scores: np.ndarray) -> np.ndarray:
+        """Vectorized calibration: scores (...,) -> P(correct) (...,)
+        in [0, 1] — the DeViBench grid / reliability-curve path, one
+        array op instead of a per-score loop."""
+        scores = np.asarray(scores, np.float64)
+        return 1.0 / (1.0 + np.exp(-(self.a * scores + self.b)))
+
 
 @dataclasses.dataclass
 class ConfidenceHead:

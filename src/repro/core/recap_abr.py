@@ -95,3 +95,72 @@ class CCOnlyABRBank:
         del confidence
         self.rate = np.maximum(bw_estimate, self.min_rate)
         return self.rate
+
+
+# --------------------------------------------------------------------------
+# Fitting tau / gamma / the bitrate cap from DeViBench saturation curves
+# (§6.2: the validation split tunes the hyperparameters).  Pure array ops
+# over the stacked (bitrate, accuracy/confidence) curves the vectorized
+# DeViBench engine emits — the benchmark -> saturation point -> ABR cap
+# loop of the paper's pipeline.
+# --------------------------------------------------------------------------
+def saturation_point(kbps, acc, frac: float = 0.95) -> float:
+    """Smallest bitrate whose accuracy reaches `frac` of the curve's
+    maximum — the Fig. 3 knee (the paper's 968 Kbps)."""
+    kbps = np.asarray(kbps, np.float64)
+    acc = np.asarray(acc, np.float64)
+    if kbps.shape != acc.shape or kbps.ndim != 1 or len(kbps) == 0:
+        raise ValueError("saturation_point needs matching 1-D curves")
+    order = np.argsort(kbps)
+    kbps, acc = kbps[order], acc[order]
+    ok = acc >= frac * acc.max()
+    return float(kbps[int(np.argmax(ok))])
+
+
+def fit_recap_params(kbps, confidence, accuracy=None, *,
+                     min_rate: float = 150e3, frac: float = 0.95,
+                     gammas=None, horizon: int = 48,
+                     settle_tol: float = 0.05):
+    """Fit (tau, gamma, cap) from a DeViBench saturation curve.
+
+    `kbps`/`accuracy` locate the saturation knee; `confidence` is the
+    calibrated mean confidence at each ladder rung (so tau — the Eq. 1
+    target — is the confidence the system sees right at the knee, and
+    driving confidence back to tau drives bitrate to the knee).  gamma
+    is picked by simulating the Eq. 1-2 recursion against a bandwidth
+    ceiling at the knee for every candidate at once (vectorized over
+    the gamma axis) and keeping the fastest settle into the +-
+    `settle_tol` band; ties prefer the paper's gamma=2.  The returned
+    cap is never below `min_rate`."""
+    kbps = np.asarray(kbps, np.float64)
+    confidence = np.asarray(confidence, np.float64)
+    if accuracy is None:
+        accuracy = confidence
+    accuracy = np.asarray(accuracy, np.float64)
+    knee = saturation_point(kbps, accuracy, frac)
+    order = np.argsort(kbps)
+    tau = float(np.clip(np.interp(knee, kbps[order], confidence[order]),
+                        0.5, 0.95))
+    cap_bps = max(knee * 1e3, min_rate)
+
+    if gammas is None:
+        gammas = np.linspace(1.0, 4.0, 13)
+    gammas = np.asarray(gammas, np.float64)
+    rate = np.full(len(gammas), min_rate)
+    bw = cap_bps
+    settle = np.full(len(gammas), horizon, np.int64)
+    for step in range(horizon):
+        conf = np.interp(rate / 1e3, kbps[order], confidence[order])
+        delta = (tau - conf) / tau
+        w = delta * np.abs(delta) ** (gammas - 1.0)
+        rate = np.maximum(np.minimum(bw, rate + w * (bw - rate)), min_rate)
+        # settle = first step of the final uninterrupted in-band run
+        inside = np.abs(rate - cap_bps) <= settle_tol * cap_bps
+        settle = np.where(
+            inside, np.where(settle == horizon, step + 1, settle), horizon)
+    # fastest settle wins; among ties prefer gamma closest to 2 (§6.2)
+    best = settle == settle.min()
+    gamma = float(gammas[best][np.argmin(np.abs(gammas[best] - 2.0))])
+    return {"tau": tau, "gamma": gamma, "cap_bps": float(cap_bps),
+            "knee_kbps": float(knee),
+            "settle_steps": int(settle.min())}

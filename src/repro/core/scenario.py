@@ -42,6 +42,8 @@ import numpy as np
 
 from repro.core.fleet import Fleet, FleetSession
 from repro.core.session import QASample, SessionConfig, SessionMetrics
+from repro.devibench.engine import (DEGRADATION_KINDS, DegradationSpec,
+                                    GridResult)
 from repro.net import traces as trace_lib
 from repro.video.scenes import Scene, make_scene
 
@@ -52,7 +54,7 @@ from repro.video.scenes import Scene, make_scene
 # --------------------------------------------------------------------------
 FrozenKwargs = Tuple[Tuple[str, Any], ...]
 _KWARGS_FIELDS = ("trace_kwargs", "scene_kwargs", "qa_kwargs",
-                  "session_kwargs")
+                  "session_kwargs", "degradation_kwargs")
 
 
 def _freeze(value, top: bool = True) -> Any:
@@ -119,6 +121,10 @@ class ScenarioSpec:
     # conversational QA policy
     qa: str = "none"                  # key into QA_POLICIES
     qa_kwargs: FrozenKwargs = ()
+    # DeViBench degradation dimension (run_devibench workloads; must
+    # stay "none" on the RTC fleet path)
+    degradation: str = "none"         # key into engine.DEGRADATION_KINDS
+    degradation_kwargs: FrozenKwargs = ()  # kbps / loss / stall_frames…
     # free-form label carried through to RunResult tags
     tag: str = ""
 
@@ -126,6 +132,9 @@ class ScenarioSpec:
         if self.system not in SYSTEMS:
             raise ValueError(f"unknown system {self.system!r}; "
                              f"one of {sorted(SYSTEMS)}")
+        if self.degradation not in DEGRADATION_KINDS:
+            raise ValueError(f"unknown degradation {self.degradation!r}; "
+                             f"one of {DEGRADATION_KINDS}")
         for f in _KWARGS_FIELDS:
             # accept dicts (or pair lists) and freeze them for hashing
             object.__setattr__(self, f, _freeze(dict(getattr(self, f))))
@@ -143,6 +152,12 @@ class ScenarioSpec:
     @property
     def frame_hw(self) -> Tuple[int, int]:
         return (self.frame_h, self.frame_w)
+
+    def degradation_spec(self) -> DegradationSpec:
+        """The spec's degradation dimension as an engine DegradationSpec
+        (kind 'none' is the pristine reference cell)."""
+        return DegradationSpec(kind=self.degradation,
+                               **_thaw(self.degradation_kwargs))
 
     def session_config(self) -> SessionConfig:
         return SessionConfig(fps=self.fps, duration=self.duration,
@@ -216,10 +231,18 @@ def _qa_periodic(scene: Scene, spec: ScenarioSpec, *, start: float = 4.5,
             for i in range(count)]
 
 
+def _qa_devibench(scene: Scene, spec: ScenarioSpec, **kw) -> List[QASample]:
+    raise ValueError(
+        "qa='devibench' specs evaluate offline QA grids, not live fleet "
+        "sessions — run them through run_devibench() / "
+        "run_scenarios(..., workload='devibench')")
+
+
 QA_POLICIES: Dict[str, Callable[..., List[QASample]]] = {
     "none": _qa_none,
     "epoch": _qa_epoch,
     "periodic": _qa_periodic,
+    "devibench": _qa_devibench,
 }
 
 # Named base specs.  These replace the trace/scene/QA setup helpers that
@@ -257,6 +280,13 @@ register_preset("fleet-thumb", ScenarioSpec(
 register_preset("zeco-starved", ScenarioSpec(
     system="webrtc+zeco", code_period_frames=40,
     trace="static", trace_kwargs=dict(mbps=0.35)))
+# tiny DeViBench cell: a quick-build benchmark (12 scenes, 20 frames)
+# evaluated at the high-bitrate reference; expand the degradation axis
+# with grid("devibench", degradation=[...], degradation_kwargs=[...])
+register_preset("devibench", ScenarioSpec(
+    qa="devibench",
+    qa_kwargs=dict(n_scenes_per_cat=1, questions_per_obj=2, n_frames=20),
+    degradation="bitrate", degradation_kwargs=dict(kbps=4000.0)))
 
 
 # --------------------------------------------------------------------------
@@ -519,24 +549,370 @@ def validate_run_result_json(doc: Dict[str, Any]) -> None:
 
 
 # --------------------------------------------------------------------------
+# DeViBench workloads: offline degradation grids through the same spec API
+# --------------------------------------------------------------------------
+DEVIBENCH_RESULT_SCHEMA = "artic.devibench.run_result/v1"
+
+# scalar per-scenario metrics stacked into (N,) arrays
+DEVIBENCH_SCALAR_METRICS = ("accuracy", "n_records", "refuse_rate",
+                            "margin_mean")
+
+
+def devibench_key(spec: ScenarioSpec) -> Tuple:
+    """Benchmark-compatibility key: specs sharing it evaluate against
+    one `devibench.generate` build (same corpus seed, frame geometry,
+    frame rate and generation knobs) and differ only along the
+    degradation axis of one stacked grid."""
+    return (spec.seed, spec.frame_h, spec.frame_w, spec.fps,
+            spec.qa_kwargs)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeViBenchCohort:
+    """Scenario indices (into the input spec list) sharing one
+    benchmark build, in input order."""
+    key: Tuple
+    indices: Tuple[int, ...]
+    n_records: int
+
+    def to_dict(self) -> Dict[str, Any]:
+        seed, h, w, fps, qa_kwargs = self.key
+        return {"seed": seed, "frame_h": h, "frame_w": w, "fps": fps,
+                "generate_kwargs": _thaw(qa_kwargs),
+                "n_records": self.n_records,
+                "sessions": list(self.indices)}
+
+
+@dataclasses.dataclass
+class DeViBenchRunResult:
+    """Structured output of `run_devibench`, in input order.
+
+    Scenario `i` evaluated as column `columns[i][1]` of the stacked
+    `GridResult` of cohort `columns[i][0]` — the per-record margins /
+    correctness stay available as arrays, which is what
+    `fit_confidence_calibrator` and `fit_recap` consume (no per-record
+    Python loop anywhere downstream of the grid)."""
+    specs: List[ScenarioSpec]
+    cohorts: List[DeViBenchCohort]
+    grids: List[GridResult]            # one stacked grid per cohort
+    columns: List[Tuple[int, int]]     # spec i -> (cohort, grid column)
+    split: str = "test"
+
+    def __len__(self) -> int:
+        return len(self.specs)
+
+    # -- stacked arrays ------------------------------------------------
+    def record_margins(self, i: int) -> np.ndarray:
+        ci, col = self.columns[i]
+        return self.grids[ci].margins[:, col]
+
+    def record_correct(self, i: int) -> np.ndarray:
+        ci, col = self.columns[i]
+        return self.grids[ci].correct[:, col]
+
+    def values(self, field: str) -> np.ndarray:
+        if field == "accuracy":
+            return np.asarray([self.record_correct(i).mean()
+                               for i in range(len(self))])
+        if field == "n_records":
+            return np.asarray([self.cohorts[self.columns[i][0]].n_records
+                               for i in range(len(self))])
+        if field == "refuse_rate":
+            return np.asarray(
+                [self.grids[ci].refuse_rate()[col]
+                 for ci, col in self.columns])
+        if field == "margin_mean":
+            return np.asarray([self.record_margins(i).mean()
+                               for i in range(len(self))])
+        raise KeyError(f"unknown metric {field!r}; "
+                       f"one of {DEVIBENCH_SCALAR_METRICS}")
+
+    def arrays(self) -> Dict[str, np.ndarray]:
+        return {f: self.values(f) for f in DEVIBENCH_SCALAR_METRICS}
+
+    def stacked_margins(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(scores, correct) concatenated over every scenario column —
+        the calibrator's training arrays, spec-major order."""
+        scores = np.concatenate([self.record_margins(i)
+                                 for i in range(len(self))])
+        correct = np.concatenate([self.record_correct(i)
+                                  for i in range(len(self))])
+        return scores, correct
+
+    # -- tag-based selection / aggregation -----------------------------
+    def _subset(self, keep: List[int]) -> "DeViBenchRunResult":
+        sub_specs = [self.specs[i] for i in keep]
+        cohort_map: Dict[int, int] = {}
+        cohorts: List[DeViBenchCohort] = []
+        columns: List[Tuple[int, int]] = []
+        grids: List[GridResult] = []
+        by_cohort: Dict[int, List[int]] = {}
+        for new_i, i in enumerate(keep):
+            ci, col = self.columns[i]
+            if ci not in cohort_map:
+                cohort_map[ci] = len(cohorts)
+                cohorts.append(dataclasses.replace(self.cohorts[ci],
+                                                   indices=()))
+                grids.append(self.grids[ci])
+            by_cohort.setdefault(cohort_map[ci], []).append(new_i)
+            columns.append((cohort_map[ci], col))
+        cohorts = [dataclasses.replace(c, indices=tuple(by_cohort[ci]))
+                   for ci, c in enumerate(cohorts)]
+        return DeViBenchRunResult(specs=sub_specs, cohorts=cohorts,
+                                  grids=grids, columns=columns,
+                                  split=self.split)
+
+    def select(self, **where) -> "DeViBenchRunResult":
+        """Subset by spec-field equality, e.g. select(degradation='drop')."""
+        keep = [i for i, s in enumerate(self.specs)
+                if all(getattr(s, k) == v for k, v in where.items())]
+        return self._subset(keep)
+
+    def aggregate(self, by: Sequence[str],
+                  fields: Sequence[str] = ("accuracy",),
+                  reduce=np.mean) -> Dict[Tuple, Dict[str, float]]:
+        """Group scenarios by spec fields, reduce each metric per group
+        (first-occurrence group order, mirroring `RunResult.aggregate`)."""
+        vals = {f: self.values(f) for f in fields}
+        out: Dict[Tuple, Dict[str, List[float]]] = {}
+        for i, s in enumerate(self.specs):
+            key = tuple(getattr(s, k) for k in by)
+            acc = out.setdefault(key, {f: [] for f in fields})
+            for f in fields:
+                acc[f].append(vals[f][i])
+        return {k: {f: float(reduce(v[f])) for f in fields}
+                for k, v in out.items()}
+
+    # -- the benchmark -> saturation point -> ABR cap loop -------------
+    def saturation_curve(self, **where) -> Tuple[np.ndarray, np.ndarray]:
+        """(kbps, accuracy) over the bitrate-kind scenarios (optionally
+        filtered by spec fields), sorted by bitrate — Fig. 3."""
+        sub = self.select(degradation="bitrate", **where)
+        if not len(sub):
+            raise ValueError("no degradation='bitrate' scenarios to "
+                             "build a saturation curve from")
+        kbps = np.asarray([s.degradation_spec().kbps for s in sub.specs])
+        acc = sub.values("accuracy")
+        order = np.argsort(kbps, kind="stable")
+        return kbps[order], acc[order]
+
+    def fit_calibrator(self):
+        """Platt calibrator fit on the stacked margin/correct arrays."""
+        from repro.core.confidence import PlattCalibrator
+        return PlattCalibrator().fit(*self.stacked_margins())
+
+    def fit_recap(self, *, calibrator=None, min_rate: float = 150e3,
+                  frac: float = 0.95, **where) -> Dict[str, float]:
+        """Close the paper's loop: saturation curve -> knee -> (tau,
+        gamma, bitrate cap) for ReCap-ABR, all from the stacked arrays."""
+        from repro.core.recap_abr import fit_recap_params
+        sub = self.select(degradation="bitrate", **where)
+        if not len(sub):
+            raise ValueError("no degradation='bitrate' scenarios to "
+                             "fit ReCap-ABR from")
+        # one stable order for all three curves, so tied-kbps rungs
+        # (e.g. the same ladder over two cohorts) stay paired
+        kbps = np.asarray([s.degradation_spec().kbps for s in sub.specs])
+        order = np.argsort(kbps, kind="stable")
+        acc = sub.values("accuracy")[order]
+        cal = calibrator if calibrator is not None else self.fit_calibrator()
+        conf = np.asarray([cal.batch(sub.record_margins(int(i))).mean()
+                           for i in order])
+        return fit_recap_params(kbps[order], conf, accuracy=acc,
+                                min_rate=min_rate, frac=frac)
+
+    # -- export --------------------------------------------------------
+    def to_json(self, path: Optional[str] = None) -> Dict[str, Any]:
+        """Schema-stable dict (optionally written to `path`)."""
+        scenarios = []
+        vals = self.arrays()
+        for i, s in enumerate(self.specs):
+            ci, col = self.columns[i]
+            d = s.degradation_spec()
+            scenarios.append(
+                {"spec": s.to_dict(), "cohort": ci,
+                 "degradation": {**d.to_dict(), "label": d.label},
+                 "metrics": {f: float(vals[f][i])
+                             for f in DEVIBENCH_SCALAR_METRICS}})
+        doc = {"schema": DEVIBENCH_RESULT_SCHEMA,
+               "split": self.split,
+               "n_scenarios": len(self.specs),
+               "scenarios": scenarios,
+               "cohorts": [c.to_dict() for c in self.cohorts]}
+        if path is not None:
+            with open(path, "w") as f:
+                json.dump(doc, f, indent=1, default=_json_default)
+        return doc
+
+    def to_csv(self, path: Optional[str] = None) -> str:
+        """One row per scenario: spec fields + degradation + metrics."""
+        spec_fields = [f.name for f in dataclasses.fields(ScenarioSpec)
+                       if f.name not in _KWARGS_FIELDS]
+        degr_fields = ["degradation_label", "kbps", "loss",
+                       "stall_frames", "scale"]
+        buf = io.StringIO()
+        w = csv.writer(buf)
+        w.writerow(spec_fields + degr_fields
+                   + list(DEVIBENCH_SCALAR_METRICS))
+        vals = self.arrays()
+        for i, s in enumerate(self.specs):
+            d = s.degradation_spec()
+            w.writerow([getattr(s, f) for f in spec_fields]
+                       + [d.label, d.kbps, d.loss, d.stall_frames,
+                          d.scale]
+                       + [vals[f][i] for f in DEVIBENCH_SCALAR_METRICS])
+        text = buf.getvalue()
+        if path is not None:
+            with open(path, "w") as f:
+                f.write(text)
+        return text
+
+
+def validate_devibench_json(doc: Dict[str, Any]) -> None:
+    """Raise ValueError unless `doc` matches DEVIBENCH_RESULT_SCHEMA.
+
+    Checked by the CI devibench-smoke job; keep in sync with
+    `DeViBenchRunResult.to_json`."""
+    def need(cond, msg):
+        if not cond:
+            raise ValueError(f"devibench run_result schema violation: {msg}")
+
+    need(doc.get("schema") == DEVIBENCH_RESULT_SCHEMA,
+         f"schema tag {doc.get('schema')!r} != {DEVIBENCH_RESULT_SCHEMA!r}")
+    need(doc.get("split") in ("test", "validation", "all"),
+         f"bad split {doc.get('split')!r}")
+    scen = doc.get("scenarios")
+    need(isinstance(scen, list) and len(scen) == doc.get("n_scenarios"),
+         "scenarios list missing or length != n_scenarios")
+    cohorts = doc.get("cohorts")
+    need(isinstance(cohorts, list) and cohorts, "cohorts missing")
+    seen = []
+    for c in cohorts:
+        for k in ("seed", "frame_h", "frame_w", "fps", "generate_kwargs",
+                  "n_records", "sessions"):
+            need(k in c, f"cohort missing key {k!r}")
+        seen.extend(c["sessions"])
+    need(sorted(seen) == list(range(len(scen))),
+         "cohorts do not partition the scenario indices")
+    for i, rec in enumerate(scen):
+        need(isinstance(rec.get("spec"), dict), f"scenario {i}: no spec")
+        spec = ScenarioSpec.from_dict(rec["spec"])  # round-trips
+        need(spec.qa == "devibench",
+             f"scenario {i}: qa policy is not 'devibench'")
+        need(rec.get("cohort") in range(len(cohorts)),
+             f"scenario {i}: bad cohort index")
+        need(i in cohorts[rec["cohort"]]["sessions"],
+             f"scenario {i}: not listed in its cohort")
+        d = rec.get("degradation")
+        need(isinstance(d, dict) and "label" in d,
+             f"scenario {i}: degradation block missing")
+        DegradationSpec.from_dict(
+            {k: v for k, v in d.items() if k != "label"})  # round-trips
+        m = rec.get("metrics")
+        need(isinstance(m, dict), f"scenario {i}: no metrics")
+        for f in DEVIBENCH_SCALAR_METRICS:
+            need(isinstance(m.get(f), (int, float)),
+                 f"scenario {i}: metric {f!r} missing or non-numeric")
+        need(0.0 <= m["accuracy"] <= 1.0,
+             f"scenario {i}: accuracy out of [0, 1]")
+
+
+def run_devibench(specs: Union[ScenarioSpec, str,
+                               Iterable[Union[ScenarioSpec, str]]],
+                  *, split: str = "test", margin_floor: float = 0.35,
+                  backend: str = "jnp") -> DeViBenchRunResult:
+    """Evaluate DeViBench degradation scenarios as stacked grids.
+
+    Each spec names one degradation cell (`degradation` +
+    `degradation_kwargs`) over a benchmark whose construction knobs ride
+    in `qa_kwargs` (`n_scenes_per_cat`, `questions_per_obj`,
+    `n_frames`).  Specs sharing `devibench_key` evaluate as ONE
+    (record x degradation) grid through the vectorized engine — the
+    benchmark is built once and every unique frame is encoded in
+    batched dispatches."""
+    from repro.devibench import pipeline as dvb
+
+    if isinstance(specs, (ScenarioSpec, str)):
+        specs = [specs]
+    specs = [preset(s) if isinstance(s, str) else s for s in specs]
+    if not specs:
+        raise ValueError("run_devibench needs at least one spec")
+    for i, s in enumerate(specs):
+        if s.qa != "devibench":
+            raise ValueError(
+                f"spec {i} has qa={s.qa!r}; DeViBench scenarios must set "
+                "qa='devibench' (generation knobs ride in qa_kwargs)")
+
+    groups: Dict[Tuple, List[int]] = {}
+    for i, s in enumerate(specs):
+        groups.setdefault(devibench_key(s), []).append(i)
+
+    cohorts: List[DeViBenchCohort] = []
+    grids: List[GridResult] = []
+    columns: List[Optional[Tuple[int, int]]] = [None] * len(specs)
+    for key, indices in groups.items():
+        first = specs[indices[0]]
+        bench = dvb.generate(seed=first.seed, fps=first.fps,
+                             frame_hw=first.frame_hw,
+                             **_thaw(first.qa_kwargs))
+        # dedupe identical degradation cells into shared grid columns
+        degr: List[DegradationSpec] = []
+        col_of: Dict[DegradationSpec, int] = {}
+        for i in indices:
+            d = specs[i].degradation_spec()
+            if d not in col_of:
+                col_of[d] = len(degr)
+                degr.append(d)
+        grid_res = dvb.evaluate(bench, degr, split=split, fps=first.fps,
+                                margin_floor=margin_floor,
+                                backend=backend)
+        ci = len(cohorts)
+        cohorts.append(DeViBenchCohort(key=key, indices=tuple(indices),
+                                       n_records=grid_res.n_records))
+        grids.append(grid_res)
+        for i in indices:
+            columns[i] = (ci, col_of[specs[i].degradation_spec()])
+    return DeViBenchRunResult(specs=specs, cohorts=cohorts, grids=grids,
+                              columns=columns, split=split)
+
+
+# --------------------------------------------------------------------------
 # The entry point
 # --------------------------------------------------------------------------
 def run_scenarios(specs: Union[ScenarioSpec, str,
                                Iterable[Union[ScenarioSpec, str]]],
                   *, calibrator=None, fused_plan: bool = False,
-                  profile: bool = False) -> RunResult:
+                  profile: bool = False, workload: str = "rtc",
+                  split: str = "test"
+                  ) -> Union[RunResult, DeViBenchRunResult]:
     """Compile specs into cohorts, run each cohort as one `Fleet`, and
     return per-session metrics in input order.
 
     Accepts a single spec, a preset name, or any iterable mixing the
     two.  Sessions sharing a cohort advance in lockstep ticks with
     batched codec dispatches; the partitioning is an internal detail —
-    a grid mixing frame sizes and frame rates is one call."""
+    a grid mixing frame sizes and frame rates is one call.
+
+    `workload="devibench"` routes the specs through `run_devibench`
+    instead: offline degradation grids emitting a `DeViBenchRunResult`
+    (`split` selects the benchmark split; `calibrator`/`fused_plan`/
+    `profile` are fleet-only knobs)."""
+    if workload == "devibench":
+        return run_devibench(specs, split=split)
+    if workload != "rtc":
+        raise ValueError(f"unknown workload {workload!r}; "
+                         "one of ('rtc', 'devibench')")
     if isinstance(specs, (ScenarioSpec, str)):
         specs = [specs]
     specs = [preset(s) if isinstance(s, str) else s for s in specs]
     if not specs:
         raise ValueError("run_scenarios needs at least one spec")
+    for i, s in enumerate(specs):
+        if s.degradation != "none":
+            raise ValueError(
+                f"spec {i} carries degradation={s.degradation!r}, which "
+                "the RTC fleet path would silently ignore — run it with "
+                "workload='devibench' (or run_devibench)")
     cohorts = compile_cohorts(specs)
     metrics: List[Optional[SessionMetrics]] = [None] * len(specs)
     phase_times: List[Dict[str, float]] = []

@@ -18,22 +18,34 @@ Automated QA-sample construction with the paper's 5-step pipeline:
 Outputs a Benchmark with test/validation splits; the validation split
 drives Platt calibration of the confidence head and the tau/gamma/mu
 hyperparameters (§6.2), mirroring the paper's use exactly.
+
+Execution engines: steps 2/4/5 (the codec + answering work) run either
+through the vectorized grid engine (`repro.devibench.engine`, the
+default — all records encoded and answered in batched dispatches) or
+through the original per-record serial loop (`engine="serial"`), which
+is kept bit-identical as the pinned parity oracle
+(tests/test_devibench_engine.py).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.confidence import PlattCalibrator
+from repro.devibench.engine import (DegradationSpec, GridResult,
+                                    bitrate_ladder, evaluate_records)
 from repro.video import codec
 from repro.video.scenes import (GLYPH_BITS, Scene, all_categories,
                                 decode_glyph, make_scene)
 
 LOW_KBPS = 200.0
 HIGH_KBPS = 4000.0
+# step-5 cross verification re-reads the high-bitrate decode at a more
+# permissive detector operating point
+VERIFY_MARGIN_FLOOR = 0.25
 
 
 @dataclasses.dataclass
@@ -66,6 +78,16 @@ class Benchmark:
     def scene(self, rec: QARecord) -> Scene:
         return self.scenes[rec.scene_id]
 
+    def split(self, name: str) -> List[QARecord]:
+        if name == "test":
+            return self.test
+        if name == "validation":
+            return self.validation
+        if name == "all":
+            return self.test + self.validation
+        raise ValueError(f"unknown split {name!r}; "
+                         "one of ('test', 'validation', 'all')")
+
 
 def _encode_at(frame: np.ndarray, kbps: float, fps: float = 10.0
                ) -> np.ndarray:
@@ -94,16 +116,15 @@ def _answer(scene: Scene, rec: QARecord, frame: np.ndarray,
     raise ValueError(rec.kind)
 
 
-def generate(n_scenes_per_cat: int = 2, questions_per_obj: int = 2,
-             seed: int = 0, fps: float = 10.0, frame_hw=(256, 256),
-             n_frames: int = 60) -> Benchmark:
-    """Run the full 5-step pipeline; see module docstring."""
-    t_start = time.time()
-    rng = np.random.default_rng(seed)
+# --------------------------------------------------------------------------
+# Step 1 + 3: scene collection and QA generation (shared by both engines
+# so the rng stream — and therefore the Benchmark — is engine-invariant)
+# --------------------------------------------------------------------------
+def _propose(rng: np.random.Generator, n_scenes_per_cat: int,
+             questions_per_obj: int, seed: int, frame_hw, n_frames: int
+             ) -> Tuple[List[Scene], List[QARecord]]:
     scenes: List[Scene] = []
     records: List[QARecord] = []
-
-    # -- 1. collection + 3. generation ---------------------------------
     sid = 0
     for cat, moving in all_categories():
         for k in range(n_scenes_per_cat):
@@ -124,20 +145,36 @@ def generate(n_scenes_per_cat: int = 2, questions_per_obj: int = 2,
                         temporal="inter" if moving and rng.random() < 0.15
                         else "intra"))
             sid += 1
+    return scenes, records
 
-    # -- 2. preprocessing + 4. filtering --------------------------------
-    # cache encoded frames per (scene, t_frame, kbps)
+
+# --------------------------------------------------------------------------
+# Steps 2 + 4 + 5: degrade, filter, cross-verify — two engines
+# --------------------------------------------------------------------------
+def _degraded_frame(scenes: Sequence[Scene],
+                    cache: Dict[Tuple[int, int, float], np.ndarray],
+                    sid: int, t: int, kbps: float, fps: float
+                    ) -> np.ndarray:
+    """Cached encode of scene `sid`'s frame `t` at `kbps`.  Module-level
+    with every key as an explicit argument — no closure over loop
+    variables, so two records of the same scene can never alias each
+    other's degradations (regression-tested)."""
+    key = (sid, t, kbps)
+    if key not in cache:
+        cache[key] = _encode_at(scenes[sid].render(t), kbps, fps)
+    return cache[key]
+
+
+def _screen_serial(scenes: List[Scene], records: List[QARecord],
+                   fps: float) -> None:
+    """The original per-record loop: one device dispatch per (record,
+    bitrate).  Pinned as the parity oracle for the vectorized engine."""
     cache: Dict[Tuple[int, int, float], np.ndarray] = {}
-
-    def degraded(sid_, t_, kbps):
-        key = (sid_, t_, kbps)
-        if key not in cache:
-            cache[key] = _encode_at(scenes[sid_].render(t_), kbps, fps)
-        return cache[key]
-
     for rec in records:
-        hi = degraded(rec.scene_id, rec.t_frame, HIGH_KBPS)
-        lo = degraded(rec.scene_id, rec.t_frame, LOW_KBPS)
+        hi = _degraded_frame(scenes, cache, rec.scene_id, rec.t_frame,
+                             HIGH_KBPS, fps)
+        lo = _degraded_frame(scenes, cache, rec.scene_id, rec.t_frame,
+                             LOW_KBPS, fps)
         sc = scenes[rec.scene_id]
         ans_hi, m_hi = _answer(sc, rec, hi)
         ans_lo, m_lo = _answer(sc, rec, lo)
@@ -146,13 +183,59 @@ def generate(n_scenes_per_cat: int = 2, questions_per_obj: int = 2,
         rec.correct_low = ans_lo == rec.answer
         rec.accepted = rec.correct_high and not rec.correct_low
 
-    accepted = [r for r in records if r.accepted]
-
-    # -- 5. cross verification (independent operating point) ------------
-    for rec in accepted:
-        hi = degraded(rec.scene_id, rec.t_frame, HIGH_KBPS)
-        ans_v, _ = _answer(scenes[rec.scene_id], rec, hi, margin_floor=0.25)
+    for rec in records:
+        if not rec.accepted:
+            continue
+        hi = _degraded_frame(scenes, cache, rec.scene_id, rec.t_frame,
+                             HIGH_KBPS, fps)
+        ans_v, _ = _answer(scenes[rec.scene_id], rec, hi,
+                           margin_floor=VERIFY_MARGIN_FLOOR)
         rec.verified = ans_v == rec.answer
+
+
+def _screen_vectorized(scenes: List[Scene], records: List[QARecord],
+                       fps: float) -> None:
+    """Steps 2+4+5 as one stacked (record x {high, low}) grid: two
+    batched codec dispatches and one batched answering pass for the
+    whole benchmark.  Step 5's independent operating point is a pure
+    re-threshold of the high-bitrate column (the decode is
+    deterministic, exactly what the serial loop's cache recomputes)."""
+    res = evaluate_records(scenes, records,
+                           bitrate_ladder([HIGH_KBPS, LOW_KBPS]), fps=fps)
+    ans_v = res.reanswer(0, margin_floor=VERIFY_MARGIN_FLOOR)
+    ok_hi, ok_lo = res.correct[:, 0], res.correct[:, 1]
+    for i, rec in enumerate(records):
+        rec.margin_high = float(res.margins[i, 0])
+        rec.margin_low = float(res.margins[i, 1])
+        rec.correct_high = bool(ok_hi[i])
+        rec.correct_low = bool(ok_lo[i])
+        rec.accepted = rec.correct_high and not rec.correct_low
+        rec.verified = rec.accepted and bool(ans_v[i] == rec.answer)
+
+
+def generate(n_scenes_per_cat: int = 2, questions_per_obj: int = 2,
+             seed: int = 0, fps: float = 10.0, frame_hw=(256, 256),
+             n_frames: int = 60, engine: str = "vectorized") -> Benchmark:
+    """Run the full 5-step pipeline; see module docstring.
+
+    `engine="vectorized"` (default) batches all codec + answering work;
+    `engine="serial"` runs the original per-record loop.  Both produce
+    bit-identical Benchmarks (the rng stream is consumed only by the
+    shared propose/shuffle steps)."""
+    t_start = time.time()
+    rng = np.random.default_rng(seed)
+    scenes, records = _propose(rng, n_scenes_per_cat, questions_per_obj,
+                               seed, frame_hw, n_frames)
+
+    if engine == "serial":
+        _screen_serial(scenes, records, fps)
+    elif engine == "vectorized":
+        _screen_vectorized(scenes, records, fps)
+    else:
+        raise ValueError(f"unknown engine {engine!r}; "
+                         "one of ('vectorized', 'serial')")
+
+    accepted = [r for r in records if r.accepted]
     verified = [r for r in accepted if r.verified]
 
     # -- splits + summary ------------------------------------------------
@@ -176,6 +259,7 @@ def generate(n_scenes_per_cat: int = 2, questions_per_obj: int = 2,
                         for k in ("intra", "inter")},
         "total_duration_s": len(scenes) * n_frames / fps,
         "build_time_s": time.time() - t_start,
+        "engine": engine,
     }
     return Benchmark(scenes=scenes, validation=validation, test=test,
                      stats=stats)
@@ -187,7 +271,10 @@ def generate(n_scenes_per_cat: int = 2, questions_per_obj: int = 2,
 def accuracy_at_bitrate(bench: Benchmark, kbps: float, fps: float = 10.0,
                         qp_shape_fn=None, split: str = "test") -> float:
     """Fraction of QA answered correctly at a given uniform (or shaped)
-    encoding bitrate — the Fig. 3 / Fig. 11 measurement."""
+    encoding bitrate — the Fig. 3 / Fig. 11 measurement.
+
+    Per-record serial loop; pinned as the parity oracle for
+    `accuracy_grid` (which batches the whole ladder)."""
     recs = bench.test if split == "test" else bench.validation
     ok = []
     for rec in recs:
@@ -205,13 +292,74 @@ def accuracy_at_bitrate(bench: Benchmark, kbps: float, fps: float = 10.0,
     return float(np.mean(ok)) if ok else 0.0
 
 
-def fit_confidence_calibrator(bench: Benchmark) -> PlattCalibrator:
-    """Platt scaling of detector margin -> P(correct) on the val split."""
+def evaluate(bench: Benchmark, degradations: Sequence[DegradationSpec],
+             split: str = "test", fps: float = 10.0,
+             margin_floor: float = 0.35, backend: str = "jnp"
+             ) -> GridResult:
+    """Vectorized (record x degradation) grid over a benchmark split."""
+    return evaluate_records(bench.scenes, bench.split(split), degradations,
+                            fps=fps, margin_floor=margin_floor,
+                            backend=backend)
+
+
+def accuracy_grid(bench: Benchmark, kbps_ladder: Sequence[float],
+                  split: str = "test", fps: float = 10.0,
+                  engine: str = "vectorized", backend: str = "jnp"
+                  ) -> np.ndarray:
+    """Accuracy across a bitrate ladder as one stacked grid (the whole
+    Fig. 3 curve in a handful of batched dispatches).  Bit-identical to
+    mapping `accuracy_at_bitrate` over the ladder."""
+    if engine == "serial":
+        return np.asarray([accuracy_at_bitrate(bench, float(k), fps,
+                                               split=split)
+                           for k in kbps_ladder])
+    return evaluate(bench, bitrate_ladder(kbps_ladder), split=split,
+                    fps=fps, backend=backend).accuracy()
+
+
+def fit_confidence_calibrator(bench, engine: str = "vectorized"
+                              ) -> PlattCalibrator:
+    """Platt scaling of detector margin -> P(correct).
+
+    Accepts a `Benchmark` (fit on the validation split + a mid-bitrate
+    augmentation grid) or any object with `stacked_margins()` returning
+    (scores, correct) stacked arrays — e.g. the scenario layer's
+    DeViBench RunResult — in which case the fit consumes the arrays
+    directly with no per-record work at all."""
+    if hasattr(bench, "stacked_margins"):
+        scores, correct = bench.stacked_margins()
+        return PlattCalibrator().fit(np.asarray(scores),
+                                     np.asarray(correct))
+    if isinstance(bench, GridResult):
+        return PlattCalibrator().fit(bench.margins.ravel(),
+                                     bench.correct.ravel())
+    if engine == "serial":
+        return _fit_calibrator_serial(bench)
+
+    val = bench.validation
+    # the high/low margins were already measured during generate()
+    scores = np.asarray([[r.margin_high, r.margin_low] for r in val],
+                        np.float64).ravel()
+    correct = np.asarray([[r.correct_high, r.correct_low] for r in val],
+                         bool).ravel()
+    # augment with mid-bitrate points for a smoother fit — one stacked
+    # (record x 3-bitrate) grid instead of a per-record loop.  fps is
+    # pinned to 10 to match the serial oracle's kbps*1e2 target.
+    res = evaluate_records(bench.scenes, val[:20],
+                           bitrate_ladder([400.0, 900.0, 1700.0]),
+                           fps=10.0)
+    scores = np.concatenate([scores, res.margins.ravel()])
+    correct = np.concatenate([correct, res.correct.ravel()])
+    return PlattCalibrator().fit(scores, correct)
+
+
+def _fit_calibrator_serial(bench: Benchmark) -> PlattCalibrator:
+    """The original per-record loop; parity oracle for the vectorized
+    `fit_confidence_calibrator`."""
     scores, correct = [], []
     for rec in bench.validation:
         scores += [rec.margin_high, rec.margin_low]
         correct += [rec.correct_high, rec.correct_low]
-    # augment with mid-bitrate points for a smoother fit
     for rec in bench.validation[:20]:
         sc = bench.scene(rec)
         frame = sc.render(rec.t_frame)

@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.qp_codec.qp_codec import qp_codec_blocks, zeco_rc_blocks
+from repro.video import codec
 from repro.video.codec import QP_MAX, QP_MIN
 
 
@@ -51,6 +52,29 @@ def qp_codec_frames(frames: jnp.ndarray, qp_blocks: jnp.ndarray, *,
     rec = rec.reshape(N, nby, nbx, 8, 8).transpose(0, 1, 3, 2, 4)
     rec = rec.reshape(N, H, W)
     return rec, bits.reshape(N, nby * nbx).sum(axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "probe_stride", "bs",
+                                             "interpret"))
+def rate_controlled_codec_frames(frames: jnp.ndarray,
+                                 qp_shapes: jnp.ndarray,
+                                 target_bits: jnp.ndarray, *,
+                                 iters: int = 8, probe_stride: int = 1,
+                                 bs: int = 512, interpret=None):
+    """Rate-controlled fused encode+decode for a DeViBench grid batch:
+    the jnp bisection solves each row's QP offset against its own bits
+    target, then ONE fused Pallas launch reconstructs every frame at the
+    solved surfaces.
+
+    frames (N, H, W), qp_shapes (N, H//8, W//8), target_bits (N,) ->
+    (reconstructions (N, H, W), per-frame bits (N,)).  This is the
+    DeViBench engine's `backend="kernel"` encode path (interpret mode
+    off-TPU); it matches the jnp path to kernel tolerance, not bitwise
+    (tests/test_devibench_engine.py)."""
+    qp, _ = codec.rate_control_batch(frames, qp_shapes, target_bits,
+                                     iters=iters,
+                                     probe_stride=probe_stride)
+    return qp_codec_frames(frames, qp, bs=bs, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("patch", "mu", "q_min",

@@ -189,13 +189,37 @@ def _requantize_core(coeffs: jnp.ndarray, qp_blocks: jnp.ndarray,
 
     Used when the channel partially drops a frame: instead of rerunning
     the full DCT + 8-iteration bisection on the source frame, dequantize
-    the cached coefficients once and bisect the QP offset over a
-    quantize-only inner loop (no transform).  `qp_shape` is the same
-    relative surface rate_control searched over, so the result lives in
-    the same QP family as a from-scratch encode at the delivered rate.
+    the cached coefficients once and run the shared coefficient-domain
+    bisection (`_rc_core_from_coef` — no transform).  `qp_shape` is the
+    same relative surface rate_control searched over, so the result
+    lives in the same QP family as a from-scratch encode at the
+    delivered rate.
     """
     qs0 = qstep(qp_blocks)[..., None, None] * (1.0 / 64.0)
     coef = coeffs.astype(jnp.float32) * qs0  # dequantized approximation
+    return _rc_core_from_coef(coef, qp_shape, target_bits, iters,
+                              probe_stride)
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "probe_stride"))
+def requantize(coeffs: jnp.ndarray, qp_blocks: jnp.ndarray,
+               qp_shape: jnp.ndarray, target_bits: jnp.ndarray,
+               iters: int = 8, probe_stride: int = 1) -> EncodedFrame:
+    return _requantize_core(coeffs, qp_blocks, qp_shape, target_bits,
+                            iters, probe_stride)
+
+
+def _rc_core_from_coef(coef: jnp.ndarray, qp_shape: jnp.ndarray,
+                       target_bits: jnp.ndarray, iters: int = 8,
+                       probe_stride: int = 1) -> EncodedFrame:
+    """`rate_control`'s bisection + final quantize, starting from
+    already-computed DCT coefficients.
+
+    Mirrors `rate_control` op for op — the final quantize applies the
+    same `encode` arithmetic to `coef` instead of re-transforming the
+    frame, which is exact because the DCT is deterministic (the grid
+    path below DCTs each unique frame once and shares the coefficients
+    across every degradation cell that reuses the frame)."""
     coef_p, shape_p, scale = _probe(coef, qp_shape, probe_stride)
     lo = jnp.float32(QP_MIN) - jnp.max(qp_shape)
     hi = jnp.float32(QP_MAX) - jnp.min(qp_shape)
@@ -217,14 +241,6 @@ def _requantize_core(coeffs: jnp.ndarray, qp_blocks: jnp.ndarray,
           + RATE_OVERHEAD_PER_BLOCK)
     return EncodedFrame(coeffs=q, qp_blocks=qp, bits=jnp.sum(bb),
                         bits_blocks=bb)
-
-
-@functools.partial(jax.jit, static_argnames=("iters", "probe_stride"))
-def requantize(coeffs: jnp.ndarray, qp_blocks: jnp.ndarray,
-               qp_shape: jnp.ndarray, target_bits: jnp.ndarray,
-               iters: int = 8, probe_stride: int = 1) -> EncodedFrame:
-    return _requantize_core(coeffs, qp_blocks, qp_shape, target_bits,
-                            iters, probe_stride)
 
 
 # --------------------------------------------------------------------------
@@ -257,6 +273,32 @@ def rate_control_batch(frames: jnp.ndarray, qp_shapes: jnp.ndarray,
     return jax.vmap(
         lambda f, q, t: rate_control(f, q, t, iters, probe_stride))(
             frames, qp_shapes, target_bits)
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "probe_stride"))
+def grid_rate_control_decode(frames: jnp.ndarray, frame_idx: jnp.ndarray,
+                             qp_shapes: jnp.ndarray,
+                             target_bits: jnp.ndarray, iters: int = 8,
+                             probe_stride: int = 1
+                             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """DeViBench grid fast path: encode+decode M = len(frame_idx) grid
+    rows over F <= M unique frames in ONE dispatch.
+
+    frames (F, H, W) are DCT'd once; each grid row gathers its frame's
+    coefficients (`frame_idx` (M,)) and runs the per-row QP bisection,
+    final quantize and inverse transform on them — a (frame x
+    degradation) grid shares the transform across every degradation
+    cell that reuses a frame, and nothing round-trips to the host
+    between stages.  Returns (reconstructions (M, H, W), bits (M,));
+    per-row results are bit-identical to serial `rate_control` +
+    `decode` (tests/test_devibench_engine.py)."""
+    coef = jax.vmap(_dct_blocks)(frames)[frame_idx]
+
+    def one(c, qs_, tb):
+        enc = _rc_core_from_coef(c, qs_, tb, iters, probe_stride)
+        return decode(enc), enc.bits
+
+    return jax.vmap(one)(coef, qp_shapes, target_bits)
 
 
 @functools.partial(jax.jit, static_argnames=("iters", "probe_stride"))

@@ -67,6 +67,33 @@ _PAYLOAD_IDX = np.asarray(
 _PAYLOAD_WEIGHTS = (1 << np.arange(GLYPH_BITS, dtype=np.int64))
 
 
+def decode_glyph_batch(patches: np.ndarray, cell: int
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """Vectorized `decode_glyph` over (B, S, S) stacked patches of one
+    cell size -> (codes (B,) int64, margins (B,) float64).
+
+    Per-record arithmetic is bit-identical to the scalar function: the
+    cell means reduce the same contiguous elements in the same order,
+    the threshold/denominator scalars stay float32 exactly as in the
+    scalar path, and the final margin product is carried out in float64
+    to mirror the scalar path's python-float multiply
+    (tests/test_devibench_engine.py asserts exact equality)."""
+    size = GLYPH_GRID * cell
+    p = np.ascontiguousarray(patches[:, :size, :size])
+    cells = p.reshape(-1, GLYPH_GRID, cell, GLYPH_GRID, cell).mean(axis=(2, 4))
+    lo = cells.min(axis=(1, 2))
+    hi = cells.max(axis=(1, 2))
+    thresh = 0.5 * (lo + hi)
+    denom = np.maximum(hi - lo, 1e-6)
+    margin = np.clip(np.abs(cells - thresh[:, None, None])
+                     / (0.5 * denom)[:, None, None], 0, 1).mean(axis=(1, 2))
+    contrast = np.clip((hi - lo) / 0.5, 0, 1)
+    margin = margin.astype(np.float64) * contrast.astype(np.float64)
+    hard = cells.reshape(len(cells), -1)[:, _PAYLOAD_IDX] > thresh[:, None]
+    codes = (hard * _PAYLOAD_WEIGHTS).sum(axis=1)
+    return codes, margin
+
+
 def decode_glyph(patch: np.ndarray, cell: int) -> Tuple[int, float]:
     """Threshold cell means -> (code, margin in [0,1]).
 

@@ -1,0 +1,446 @@
+"""Vectorized DeViBench engine tests: exact parity against the pinned
+serial pipeline, degradation-axis behavior, monotonicity properties,
+the scenario-layer DeViBench RunResult (schema + golden saturation
+snapshot), and the benchmark -> calibrator -> ReCap-ABR fitting loop."""
+import dataclasses
+import functools
+import json
+import os
+
+import numpy as np
+import pytest
+from _hypothesis_compat import hypothesis, st  # noqa: hypothesis optional
+
+from repro.api import (DegradationSpec, DeViBenchRunResult, ScenarioSpec,
+                       fit_confidence_calibrator, preset, run_devibench,
+                       run_scenarios, validate_devibench_json)
+from repro.core.confidence import PlattCalibrator
+from repro.core.recap_abr import (ReCapABR, fit_recap_params,
+                                  saturation_point)
+from repro.devibench import pipeline as dvb
+from repro.devibench.engine import (bitrate_ladder, default_degradations,
+                                    evaluate_records)
+
+LADDER = [200.0, 400.0, 968.0, 1700.0, 4000.0]
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "devibench_saturation.json")
+
+
+@pytest.fixture(scope="module")
+def bench():
+    return dvb.generate(n_scenes_per_cat=1, questions_per_obj=2, seed=0,
+                        n_frames=20)
+
+
+@pytest.fixture(scope="module")
+def bench_serial():
+    return dvb.generate(n_scenes_per_cat=1, questions_per_obj=2, seed=0,
+                        n_frames=20, engine="serial")
+
+
+@pytest.fixture(scope="module")
+def dvb_result() -> DeViBenchRunResult:
+    base = preset("devibench")
+    specs = [base.with_(degradation="bitrate",
+                        degradation_kwargs=dict(kbps=k)) for k in LADDER]
+    specs += [base.with_(degradation="requant",
+                         degradation_kwargs=dict(kbps=4000.0, loss=0.5)),
+              base.with_(degradation="drop",
+                         degradation_kwargs=dict(kbps=4000.0,
+                                                 stall_frames=5)),
+              base.with_(degradation="downscale",
+                         degradation_kwargs=dict(kbps=4000.0, scale=2))]
+    return run_devibench(specs)
+
+
+# --------------------------------------------------------------------------
+# Exact parity with the pinned serial pipeline
+# --------------------------------------------------------------------------
+def test_generate_engines_bit_identical(bench, bench_serial):
+    """The tentpole contract, construction side: the vectorized screen
+    (steps 2+4+5 as one stacked grid) reproduces the serial per-record
+    loop field for field — margins included, no tolerance."""
+    for name in ("validation", "test"):
+        ser, vec = getattr(bench_serial, name), getattr(bench, name)
+        assert len(ser) == len(vec)
+        for a, b in zip(ser, vec):
+            assert dataclasses.asdict(a) == dataclasses.asdict(b)
+    skip = ("build_time_s", "engine")
+    assert {k: v for k, v in bench_serial.stats.items() if k not in skip} \
+        == {k: v for k, v in bench.stats.items() if k not in skip}
+
+
+def test_accuracy_grid_bit_identical_to_serial(bench, bench_serial):
+    """The tentpole contract, evaluation side: the whole ladder as one
+    stacked grid == the serial per-record `accuracy_at_bitrate` loop,
+    aggregate accuracy bit for bit."""
+    acc_serial = np.asarray([dvb.accuracy_at_bitrate(bench_serial, k)
+                             for k in LADDER])
+    acc_vec = dvb.accuracy_grid(bench, LADDER)
+    np.testing.assert_array_equal(acc_serial, acc_vec)
+    # the serial engine selector routes to the oracle
+    np.testing.assert_array_equal(
+        acc_serial, dvb.accuracy_grid(bench, LADDER, engine="serial"))
+
+
+def test_grid_per_record_answers_bit_identical(bench):
+    """Per-record answers AND margins of the vectorized grid match the
+    serial `_encode_at` + `_answer` loop exactly (the fused
+    DCT-sharing dispatch included)."""
+    res = dvb.evaluate(bench, bitrate_ladder([400.0, 4000.0]))
+    for j, kbps in enumerate((400.0, 4000.0)):
+        for i, rec in enumerate(bench.test):
+            sc = bench.scene(rec)
+            rx = dvb._encode_at(sc.render(rec.t_frame), kbps)
+            ans, margin = dvb._answer(sc, rec, rx)
+            assert ans == res.answers[i, j]
+            assert margin == res.margins[i, j]
+
+
+def test_calibrator_engines_identical(bench, bench_serial):
+    cal_s = dvb.fit_confidence_calibrator(bench_serial, engine="serial")
+    cal_v = dvb.fit_confidence_calibrator(bench)
+    assert cal_s.a == cal_v.a and cal_s.b == cal_v.b
+
+
+def test_records_in_same_scene_get_distinct_degradations(bench):
+    """Regression for the degraded-frame cache hazard: two records of
+    the same (moving) scene at different frame times must hit distinct
+    cache keys / grid rows, not alias one degraded frame."""
+    pair = None
+    for sc_id in range(len(bench.scenes)):
+        recs = [r for r in bench.test + bench.validation
+                if r.scene_id == sc_id and bench.scenes[sc_id].moving]
+        ts = {r.t_frame for r in recs}
+        if len(ts) >= 2:
+            two = sorted(recs, key=lambda r: r.t_frame)
+            pair = (two[0], two[-1])
+            break
+    if pair is None:  # synthesize a pair on a moving scene
+        sc_id = next(i for i, sc in enumerate(bench.scenes) if sc.moving)
+        base = dvb.QARecord(scene_id=sc_id, category="x", moving=True,
+                            kind="read_code", t_frame=0, obj_idx=0,
+                            answer=bench.scenes[sc_id].objects[0].code)
+        pair = (base, dataclasses.replace(base, t_frame=15))
+    r1, r2 = pair
+    scene = bench.scenes[r1.scene_id]
+    assert not np.array_equal(scene.render(r1.t_frame),
+                              scene.render(r2.t_frame))
+    # serial helper: explicit-argument cache keys stay distinct
+    cache = {}
+    f1 = dvb._degraded_frame(bench.scenes, cache, r1.scene_id,
+                             r1.t_frame, 400.0, 10.0)
+    f2 = dvb._degraded_frame(bench.scenes, cache, r2.scene_id,
+                             r2.t_frame, 400.0, 10.0)
+    assert len(cache) == 2 and not np.array_equal(f1, f2)
+    # vectorized grid: each record is answered on ITS OWN degraded frame
+    res = evaluate_records(bench.scenes, [r1, r2],
+                           bitrate_ladder([400.0]))
+    for i, r in enumerate((r1, r2)):
+        ans, margin = dvb._answer(scene, r, np.asarray(
+            dvb._encode_at(scene.render(r.t_frame), 400.0)))
+        assert res.answers[i, 0] == ans
+        assert res.margins[i, 0] == margin
+
+
+# --------------------------------------------------------------------------
+# Degradation axes
+# --------------------------------------------------------------------------
+def test_default_degradations_cover_all_kinds(bench):
+    degr = default_degradations()
+    assert {d.kind for d in degr} == {"none", "bitrate", "requant",
+                                      "drop", "downscale"}
+    res = dvb.evaluate(bench, degr, split="all")
+    acc = res.accuracy()
+    labels = [d.label for d in degr]
+    # pristine and saturated-bitrate are the easy reference cells…
+    assert acc[labels.index("pristine")] > 0.9
+    assert acc[labels.index("bitrate@4000")] > 0.9
+    # …every degraded cell is no better than pristine, and the starved
+    # cap breaks the (degradation-sensitive by construction) samples
+    assert acc[labels.index("bitrate@200")] < 0.3
+    assert all(a <= acc[labels.index("pristine")] + 1e-12 for a in acc)
+
+
+def test_requant_loss_ladder_monotone(bench):
+    degr = [DegradationSpec(kind="requant", kbps=4000.0, loss=l)
+            for l in (0.0, 0.3, 0.6, 0.9)]
+    acc = dvb.evaluate(bench, degr, split="all").accuracy()
+    assert all(a >= b - 1e-12 for a, b in zip(acc, acc[1:]))
+
+
+def test_downscale_no_better_than_full_resolution(bench):
+    degr = [DegradationSpec(kind="bitrate", kbps=4000.0),
+            DegradationSpec(kind="downscale", kbps=4000.0, scale=2)]
+    acc = dvb.evaluate(bench, degr, split="all").accuracy()
+    assert acc[1] <= acc[0] + 1e-12
+
+
+def test_degradation_spec_validation_and_round_trip():
+    d = DegradationSpec(kind="drop", kbps=968.0, stall_frames=7)
+    assert DegradationSpec.from_dict(
+        json.loads(json.dumps(d.to_dict()))) == d
+    assert d.label == "drop@968+7f"
+    with pytest.raises(ValueError):
+        DegradationSpec(kind="blur")
+    with pytest.raises(ValueError):
+        DegradationSpec(loss=1.5)
+    with pytest.raises(ValueError):
+        DegradationSpec(scale=0)
+    with pytest.raises(ValueError):
+        DegradationSpec(kbps=-1.0)
+
+
+def test_engine_input_validation(bench):
+    with pytest.raises(ValueError):
+        evaluate_records(bench.scenes, bench.test, [])
+    with pytest.raises(ValueError):
+        evaluate_records(bench.scenes, [], bitrate_ladder([400.0]))
+    with pytest.raises(ValueError):
+        dvb.evaluate(bench, bitrate_ladder([400.0]), split="nope")
+    with pytest.raises(ValueError):
+        dvb.evaluate(bench, bitrate_ladder([400.0]), backend="cuda")
+    with pytest.raises(ValueError):  # 256/3 breaks 8px blocking
+        dvb.evaluate(bench, [DegradationSpec(kind="downscale", scale=3)])
+    with pytest.raises(ValueError):
+        dvb.generate(n_scenes_per_cat=1, n_frames=20, engine="gpu")
+
+
+# --------------------------------------------------------------------------
+# Pallas kernel backend (interpret mode off-TPU)
+# --------------------------------------------------------------------------
+def test_kernel_backend_matches_jnp(bench):
+    """backend='kernel' reconstructs through the fused qp_codec Pallas
+    kernel at the bisection-solved QP surfaces; at the saturated
+    operating point it must agree with the jnp path to kernel
+    tolerance."""
+    recs = (bench.test + bench.validation)[:6]
+    degr = bitrate_ladder([4000.0])
+    jnp_res = evaluate_records(bench.scenes, recs, degr)
+    krn_res = evaluate_records(bench.scenes, recs, degr,
+                               backend="kernel")
+    np.testing.assert_array_equal(jnp_res.codes, krn_res.codes)
+    np.testing.assert_allclose(jnp_res.margins, krn_res.margins,
+                               atol=1e-3)
+    np.testing.assert_array_equal(jnp_res.answers, krn_res.answers)
+
+
+def test_kernel_backend_rejects_requant(bench):
+    with pytest.raises(ValueError):
+        evaluate_records(bench.scenes, bench.test[:2],
+                         [DegradationSpec(kind="requant", loss=0.5)],
+                         backend="kernel")
+
+
+# --------------------------------------------------------------------------
+# Property tests (degradation monotonicity + fitting invariants)
+# --------------------------------------------------------------------------
+# note: @given tests must not take pytest fixtures (the no-hypothesis
+# fallback shim wraps them as zero-arg), so the seed-pinned curves are
+# cached by module-level helpers instead
+@functools.lru_cache()
+def _property_bench():
+    return dvb.generate(n_scenes_per_cat=1, questions_per_obj=2, seed=0,
+                        n_frames=20)
+
+
+@functools.lru_cache()
+def _bitrate_curve():
+    ladder = (200.0, 290.0, 400.0, 710.0, 968.0, 1700.0, 3000.0, 4000.0)
+    return np.asarray(dvb.accuracy_grid(_property_bench(), ladder))
+
+
+@functools.lru_cache()
+def _stall_curve():
+    degr = [DegradationSpec(kind="drop", kbps=4000.0, stall_frames=s)
+            for s in (0, 2, 5, 10, 15)]
+    return dvb.evaluate(_property_bench(), degr, split="all").accuracy()
+
+
+@hypothesis.given(i=st.integers(0, 6), j=st.integers(1, 7))
+@hypothesis.settings(deadline=None, max_examples=20)
+def test_property_accuracy_monotone_in_bitrate(i, j):
+    """Tightening the bitrate cap never improves accuracy (checked on
+    the seed-pinned curve, any rung pair)."""
+    acc = _bitrate_curve()
+    lo, hi = min(i, j), max(i, j)
+    assert acc[lo] <= acc[hi] + 1e-12
+
+
+@hypothesis.given(i=st.integers(1, 4))
+@hypothesis.settings(deadline=None, max_examples=10)
+def test_property_accuracy_under_stall_never_beats_fresh(i):
+    """A rising drop/stall rate never beats the fresh-frame baseline."""
+    acc = _stall_curve()
+    assert acc[i] <= acc[0] + 1e-12
+
+
+@hypothesis.given(score=st.floats(-5.0, 5.0), a=st.floats(-20.0, 20.0),
+                  b=st.floats(-10.0, 10.0))
+@hypothesis.settings(deadline=None, max_examples=50)
+def test_property_calibrator_output_in_unit_interval(score, a, b):
+    cal = PlattCalibrator(a=a, b=b)
+    out = cal(score)
+    assert 0.0 <= out <= 1.0
+    np.testing.assert_allclose(cal.batch(np.asarray([score]))[0], out)
+
+
+@hypothesis.given(conf=st.floats(0.0, 1.0), bw=st.floats(0.0, 5e6),
+                  steps=st.integers(1, 8))
+@hypothesis.settings(deadline=None, max_examples=50)
+def test_property_recap_cap_never_below_min_rate(conf, bw, steps):
+    abr = ReCapABR(min_rate=150e3)
+    for _ in range(steps):
+        rate = abr.update(conf, bw)
+        assert rate >= 150e3
+
+
+@hypothesis.given(seed=st.integers(0, 100), min_rate=st.floats(1e4, 5e5))
+@hypothesis.settings(deadline=None, max_examples=25)
+def test_property_fit_recap_respects_min_rate(seed, min_rate):
+    rng = np.random.default_rng(seed)
+    kbps = np.sort(rng.uniform(50, 5000, size=6))
+    acc = np.sort(rng.uniform(0, 1, size=6))      # saturating curve
+    conf = np.sort(rng.uniform(0, 1, size=6))
+    fit = fit_recap_params(kbps, conf, accuracy=acc, min_rate=min_rate)
+    assert fit["cap_bps"] >= min_rate
+    assert 0.5 <= fit["tau"] <= 0.95
+    assert 1.0 <= fit["gamma"] <= 4.0
+    assert fit["knee_kbps"] in kbps
+
+
+def test_saturation_point_reads_the_knee():
+    kbps = [200.0, 400.0, 968.0, 1700.0, 4000.0]
+    acc = [0.1, 0.5, 0.96, 0.99, 1.0]
+    assert saturation_point(kbps, acc) == 968.0
+    # order-insensitive
+    assert saturation_point(kbps[::-1], acc[::-1]) == 968.0
+    with pytest.raises(ValueError):
+        saturation_point([], [])
+
+
+# --------------------------------------------------------------------------
+# Scenario-layer integration: run_devibench / DeViBenchRunResult
+# --------------------------------------------------------------------------
+def test_run_devibench_matches_direct_engine(bench, dvb_result):
+    """run_devibench's cohort grid == evaluating the same benchmark
+    directly (the preset's generation knobs match the module fixture)."""
+    assert len(dvb_result) == 8 and len(dvb_result.cohorts) == 1
+    np.testing.assert_array_equal(
+        dvb_result.values("accuracy")[:len(LADDER)],
+        dvb.accuracy_grid(bench, LADDER))
+    kbps, acc = dvb_result.saturation_curve()
+    np.testing.assert_array_equal(kbps, LADDER)
+
+
+def test_run_scenarios_workload_dispatch(dvb_result):
+    r = run_scenarios([preset("devibench")], workload="devibench")
+    assert isinstance(r, DeViBenchRunResult) and len(r) == 1
+    with pytest.raises(ValueError):
+        run_scenarios([preset("devibench")], workload="quic")
+    # a degraded spec on the RTC fleet path is an error, not a no-op
+    with pytest.raises(ValueError):
+        run_scenarios([ScenarioSpec(degradation="bitrate")])
+    # and the devibench QA policy cannot leak into a fleet session
+    with pytest.raises(ValueError):
+        run_scenarios([ScenarioSpec(qa="devibench")])
+    with pytest.raises(ValueError):
+        run_devibench([ScenarioSpec()])  # qa != devibench
+
+
+def test_spec_degradation_dimension_round_trips():
+    s = preset("devibench").with_(degradation="requant",
+                                  degradation_kwargs=dict(kbps=700.0,
+                                                          loss=0.25))
+    assert ScenarioSpec.from_dict(
+        json.loads(json.dumps(s.to_dict()))) == s
+    assert s.degradation_spec() == DegradationSpec(
+        kind="requant", kbps=700.0, loss=0.25)
+    with pytest.raises(ValueError):
+        ScenarioSpec(degradation="blur")
+
+
+def test_result_select_aggregate_and_arrays(dvb_result):
+    arr = dvb_result.arrays()
+    assert all(v.shape == (8,) for v in arr.values())
+    assert np.all(arr["accuracy"] >= 0) and np.all(arr["accuracy"] <= 1)
+    sub = dvb_result.select(degradation="bitrate")
+    assert len(sub) == len(LADDER)
+    # subset cohorts re-partition the kept indices
+    assert sorted(i for c in sub.cohorts for i in c.indices) \
+        == list(range(len(sub)))
+    agg = dvb_result.aggregate(by=("degradation",))
+    assert set(agg) == {("bitrate",), ("requant",), ("drop",),
+                       ("downscale",)}
+
+
+def test_devibench_json_schema_round_trip(dvb_result, tmp_path):
+    path = tmp_path / "devibench.json"
+    doc = dvb_result.to_json(str(path))
+    validate_devibench_json(doc)
+    validate_devibench_json(json.loads(path.read_text()))
+    back = [ScenarioSpec.from_dict(rec["spec"])
+            for rec in doc["scenarios"]]
+    assert back == dvb_result.specs
+
+
+def test_devibench_json_schema_rejects_corruption(dvb_result):
+    doc = dvb_result.to_json()
+    bad = json.loads(json.dumps(doc))
+    bad["scenarios"][0]["metrics"].pop("accuracy")
+    with pytest.raises(ValueError):
+        validate_devibench_json(bad)
+    bad2 = json.loads(json.dumps(doc))
+    bad2["cohorts"][0]["sessions"] = bad2["cohorts"][0]["sessions"][:-1]
+    with pytest.raises(ValueError):
+        validate_devibench_json(bad2)
+    bad3 = json.loads(json.dumps(doc))
+    bad3["scenarios"][0]["degradation"].pop("label")
+    with pytest.raises(ValueError):
+        validate_devibench_json(bad3)
+    with pytest.raises(ValueError):
+        validate_devibench_json({"schema": "other"})
+
+
+def test_devibench_csv(dvb_result):
+    text = dvb_result.to_csv()
+    lines = text.strip().splitlines()
+    assert len(lines) == 1 + len(dvb_result)
+    assert "degradation_label" in lines[0] and "accuracy" in lines[0]
+
+
+# --------------------------------------------------------------------------
+# The benchmark -> calibrator -> ReCap-ABR loop on stacked arrays
+# --------------------------------------------------------------------------
+def test_fit_confidence_calibrator_consumes_run_result(dvb_result):
+    cal = fit_confidence_calibrator(dvb_result)
+    assert 0.0 <= cal(0.05) <= 1.0 and 0.0 <= cal(0.95) <= 1.0
+    assert cal(0.95) > cal(0.05)  # higher margin -> higher confidence
+
+
+def test_fit_recap_closes_the_loop(dvb_result):
+    fit = dvb_result.fit_recap()
+    assert fit["cap_bps"] >= 150e3
+    assert fit["knee_kbps"] in LADDER
+    assert 0.5 <= fit["tau"] <= 0.95
+    assert 1.0 <= fit["gamma"] <= 4.0
+    assert 1 <= fit["settle_steps"] <= 48
+
+
+# --------------------------------------------------------------------------
+# Seed-pinned saturation-curve snapshot (golden file)
+# --------------------------------------------------------------------------
+def test_saturation_curve_matches_golden_snapshot(bench):
+    with open(GOLDEN) as f:
+        golden = json.load(f)
+    assert golden["seed"] == 0 and golden["split"] == "all"
+    acc = dvb.accuracy_grid(bench, golden["ladder_kbps"], split="all")
+    # slack of one record per rung absorbs BLAS-level float drift across
+    # platforms; the curve shape and knee must hold exactly
+    n = len(bench.test) + len(bench.validation)
+    assert n == golden["n_records"]
+    np.testing.assert_allclose(acc, golden["accuracy"],
+                               atol=1.5 / n + 1e-12)
+    assert all(a <= b + 1e-12 for a, b in zip(acc, acc[1:]))
+    assert saturation_point(golden["ladder_kbps"], acc) \
+        == golden["knee_kbps"]
