@@ -13,6 +13,13 @@ cells compile them through `build_fleet`, so both sides run literally
 identical sessions (same scenes, traces, configs, rc probe stride),
 interleaved and median-aggregated so background load on shared machines
 does not bias either side.
+
+`python -m benchmarks.bench_fleet --devices` runs the device-count
+sweep: sessions/sec of the mesh-sharded fleet at N in {8, 64, 256} x
+devices in {1, 2, 4, 8}, each cell in its own subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=<D> set before jax
+imports (virtual CPU devices — on real accelerators drop the flag and
+the sweep uses the physical device counts).
 """
 from __future__ import annotations
 
@@ -28,6 +35,9 @@ from repro.video import codec
 NS = (1, 8, 32, 128)
 HW = 64
 TARGET_N, TARGET_X = 32, 5.0
+
+SWEEP_NS = (8, 64, 256)
+SWEEP_DEVICES = (1, 2, 4, 8)
 
 
 def _spec(k: int, duration: float):
@@ -129,3 +139,106 @@ def run(quick: bool = True):
         rows.append(Row(f"fleet.pallas_tick.N{n}", _pallas_tick_us(n),
                         "fused pallas qp_codec per tick"))
     return rows
+
+
+# --------------------------------------------------------------------------
+# Device-count sweep (sharded fleet)
+# --------------------------------------------------------------------------
+def _sweep_cell(n: int, devices: int, duration: float) -> float:
+    """One (N, devices) cell, run inside the forced-device subprocess:
+    seconds per sharded fleet run (post-warmup)."""
+    import jax
+
+    from repro.launch.mesh import make_fleet_mesh
+
+    assert len(jax.devices()) >= devices, (
+        f"need {devices} devices, have {len(jax.devices())} — XLA_FLAGS "
+        "must force the device count before jax imports")
+    mesh = make_fleet_mesh(devices) if devices > 1 else None
+
+    def once() -> float:
+        fl = build_fleet([_spec(k, duration) for k in range(n)], mesh=mesh)
+        t0 = time.perf_counter()
+        fl.run()
+        return time.perf_counter() - t0
+
+    once()  # compile warmup
+    return min(once() for _ in range(2))
+
+
+def _child_main(argv) -> None:
+    """`--_child N D DURATION`: print one sweep cell as JSON on stdout."""
+    import json
+
+    n, devices, duration = int(argv[0]), int(argv[1]), float(argv[2])
+    dt = _sweep_cell(n, devices, duration)
+    print(json.dumps({"n": n, "devices": devices, "seconds": dt,
+                      "sessions_per_sec": n / dt}))
+
+
+def run_devices(quick: bool = True, ns=SWEEP_NS, devices=SWEEP_DEVICES):
+    """Spawn one subprocess per (N, devices) cell with the forced host
+    device count, collect sessions/sec, and print the sweep table."""
+    import json
+    import os
+    import subprocess
+    import sys
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    duration = 5.0 if quick else 15.0
+    rows = []
+    grid = {}
+    for d in devices:
+        for n in ns:
+            env = dict(os.environ)
+            env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                                + f" --xla_force_host_platform_device_count={d}").strip()
+            env["PYTHONPATH"] = (os.path.join(root, "src") + os.pathsep
+                                 + env.get("PYTHONPATH", "")).rstrip(os.pathsep)
+            r = subprocess.run(
+                [sys.executable, "-m", "benchmarks.bench_fleet",
+                 "--_child", str(n), str(d), str(duration)],
+                capture_output=True, text=True, timeout=1800, env=env,
+                cwd=root)
+            if r.returncode != 0:
+                raise RuntimeError(
+                    f"sweep cell N={n} D={d} failed:\n{r.stderr[-2000:]}")
+            cell = json.loads(r.stdout.strip().splitlines()[-1])
+            grid[(n, d)] = cell["sessions_per_sec"]
+            rows.append(Row(f"fleet.sharded.N{n}.D{d}",
+                            cell["seconds"] * 1e6,
+                            f"sessions_per_sec={cell['sessions_per_sec']:.2f}"))
+    print(f"\n[fleet --devices] sessions/sec "
+          f"(duration={duration:.0f}s, virtual CPU devices)")
+    header = "  N \\ D " + "".join(f"{d:>10}" for d in devices)
+    print(header)
+    for n in ns:
+        line = f"  {n:<6}" + "".join(f"{grid[(n, d)]:>10.2f}"
+                                     for d in devices)
+        print(line)
+    return rows
+
+
+def _main() -> None:
+    import argparse
+
+    from benchmarks.common import QUICK
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--devices", action="store_true",
+                    help="run the sharded device-count sweep "
+                         "(subprocesses with forced host device counts)")
+    ap.add_argument("--_child", nargs=3, metavar=("N", "D", "DURATION"),
+                    help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    if args._child:
+        _child_main(args._child)
+        return
+    rows = run_devices(QUICK) if args.devices else run(QUICK)
+    print("\nname,us_per_call,derived")
+    for r in rows:
+        print(r.csv())
+
+
+if __name__ == "__main__":
+    _main()

@@ -33,6 +33,7 @@ from repro.core.scenario import (DEVIBENCH_RESULT_SCHEMA,
                                  validate_run_result_json)
 from repro.core.session import (QASample, SessionConfig, SessionMetrics,
                                 run_session)
+from repro.launch.mesh import make_fleet_mesh, use_mesh
 from repro.devibench.engine import (DEGRADATION_KINDS, DegradationSpec,
                                     GridResult, bitrate_ladder,
                                     default_degradations)
@@ -50,13 +51,17 @@ __all__ = [
     "DEVIBENCH_RESULT_SCHEMA", "DEVIBENCH_SCALAR_METRICS",
     "validate_devibench_json", "fit_confidence_calibrator",
     "QASample", "SessionConfig", "SessionMetrics", "run_session",
+    "make_fleet_mesh", "use_mesh",
 ]
 
 
-def smoke(out_path: str = "/tmp/artic_scenario_smoke.json") -> RunResult:
+def smoke(out_path: str = "/tmp/artic_scenario_smoke.json",
+          sharded: bool = False) -> RunResult:
     """Tiny end-to-end grid: 2 system variants x 2 trace families, short
     duration, mixed frame sizes (so cohort partitioning is exercised),
-    exported to JSON and schema-validated."""
+    exported to JSON and schema-validated.  `sharded=True` runs every
+    cohort over a `make_fleet_mesh()` of all visible devices (the
+    multi-device CI job forces 8 virtual CPU devices via XLA_FLAGS)."""
     import json
 
     specs = grid(ScenarioSpec(duration=3.0, scene="retail", qa="periodic",
@@ -67,7 +72,11 @@ def smoke(out_path: str = "/tmp/artic_scenario_smoke.json") -> RunResult:
                  trace=["fluctuating", "mobility.driving"])
     # a thumbnail member lands in its own cohort within the same call
     specs.append(specs[0].with_(frame_h=64, frame_w=64, scene="lawn"))
-    result = run_scenarios(specs)
+    mesh = make_fleet_mesh() if sharded else None
+    if sharded:
+        print(f"[smoke] sharding cohorts over "
+              f"{mesh.devices.size} device(s)")
+    result = run_scenarios(specs, mesh=mesh)
     doc = result.to_json(out_path)
     validate_run_result_json(doc)
     with open(out_path) as f:
@@ -128,11 +137,14 @@ def _main() -> None:
     ap.add_argument("--devibench", action="store_true",
                     help="run the DeViBench degradation-grid smoke "
                          "instead of the RTC fleet smoke")
+    ap.add_argument("--sharded", action="store_true",
+                    help="run the fleet smoke device-sharded over all "
+                         "visible devices (make_fleet_mesh)")
     args = ap.parse_args()
     if args.devibench:
         devibench_smoke(args.out)
     else:
-        smoke(args.out)
+        smoke(args.out, sharded=args.sharded)
 
 
 if __name__ == "__main__":

@@ -54,11 +54,15 @@ all N frames — benchmarked in benchmarks/bench_fleet.py.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import functools
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import jax
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.confidence import PlattCalibrator
 from repro.core.grounding import detect_cards_batch
@@ -68,13 +72,23 @@ from repro.core.session import (QASample, SessionConfig, SessionMetrics,
                                 deliver_feedback, finalize,
                                 make_session_state, pop_due_arrivals,
                                 push_arrival, server_emit)
-from repro.core.zecostream import ZeCoStreamBank, rate_control_batch_fused
+from repro.core.zecostream import (ZeCoStreamBank, rate_control_batch_fused,
+                                   surfaces_from_boxes)
+from repro.distributed.sharding import (pad_sessions, session_partition,
+                                        shard_map_compat)
+from repro.launch.mesh import use_mesh
 from repro.net.cc import make_cc_bank
 from repro.net.channel import ChannelBank
 from repro.net.traces import Trace
 from repro.video import codec
 from repro.video.scenes import (_PAYLOAD_IDX, _PAYLOAD_WEIGHTS, GLYPH_GRID,
                                 Scene)
+
+# bandwidth assigned to masked dead sessions (the rows padding the fleet
+# up to the device count): any positive constant works — their results
+# are computed and discarded — but a fixed value keeps padded runs
+# deterministic across processes
+DEAD_SESSION_RATE = 1e5
 
 
 class _LazyFrames:
@@ -189,6 +203,61 @@ class FleetSession:
     calibrator: Optional[PlattCalibrator] = None
 
 
+# --------------------------------------------------------------------------
+# Device-sharded dispatches: the session axis laid out over a mesh
+# --------------------------------------------------------------------------
+class _ShardedDispatch:
+    """The fleet tick's device dispatches, shard_mapped over the mesh's
+    session ("data") axes.
+
+    Every batched codec / plan entry point is a vmap of a per-session
+    function with no cross-session communication, so splitting the
+    padded session axis across devices runs the SAME per-row program on
+    each shard — results are bit-identical to the single-device batch
+    (pinned by tests/test_sharded_fleet.py).  `put` lays host arrays
+    (or pytrees, e.g. an EncodedFrame batch) out with the matching
+    NamedSharding; re-putting an already-sharded output is a no-op."""
+
+    def __init__(self, mesh, axes, probe_stride: int,
+                 frame_hw: Tuple[int, int], patch: int, mu: float,
+                 q_min: float, q_max: float):
+        spec = P(axes)
+        self.sharding = NamedSharding(mesh, spec)
+
+        def smap(fn):
+            return jax.jit(shard_map_compat(fn, mesh, spec, spec))
+
+        self.surfaces = smap(functools.partial(
+            surfaces_from_boxes, frame_hw=frame_hw, patch=patch, mu=mu,
+            q_min=q_min, q_max=q_max))
+        self.rate_control = smap(functools.partial(
+            codec.rate_control_batch, probe_stride=probe_stride))
+        self.fused = smap(functools.partial(
+            rate_control_batch_fused, frame_hw=frame_hw, patch=patch,
+            mu=mu, q_min=q_min, q_max=q_max, probe_stride=probe_stride))
+        self.decode_delivered = smap(functools.partial(
+            codec.decode_delivered_batch, probe_stride=probe_stride))
+        self.decode = smap(codec.decode_batch)
+
+    def put(self, tree):
+        return jax.device_put(tree, self.sharding)
+
+    def plan_dispatch(self):
+        """`ZeCoStreamBank.plan`-compatible surface dispatch that lays
+        the box arrays out over the mesh first."""
+        return lambda boxes, counts, engaged: self.surfaces(
+            self.put(boxes), self.put(counts), self.put(engaged))
+
+
+@functools.lru_cache(maxsize=32)
+def _sharded_dispatch(mesh, axes, probe_stride, frame_hw, patch, mu,
+                      q_min, q_max) -> _ShardedDispatch:
+    """Cache per (mesh, statics): fleets come and go per cohort, but the
+    jitted shard_map wrappers (and their compiled executables) must not."""
+    return _ShardedDispatch(mesh, axes, probe_stride, frame_hw, patch,
+                            mu, q_min, q_max)
+
+
 class Fleet:
     """N lockstep sessions with batched codec + vectorized channel.
 
@@ -201,10 +270,22 @@ class Fleet:
     CC/ABR), `render` (scene rasterization), `plan` (the ZeCoStream bank
     dispatch; in fused mode only the host-side decision/selection — the
     surface kernel is billed to `encode` there, fused into its
-    dispatch), `encode`, `channel`, `decode`, `server`."""
+    dispatch), `encode`, `channel`, `decode`, `server`.
+
+    `mesh=...` shards the fleet over the session axis: every
+    per-session array — ZeCoStream context rows, ChannelBank queues,
+    CC/ABR lanes, frame/QP/codec batches — is laid out at a session
+    count padded to a multiple of the mesh's `data` axes
+    (`distributed.sharding.session_partition`; the pad rows are masked
+    *dead sessions* whose results are discarded), and each tick's
+    batched dispatches run shard_mapped over that axis under the mesh
+    context.  Per-session results are bit-identical to the unsharded
+    fleet (tests/test_sharded_fleet.py).  A mesh without a multi-way
+    data axis degenerates to unsharded execution."""
 
     def __init__(self, sessions: Sequence[FleetSession], *,
-                 fused_plan: bool = False, profile: bool = False):
+                 fused_plan: bool = False, profile: bool = False,
+                 mesh=None):
         if not sessions:
             raise ValueError("fleet needs at least one session")
         self.specs = list(sessions)
@@ -228,11 +309,27 @@ class Fleet:
             make_session_state(s.scene, s.qa_samples, s.cfg, s.calibrator)
             for s in self.specs]
         self.n = len(self.specs)
+        # session-axis partition: pad N to a multiple of the mesh's data
+        # axes with masked dead sessions; ways == 1 (no mesh, or a mesh
+        # with no multi-way data axis) keeps n_pad == n
+        self.mesh = None
+        self._axes = None
+        ways = 1
+        if mesh is not None:
+            self._axes, ways = session_partition(mesh)
+            if ways > 1:
+                self.mesh = mesh
+            else:
+                self._axes = None
+        self.n_pad = pad_sessions(self.n, ways)
+        self.pad = self.n_pad - self.n
         # one shared ZeCoStreamBank: every member's context state is a row
+        # (dead rows are disabled, so they never engage)
         self.zeco = ZeCoStreamBank(
-            self.n, hw0,
-            tau=[s.cfg.tau for s in self.specs],
-            enabled=[s.cfg.use_zeco for s in self.specs])
+            self.n_pad, hw0,
+            tau=[s.cfg.tau for s in self.specs] + [0.8] * self.pad,
+            enabled=[s.cfg.use_zeco for s in self.specs]
+            + [False] * self.pad)
         for k, st in enumerate(self.states):
             # CC/ABR advance through the vectorized banks below; the
             # per-session objects would otherwise sit stale and mislead
@@ -242,7 +339,14 @@ class Fleet:
             # fleet bank so feedback delivery and metrics hit row k
             st.client.zeco = self.zeco
             st.client.zeco_row = k
-        self.bank = ChannelBank([s.trace for s in self.specs])
+        self.bank = ChannelBank([s.trace for s in self.specs],
+                                pad_to=self.n_pad)
+        self._disp: Optional[_ShardedDispatch] = None
+        if self.mesh is not None:
+            self._disp = _sharded_dispatch(
+                self.mesh, self._axes, self._probe_stride,
+                self.zeco.frame_hw, self.zeco.patch, self.zeco.mu,
+                self.zeco.q_min, self.zeco.q_max)
         self._fused = fused_plan
         self.phase_times: Optional[Dict[str, float]] = (
             dict(client=0.0, render=0.0, plan=0.0, encode=0.0,
@@ -276,7 +380,12 @@ class Fleet:
         return now
 
     def tick(self, t: float) -> None:
-        """Advance every session by one frame interval."""
+        """Advance every session by one frame interval.
+
+        All per-session vectors run at `n_pad`; rows >= `n` are masked
+        dead sessions (fixed rate, blank frames, ZeCoStream disabled)
+        whose results are computed and discarded — elementwise lanes, so
+        live-row values are unchanged by the padding."""
         # client phase: feedback delivery per session, then CC + ABR +
         # the ZeCoStream plan for the whole fleet as (N,) array ops — the
         # QP surfaces for every session come from ONE bank dispatch, with
@@ -285,21 +394,26 @@ class Fleet:
         acks = self.bank.ack_stats_arrays()
         for st in self.states:
             deliver_feedback(st, t)
-        conf = np.asarray([st.client.confidence for st in self.states])
-        b_hat = np.empty(self.n)
+        conf = np.full(self.n_pad, 0.5)
+        conf[:self.n] = [st.client.confidence for st in self.states]
+        b_hat = np.full(self.n_pad, DEAD_SESSION_RATE)
         for idx, cc_bank in self._cc_groups:
             b_hat[idx] = cc_bank.estimate(
                 {key: val[idx] for key, val in acks.items()})
-        rate = np.empty(self.n)
+        rate = np.full(self.n_pad, DEAD_SESSION_RATE)
         for idx, abr_bank in self._abr_groups:
             rate[idx] = abr_bank.update(conf[idx], b_hat[idx])
         for k, st in enumerate(self.states):
             st.client.rates.append(float(rate[k]))
         t0 = self._mark("client", t0)
         i = int(round(t * self.specs[0].cfg.fps))
-        frames = np.stack([st.scene.render(i) for st in self.states])
+        rendered = [st.scene.render(i) for st in self.states]
+        if self.pad:
+            rendered.extend([np.zeros_like(rendered[0])] * self.pad)
+        frames = np.stack(rendered)
         t0 = self._mark("render", t0)
         targets = (rate * (1.0 / self.specs[0].cfg.fps)).astype(np.float32)
+        d = self._disp
 
         if self._fused:
             # fused plan+encode: Eq. 3-4 surfaces are computed inside the
@@ -307,18 +421,31 @@ class Fleet:
             # come back only as a device array for the requantize path
             boxes, counts, engaged = self.zeco.plan_arrays(t, rate, conf)
             t0 = self._mark("plan", t0)
-            qp_shapes, _, enc = rate_control_batch_fused(
-                frames, boxes, counts.astype(np.int32), engaged, targets,
-                frame_hw=self.zeco.frame_hw, patch=self.zeco.patch,
-                mu=self.zeco.mu, q_min=self.zeco.q_min,
-                q_max=self.zeco.q_max, probe_stride=self._probe_stride)
+            if d is not None:
+                qp_shapes, _, enc = d.fused(
+                    d.put(frames), d.put(boxes),
+                    d.put(counts.astype(np.int32)), d.put(engaged),
+                    d.put(targets))
+            else:
+                qp_shapes, _, enc = rate_control_batch_fused(
+                    frames, boxes, counts.astype(np.int32), engaged,
+                    targets, frame_hw=self.zeco.frame_hw,
+                    patch=self.zeco.patch, mu=self.zeco.mu,
+                    q_min=self.zeco.q_min, q_max=self.zeco.q_max,
+                    probe_stride=self._probe_stride)
         else:
-            qp_shapes, _ = self.zeco.plan(t, rate, conf)
+            qp_shapes, _ = self.zeco.plan(
+                t, rate, conf,
+                dispatch=None if d is None else d.plan_dispatch())
             t0 = self._mark("plan", t0)
             # one dispatch: vmapped rate-controlled encode of the fleet
-            _, enc = codec.rate_control_batch(
-                frames, qp_shapes, targets,
-                probe_stride=self._probe_stride)
+            if d is not None:
+                _, enc = d.rate_control(d.put(frames), d.put(qp_shapes),
+                                        d.put(targets))
+            else:
+                _, enc = codec.rate_control_batch(
+                    frames, qp_shapes, targets,
+                    probe_stride=self._probe_stride)
         bits = np.asarray(enc.bits, np.float64)
         t0 = self._mark("encode", t0)
 
@@ -339,11 +466,17 @@ class Fleet:
         needs = finite & rep.dropped & (rep.bits_delivered < rep.bits_sent)
         if needs.any():
             delivered = np.maximum(rep.bits_delivered, 1e3).astype(np.float32)
-            rx = _LazyFrames(codec.decode_delivered_batch(
-                enc, qp_shapes, delivered, needs,
-                probe_stride=self._probe_stride))
+            if d is not None:
+                rx = _LazyFrames(d.decode_delivered(
+                    d.put(enc), d.put(qp_shapes), d.put(delivered),
+                    d.put(needs)))
+            else:
+                rx = _LazyFrames(codec.decode_delivered_batch(
+                    enc, qp_shapes, delivered, needs,
+                    probe_stride=self._probe_stride))
         else:
-            rx = _LazyFrames(codec.decode_batch(enc))
+            rx = _LazyFrames(codec.decode_batch(enc) if d is None
+                             else d.decode(d.put(enc)))
 
         for k, st in enumerate(self.states):
             # skip arrivals landing after the final tick: the serial path
@@ -367,8 +500,14 @@ class Fleet:
         cfg0 = self.specs[0].cfg
         n_frames = int(cfg0.duration * cfg0.fps)
         dt = 1.0 / cfg0.fps
-        for i in range(n_frames):
-            self.tick(i * dt)
+        # sharded fleets tick under the mesh context (use_mesh shim);
+        # the shard_map dispatches also carry the mesh explicitly, so an
+        # out-of-context tick() still shards correctly
+        ctx = (use_mesh(self.mesh) if self.mesh is not None
+               else contextlib.nullcontext())
+        with ctx:
+            for i in range(n_frames):
+                self.tick(i * dt)
         return [finalize(st, self.bank.reports_for(k))
                 for k, st in enumerate(self.states)]
 
@@ -376,5 +515,6 @@ class Fleet:
 def run_fleet(sessions: Sequence[FleetSession],
               **kwargs) -> List[SessionMetrics]:
     """Run N sessions to completion; returns per-session SessionMetrics
-    in input order.  kwargs forward to `Fleet` (fused_plan, profile)."""
+    in input order.  kwargs forward to `Fleet` (fused_plan, profile,
+    mesh)."""
     return Fleet(sessions, **kwargs).run()

@@ -883,7 +883,7 @@ def run_scenarios(specs: Union[ScenarioSpec, str,
                                Iterable[Union[ScenarioSpec, str]]],
                   *, calibrator=None, fused_plan: bool = False,
                   profile: bool = False, workload: str = "rtc",
-                  split: str = "test"
+                  split: str = "test", mesh=None
                   ) -> Union[RunResult, DeViBenchRunResult]:
     """Compile specs into cohorts, run each cohort as one `Fleet`, and
     return per-session metrics in input order.
@@ -893,10 +893,17 @@ def run_scenarios(specs: Union[ScenarioSpec, str,
     batched codec dispatches; the partitioning is an internal detail —
     a grid mixing frame sizes and frame rates is one call.
 
+    `mesh=...` (e.g. `repro.launch.mesh.make_fleet_mesh()`) runs every
+    cohort device-sharded over the mesh's `data` axis: each cohort's
+    session batch is padded to the axis size with masked dead sessions
+    and its tick dispatches shard_map over the devices.  Results are
+    bit-identical to the unsharded run, in the same input order
+    (tests/test_sharded_fleet.py).
+
     `workload="devibench"` routes the specs through `run_devibench`
     instead: offline degradation grids emitting a `DeViBenchRunResult`
     (`split` selects the benchmark split; `calibrator`/`fused_plan`/
-    `profile` are fleet-only knobs)."""
+    `profile`/`mesh` are fleet-only knobs)."""
     if workload == "devibench":
         return run_devibench(specs, split=split)
     if workload != "rtc":
@@ -919,7 +926,7 @@ def run_scenarios(specs: Union[ScenarioSpec, str,
     for cohort in cohorts:
         fleet = Fleet([build_session(specs[i], calibrator)
                        for i in cohort.indices],
-                      fused_plan=fused_plan, profile=profile)
+                      fused_plan=fused_plan, profile=profile, mesh=mesh)
         for i, m in zip(cohort.indices, fleet.run()):
             metrics[i] = m
         if profile:

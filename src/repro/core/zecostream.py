@@ -458,18 +458,34 @@ class ZeCoStreamBank:
         self.engaged_total += engaged
         return boxes, counts, engaged
 
-    def plan(self, t: float, rate_bps: np.ndarray, confidence: np.ndarray
-             ) -> Tuple[np.ndarray, np.ndarray]:
+    def surface_dispatch(self):
+        """The bank's default Eq. 3-4 kernel as a (boxes, counts,
+        engaged) -> surfaces callable — the signature `plan` accepts as
+        its `dispatch` override, so a sharded fleet can substitute a
+        shard_map-wrapped equivalent without touching the plan logic."""
+        return functools.partial(
+            surfaces_from_boxes, frame_hw=self.frame_hw, patch=self.patch,
+            mu=self.mu, q_min=self.q_min, q_max=self.q_max)
+
+    def plan(self, t: float, rate_bps: np.ndarray, confidence: np.ndarray,
+             dispatch=None) -> Tuple[np.ndarray, np.ndarray]:
         """One fleet-wide plan dispatch: (N, H//8, W//8) relative QP
-        surfaces + the (N,) engaged mask for this tick."""
+        surfaces + the (N,) engaged mask for this tick.  `dispatch`
+        replaces the surface kernel call (same signature as
+        `surface_dispatch()`); the trigger/selection logic and the
+        disengaged-tick skip are identical either way, so a custom
+        dispatch stays bit-compatible with the default.  A custom
+        dispatch's output is returned AS IS (the sharded fleet keeps the
+        surfaces device-resident for the encode dispatch instead of
+        paying a host round trip); the default path materializes to a
+        host array as before."""
         boxes, counts, engaged = self.plan_arrays(t, rate_bps, confidence)
         nby, nbx = self.frame_hw[0] // 8, self.frame_hw[1] // 8
         if not engaged.any():
             # common fully-disengaged tick: skip the device dispatch
             return (np.broadcast_to(zero_surface(nby, nbx),
                                     (self.n, nby, nbx)), engaged)
-        surf = surfaces_from_boxes(
-            boxes, counts, engaged, frame_hw=self.frame_hw,
-            patch=self.patch, mu=self.mu, q_min=self.q_min,
-            q_max=self.q_max)
-        return np.asarray(surf), engaged
+        if dispatch is not None:
+            return dispatch(boxes, counts, engaged), engaged
+        return np.asarray(self.surface_dispatch()(boxes, counts, engaged)
+                          ), engaged

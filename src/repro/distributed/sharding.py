@@ -170,6 +170,48 @@ def sharding_report(axes_tree: Any, shapes_tree: Any, mesh: Mesh,
 
 
 # --------------------------------------------------------------------------
+# Session-axis partitioning (the fleet engine's data parallelism)
+# --------------------------------------------------------------------------
+def shard_map_compat(f, mesh: Mesh, in_specs, out_specs):
+    """Version-compat shard_map: `jax.shard_map` (new) falling back to
+    `jax.experimental.shard_map.shard_map` (every JAX we support)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+
+def session_partition(mesh: Mesh, logical: str = "batch",
+                      rules: Optional[Dict] = None
+                      ) -> Tuple[MeshAxes, int]:
+    """Mesh axes + way-count for the fleet's session ("data") axis.
+
+    Picks the first rule candidate for `logical` whose mesh axes all
+    exist, IGNORING divisibility: unlike `resolve_axis`, a session count
+    that does not divide the axis size is not replicated — the fleet
+    engine pads it up to the next multiple with masked dead sessions
+    (`pad_sessions`) so the partition always applies.  Returns
+    (None, 1) when no multi-way candidate exists (single-device mesh),
+    which callers treat as "run unsharded"."""
+    sizes = _mesh_axis_sizes(mesh)
+    for candidate in (rules or current_rules()).get(logical, (None,)):
+        n = _axes_size(candidate, sizes)
+        if n is None or n == 1:
+            continue
+        return candidate, n
+    return None, 1
+
+
+def pad_sessions(n: int, ways: int) -> int:
+    """Smallest multiple of `ways` >= n: the padded session count whose
+    tail rows are masked dead sessions (results sliced off)."""
+    if n <= 0 or ways <= 0:
+        raise ValueError(f"need positive n/ways, got {n}/{ways}")
+    return -(-n // ways) * ways
+
+
+# --------------------------------------------------------------------------
 # In-model activation constraints
 # --------------------------------------------------------------------------
 def _active_mesh_sizes() -> Optional[Dict[str, int]]:

@@ -39,6 +39,22 @@ def make_production_mesh(*, multi_pod: bool = False):
         np.asarray(devices[:n]).reshape(shape), axes)
 
 
+def make_fleet_mesh(n_devices=None):
+    """1-D `data` mesh over host devices for sharded fleet execution.
+
+    The fleet engine shards every per-session array over this axis
+    (repro.core.fleet.Fleet(mesh=...)); n_devices defaults to all
+    visible devices.  On CPU, virtual devices come from
+    XLA_FLAGS=--xla_force_host_platform_device_count=N set before jax
+    is imported (the recipe tests/test_sharded_fleet.py uses)."""
+    devices = jax.devices()
+    n = len(devices) if n_devices is None else int(n_devices)
+    if len(devices) < n:
+        raise RuntimeError(f"fleet mesh needs {n} devices, have "
+                           f"{len(devices)}")
+    return jax.sharding.Mesh(np.asarray(devices[:n]), ("data",))
+
+
 def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
     """Tiny mesh for CPU tests (requires >=4 host devices)."""
     n = int(np.prod(shape))

@@ -19,6 +19,11 @@ from typing import Dict
 
 import numpy as np
 
+# every CC estimate is clamped to this band (bits/s); the property tests
+# in tests/test_net.py pin the banks to it under arbitrary ack streams
+RATE_MIN = 5e4
+RATE_MAX = 2e7
+
 
 class CongestionControl:
     name = "base"
@@ -70,7 +75,7 @@ class GCC(CongestionControl):
                    else 1.5 * measured + 1e5)
             self.rate = min(self.rate * self.eta, cap)
         # hold: keep rate
-        self.rate = float(np.clip(self.rate, 5e4, 2e7))
+        self.rate = float(np.clip(self.rate, RATE_MIN, RATE_MAX))
         return self.rate
 
 
@@ -98,7 +103,7 @@ class BBR(CongestionControl):
         # back off hard on standing queues (ProbeRTT-ish behaviour)
         if ack["avg_latency"] - ack["min_latency"] > 0.25:
             gain = min(gain, 0.75)
-        return float(np.clip(btlbw * gain, 5e4, 2e7))
+        return float(np.clip(btlbw * gain, RATE_MIN, RATE_MAX))
 
 
 def make_cc(kind: str, **kw) -> CongestionControl:
@@ -142,7 +147,7 @@ class GCCBank:
         inc_rate = np.minimum(self.rate * self.eta, inc_cap)
         rate = np.where(decrease, dec_rate,
                         np.where(hold, self.rate, inc_rate))
-        self.rate = np.clip(rate, 5e4, 2e7)
+        self.rate = np.clip(rate, RATE_MIN, RATE_MAX)
         return self.rate
 
 
@@ -169,7 +174,7 @@ class BBRBank:
         self._phase += 1
         gain = np.where(ack["avg_latency"] - ack["min_latency"] > 0.25,
                         min(gain, 0.75), gain)
-        return np.clip(btlbw * gain, 5e4, 2e7)
+        return np.clip(btlbw * gain, RATE_MIN, RATE_MAX)
 
 
 def make_cc_bank(kind: str, m: int):

@@ -11,7 +11,7 @@ manifests in the end-to-end loop.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, NamedTuple, Sequence
+from typing import Dict, List, NamedTuple, Optional, Sequence
 
 import numpy as np
 
@@ -148,11 +148,25 @@ class ChannelBank:
     NumPy vector — no per-session Python Channel objects on the hot path.
     The arithmetic mirrors `Channel` operation for operation, so a bank of
     N queues is numerically identical to N serial channels (asserted by
-    tests/test_fleet.py)."""
+    tests/test_fleet.py).
+
+    `pad_to` sizes the bank past the live trace count with *dead
+    sessions* (rows that repeat the first trace): the sharded fleet
+    engine pads its session axis to a multiple of the device count, and
+    keeping every per-session array — including the channel state — at
+    the padded length means live and dead rows flow through one set of
+    elementwise ops.  Dead rows never influence live rows (every
+    per-session quantity is an independent vector lane); callers simply
+    ignore rows >= `n_live`."""
 
     def __init__(self, traces: Sequence[Trace],
-                 queue_packets: int = QUEUE_PACKETS):
-        self.bank = TraceBank.stack(list(traces))
+                 queue_packets: int = QUEUE_PACKETS,
+                 pad_to: Optional[int] = None):
+        traces = list(traces)
+        self.n_live = len(traces)
+        if pad_to is not None and pad_to > len(traces):
+            traces = traces + [traces[0]] * (pad_to - len(traces))
+        self.bank = TraceBank.stack(traces)
         self.n = self.bank.n
         self.queue_packets = queue_packets
         self.now = 0.0

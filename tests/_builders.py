@@ -1,0 +1,177 @@
+"""Shared test builders: heterogeneous fleet members / scenario specs,
+metric-equality helpers, and the virtual-device subprocess environment.
+
+One definition instead of the per-file copies that used to live in
+test_fleet.py, test_scenario.py and test_zecostream_bank.py.  Kept as a
+plain module (not conftest fixtures) because the sharded-parity suite's
+subprocess child (tests/_sharded_fleet_child.py) imports it OUTSIDE
+pytest; tests/conftest.py re-exposes the builders as fixtures.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+
+import numpy as np
+
+from repro.core.fleet import FleetSession
+from repro.core.scenario import ScenarioSpec
+from repro.core.session import QASample, SessionConfig
+from repro.core.zecostream import TimedBoxes
+from repro.net.traces import (elevator_trace, fluctuating_trace,
+                              mobility_trace, static_trace)
+from repro.video.scenes import make_scene
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCENE_CYCLE = ("retail", "street", "office", "document")
+TRACE_CYCLE = ("static", "fluctuating", "mobility.driving", "elevator")
+SYSTEM_CYCLE = ("artic", "webrtc+zeco", "webrtc+recap", "webrtc")
+
+
+# --------------------------------------------------------------------------
+# Fleet-layer builder (FleetSession)
+# --------------------------------------------------------------------------
+def hetero_fleet_session(k: int, duration: float = 12.0,
+                         hw: int | None = None) -> FleetSession:
+    """Heterogeneous fleet member: scene category, motion, trace family,
+    CC algorithm and system variant all cycle with k (k % 4 < 2 rows run
+    ZeCoStream, so variants stay spread at any fleet size)."""
+    kw = {} if hw is None else dict(h=hw, w=hw)
+    sc = make_scene(SCENE_CYCLE[k % 4], k % 2 == 1, seed=k,
+                    code_period_frames=40, **kw)
+    tr = [static_trace(duration, mbps=0.5, seed=k),          # starved
+          fluctuating_trace(duration, switches_per_min=6, seed=k),
+          mobility_trace("driving", duration, seed=k),
+          elevator_trace(duration)][k % 4]
+    qa = [QASample(t_ask=4.0 + 3.0 * i, obj_idx=i % len(sc.objects),
+                   answer_window=2.5) for i in range(2)]
+    cfg = SessionConfig(duration=duration, cc_kind=["gcc", "bbr"][k % 2],
+                        use_recap=k % 2 == 0, use_zeco=k % 4 < 2, seed=k)
+    return FleetSession(sc, qa, tr, cfg)
+
+
+# --------------------------------------------------------------------------
+# Scenario-layer builders (ScenarioSpec)
+# --------------------------------------------------------------------------
+def base_scenario_spec(duration: float = 8.0) -> ScenarioSpec:
+    return ScenarioSpec(duration=duration, code_period_frames=40,
+                        qa="periodic",
+                        qa_kwargs=dict(start=3.0, period=2.5, count=2,
+                                       answer_window=2.0))
+
+
+def hetero_scenario_specs(duration: float = 8.0, n: int = 4,
+                          base: ScenarioSpec | None = None
+                          ) -> list[ScenarioSpec]:
+    """Heterogeneous but fleet-compatible specs: scene category, motion,
+    trace family, CC and system variant all cycle across members."""
+    base = base if base is not None else base_scenario_spec(duration)
+    out = []
+    for k in range(n):
+        out.append(base.with_(
+            scene=SCENE_CYCLE[k % 4],
+            moving=k % 2 == 1, scene_seed=k, trace_seed=k, seed=k,
+            trace=TRACE_CYCLE[k % 4],
+            trace_kwargs=dict(mbps=0.5) if k % 4 == 0 else {},
+            cc_kind=["gcc", "bbr"][k % 2],
+            system=SYSTEM_CYCLE[k % 4]))
+    return out
+
+
+def mixed_cohort_specs(duration: float = 3.0, sizes=(64, 128),
+                       counts=(3, 5), interleave: bool = True
+                       ) -> list[ScenarioSpec]:
+    """Specs spanning len(sizes) cohorts (one frame size each), tagged
+    `c<cohort>-<member>`.  `interleave=True` round-robins the cohorts in
+    the input order, so run_scenarios must re-stack per-cohort results
+    back into input positions."""
+    groups = []
+    for ci, (hw, cnt) in enumerate(zip(sizes, counts)):
+        group = hetero_scenario_specs(duration, n=cnt)
+        groups.append([s.with_(frame_h=hw, frame_w=hw, tag=f"c{ci}-{k}")
+                       for k, s in enumerate(group)])
+    if not interleave:
+        return [s for g in groups for s in g]
+    out = []
+    for i in range(max(len(g) for g in groups)):
+        out.extend(g[i] for g in groups if i < len(g))
+    return out
+
+
+# --------------------------------------------------------------------------
+# ZeCoStream feedback-packet builder
+# --------------------------------------------------------------------------
+def random_timed_boxes(rng: np.random.Generator, t: float,
+                       steps: int = 6, horizon: float = 1.5,
+                       max_boxes: int = 4) -> TimedBoxes:
+    """A random grounding-then-prediction packet (the shape the fleet's
+    TrajectoryPredictor emits), RNG-order-stable for seed pinning."""
+    times = t + np.linspace(0.0, horizon, steps)
+    rows = []
+    for _ in times:
+        nb = int(rng.integers(0, max_boxes))
+        row = []
+        for _ in range(nb):
+            y0, x0 = rng.uniform(0, 200, 2)
+            row.append((y0, x0, y0 + rng.uniform(10, 50),
+                        x0 + rng.uniform(10, 50)))
+        rows.append(row)
+    return TimedBoxes(times=times, boxes=rows)
+
+
+# --------------------------------------------------------------------------
+# Metric equality (the fleet parity contract) + digests
+# --------------------------------------------------------------------------
+def assert_metrics_equal(a, b) -> None:
+    """Bit-exact SessionMetrics equality — every list element equal, no
+    tolerance (the fleet/scenario/sharding parity contract)."""
+    assert a.accuracy == b.accuracy
+    assert a.n_qa == b.n_qa and a.qa_results == b.qa_results
+    assert a.latencies == b.latencies
+    assert a.avg_bitrate == b.avg_bitrate
+    assert a.bandwidth_used == b.bandwidth_used
+    assert a.rates == b.rates
+    assert a.confidences == b.confidences
+    assert a.zeco_engaged_frames == b.zeco_engaged_frames
+    assert a.dropped_frames == b.dropped_frames
+
+
+def metrics_digest(metrics) -> str:
+    """Order-sensitive content hash of a SessionMetrics list, floats as
+    exact hex — equal digests mean bit-identical runs across processes."""
+    def f(x):
+        return float(x).hex()
+
+    doc = [dict(latencies=[f(v) for v in m.latencies],
+                rates=[f(v) for v in m.rates],
+                confidences=[f(v) for v in m.confidences],
+                accuracy=f(m.accuracy), n_qa=int(m.n_qa),
+                qa_results=[bool(v) for v in m.qa_results],
+                avg_bitrate=f(m.avg_bitrate),
+                bandwidth_used=f(m.bandwidth_used),
+                zeco_engaged_frames=int(m.zeco_engaged_frames),
+                dropped_frames=int(m.dropped_frames))
+           for m in metrics]
+    return hashlib.sha256(
+        json.dumps(doc, sort_keys=True).encode()).hexdigest()
+
+
+# --------------------------------------------------------------------------
+# Virtual-device subprocess environment
+# --------------------------------------------------------------------------
+def virtual_devices(n: int) -> dict:
+    """Environment for a subprocess that sees `n` virtual host CPU
+    devices: appends --xla_force_host_platform_device_count to XLA_FLAGS
+    (must be set before jax imports, hence the subprocess) and puts the
+    repo's src/ plus tests/ on PYTHONPATH."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={n}"
+                        ).strip()
+    extra = os.pathsep.join([os.path.join(ROOT, "src"),
+                             os.path.join(ROOT, "tests")])
+    env["PYTHONPATH"] = (extra + os.pathsep + env.get("PYTHONPATH", "")
+                         ).rstrip(os.pathsep)
+    return env

@@ -1,0 +1,96 @@
+"""Subprocess body of tests/test_sharded_fleet.py.
+
+Runs with XLA_FLAGS=--xla_force_host_platform_device_count=<D> set by
+the parent BEFORE this interpreter starts (jax fixes the device count at
+import, which is why the parity suite needs a subprocess at all).  For
+each case it builds identical session sets twice, runs them sharded
+(mesh over all visible devices) and unsharded in the SAME process,
+asserts bit-exact SessionMetrics parity, and prints a JSON report —
+including content digests of the unsharded runs so the parent can check
+that the multi-device process didn't drift from a plain single-device
+process either.
+
+Usage:  python tests/_sharded_fleet_child.py <expected_device_count>
+"""
+from __future__ import annotations
+
+import json
+import sys
+import traceback
+
+import jax
+
+import _builders as B
+from repro.api import make_fleet_mesh, run_scenarios
+from repro.core.fleet import Fleet, run_fleet
+from repro.distributed.sharding import pad_sessions
+
+
+def _compare(base, shard) -> str | None:
+    """None if every session's metrics are bit-identical, else detail."""
+    if len(base) != len(shard):
+        return f"length mismatch {len(base)} != {len(shard)}"
+    for k, (a, b) in enumerate(zip(base, shard)):
+        try:
+            B.assert_metrics_equal(a, b)
+        except AssertionError:
+            return (f"session {k} mismatch:\n"
+                    + "".join(traceback.format_exc().splitlines(True)[-3:]))
+    return None
+
+
+def main() -> None:
+    expect = int(sys.argv[1])
+    n_dev = len(jax.devices())
+    assert n_dev == expect, (
+        f"child sees {n_dev} devices, expected {expect} — XLA_FLAGS not "
+        "applied before jax import?")
+    mesh = make_fleet_mesh()
+    cases = {}
+
+    def fleet_case(name, n, duration, fused=False):
+        def members():
+            return [B.hetero_fleet_session(k, duration, hw=64)
+                    for k in range(n)]
+        base = run_fleet(members(), fused_plan=fused)
+        fl = Fleet(members(), fused_plan=fused, mesh=mesh)
+        # parity of an unsharded-vs-unsharded run would be vacuous:
+        # prove the mesh actually engaged and the padding is as expected
+        assert fl.mesh is not None, f"{name}: mesh did not engage"
+        assert fl.n_pad == pad_sessions(n, expect), (name, fl.n_pad)
+        shard = fl.run()
+        detail = _compare(base, shard)
+        cases[name] = {"equal": detail is None, "detail": detail,
+                       "n": n, "pad": fl.pad,
+                       "digest": B.metrics_digest(base)}
+
+    # system variants spread across members (artic / webrtc+zeco /
+    # webrtc+recap / webrtc, gcc and bbr), N == device count
+    fleet_case("variants_n8", n=8, duration=6.0)
+    # N=12 does not divide 8 devices: pads to 16 with 4 dead sessions
+    fleet_case("padded_n12", n=12, duration=4.0)
+    # many sessions per device
+    fleet_case("n64", n=64, duration=2.5)
+    # fused plan+encode dispatch (surfaces computed in-graph)
+    fleet_case("fused_n8", n=8, duration=4.0, fused=True)
+
+    # mixed cohort grid through run_scenarios(mesh=...): two frame
+    # sizes interleaved in input order, cohort sizes 3 and 5 (both pad
+    # on 8 devices), results re-stacked into input positions
+    specs = B.mixed_cohort_specs(duration=3.0, sizes=(64, 128),
+                                 counts=(3, 5), interleave=True)
+    base = run_scenarios(specs)
+    shard = run_scenarios(specs, mesh=mesh)
+    detail = _compare(base.metrics, shard.metrics)
+    if detail is None and [s.tag for s in shard.specs] != \
+            [s.tag for s in specs]:
+        detail = "spec order not preserved"
+    cases["mixed_grid"] = {"equal": detail is None, "detail": detail,
+                           "n": len(specs),
+                           "digest": B.metrics_digest(base.metrics)}
+
+    print("RESULT " + json.dumps({"devices": n_dev, "cases": cases}))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Shared fixtures for the suite: the heterogeneous session/fleet/
+scenario builders (one definition in tests/_builders.py instead of the
+copies that used to live in test_fleet.py / test_scenario.py /
+test_zecostream_bank.py) plus the `virtual_devices(n)` subprocess-env
+helper for multi-device tests, and the `slow` marker registration."""
+import pytest
+
+import _builders
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running test (CI's quick lane runs -m 'not slow'; "
+        "the full tier-1 run includes them)")
+
+
+@pytest.fixture(scope="session")
+def fleet_member():
+    """(k, duration=12.0, hw=None) -> heterogeneous FleetSession."""
+    return _builders.hetero_fleet_session
+
+
+@pytest.fixture(scope="session")
+def scenario_specs():
+    """(duration=8.0, n=4, base=None) -> heterogeneous ScenarioSpecs."""
+    return _builders.hetero_scenario_specs
+
+
+@pytest.fixture(scope="session")
+def base_spec():
+    """(duration=8.0) -> the periodic-QA base ScenarioSpec."""
+    return _builders.base_scenario_spec
+
+
+@pytest.fixture(scope="session")
+def mixed_specs():
+    """(duration, sizes, counts, interleave) -> multi-cohort specs."""
+    return _builders.mixed_cohort_specs
+
+
+@pytest.fixture(scope="session")
+def virtual_devices():
+    """(n) -> subprocess env with n virtual host CPU devices."""
+    return _builders.virtual_devices
+
+
+@pytest.fixture(scope="session")
+def metrics_equal():
+    """Bit-exact SessionMetrics equality assertion."""
+    return _builders.assert_metrics_equal

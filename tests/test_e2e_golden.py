@@ -1,0 +1,122 @@
+"""Golden end-to-end snapshot: seed-pinned `artic` vs `webrtc` preset
+metrics through the full fleet pipeline (render -> plan -> encode ->
+channel -> decode -> ingest -> QA), stored as a schema-valid RunResult
+export in tests/golden/e2e_presets.json.
+
+Catches cross-PR numeric drift anywhere in the pipeline: the stored
+specs re-run from the JSON itself and their aggregates must reproduce
+the snapshot (counts exactly, float aggregates to tight tolerance —
+allowing only for cross-platform float variation in the XLA-compiled
+codec).  The export must also validate against the RunResult schema,
+and corrupted copies must be rejected.
+
+Regenerate (only when a PR *intends* to change the numbers):
+
+    PYTHONPATH=src:tests python tests/test_e2e_golden.py --regen
+"""
+import json
+import os
+
+import pytest
+
+from repro.api import (ScenarioSpec, run_scenarios,
+                       validate_run_result_json)
+
+GOLDEN = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                      "golden", "e2e_presets.json")
+
+# metrics compared exactly (counts / booleans)
+EXACT = ("n_qa", "dropped_frames", "zeco_engaged_frames")
+# float aggregates compared to tolerance
+CLOSE = ("accuracy", "avg_latency_ms", "p95_latency_ms", "avg_bitrate",
+         "bandwidth_used")
+
+
+def _golden_specs():
+    """The seed-pinned workload: artic vs webrtc on one low, fluctuating
+    uplink (the Fig. 13 operating point where ReCapABR slashes latency
+    at equal accuracy and ZeCoStream engages), 128 px frames, periodic
+    QA."""
+    base = ScenarioSpec(
+        duration=12.0, frame_h=128, frame_w=128, scene="retail",
+        code_period_frames=40, trace="fluctuating", trace_seed=3, seed=3,
+        scene_seed=3,
+        trace_kwargs=dict(switches_per_min=8,
+                          levels_kbps=[1130, 710, 400, 290]),
+        qa="periodic",
+        qa_kwargs=dict(start=3.0, period=2.0, count=4, answer_window=1.8))
+    return [base.with_(system="artic", tag="artic"),
+            base.with_(system="webrtc", tag="webrtc")]
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+def test_golden_file_is_schema_valid(golden):
+    validate_run_result_json(golden)
+
+
+def test_golden_schema_rejects_corruption(golden):
+    bad = json.loads(json.dumps(golden))
+    bad["scenarios"][0]["metrics"].pop("accuracy")
+    with pytest.raises(ValueError):
+        validate_run_result_json(bad)
+    bad2 = json.loads(json.dumps(golden))
+    bad2["schema"] = "artic.scenario.run_result/v0"
+    with pytest.raises(ValueError):
+        validate_run_result_json(bad2)
+
+
+def test_pipeline_reproduces_golden_metrics(golden):
+    """Re-run the STORED specs (round-tripped through the JSON) and pin
+    every preset's aggregates to the snapshot."""
+    specs = [ScenarioSpec.from_dict(rec["spec"])
+             for rec in golden["scenarios"]]
+    assert [s.tag for s in specs] == ["artic", "webrtc"]
+    assert specs == _golden_specs(), \
+        "golden specs drifted from _golden_specs(); regenerate the file"
+    result = run_scenarios(specs)
+    for rec, m in zip(golden["scenarios"], result.metrics):
+        want = rec["metrics"]
+        for f in EXACT:
+            assert getattr(m, f) == want[f], (rec["spec"]["tag"], f)
+        for f in CLOSE:
+            assert getattr(m, f) == pytest.approx(want[f], rel=1e-4), \
+                (rec["spec"]["tag"], f)
+        assert [bool(b) for b in m.qa_results] == want["qa_results"]
+
+
+def test_golden_separates_the_systems(golden):
+    """The snapshot itself captures the paper's headline ordering on a
+    starved link: artic sustains at least webrtc's accuracy at lower
+    p95 latency, with ZeCoStream actually engaging."""
+    by_tag = {rec["spec"]["tag"]: rec["metrics"]
+              for rec in golden["scenarios"]}
+    assert by_tag["artic"]["accuracy"] >= by_tag["webrtc"]["accuracy"]
+    assert by_tag["artic"]["p95_latency_ms"] < \
+        by_tag["webrtc"]["p95_latency_ms"]
+    assert by_tag["artic"]["zeco_engaged_frames"] > 0
+    assert by_tag["webrtc"]["zeco_engaged_frames"] == 0
+
+
+def _regen() -> None:
+    doc = run_scenarios(_golden_specs()).to_json(GOLDEN)
+    validate_run_result_json(doc)
+    print(f"wrote {GOLDEN}")
+    for rec in doc["scenarios"]:
+        print(rec["spec"]["tag"], {k: round(v, 3) if isinstance(v, float)
+                                   else v
+                                   for k, v in rec["metrics"].items()
+                                   if k != "qa_results"})
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--regen" in sys.argv:
+        _regen()
+    else:
+        print(__doc__)

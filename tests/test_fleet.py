@@ -5,31 +5,16 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.fleet import Fleet, FleetSession, run_fleet
+from _builders import assert_metrics_equal, hetero_fleet_session as _spec
+from repro.core.fleet import Fleet, run_fleet
 from repro.core.grounding import detect_cards, detect_cards_batch
-from repro.core.session import QASample, SessionConfig, run_session
+from repro.core.session import run_session
 from repro.kernels.qp_codec.ops import qp_codec_frame, qp_codec_frames
 from repro.net.channel import Channel, ChannelBank
 from repro.net.traces import (elevator_trace, fluctuating_trace,
-                              mobility_trace, static_trace)
+                              static_trace)
 from repro.video import codec
 from repro.video.scenes import make_scene
-
-
-def _spec(k: int, duration: float = 12.0) -> FleetSession:
-    """Heterogeneous fleet member: scene category, motion, trace family,
-    CC algorithm and system variant all differ across k."""
-    sc = make_scene(["retail", "street", "office", "document"][k % 4],
-                    k % 2 == 1, seed=k, code_period_frames=40)
-    tr = [static_trace(duration, mbps=0.5, seed=k),          # starved
-          fluctuating_trace(duration, switches_per_min=6, seed=k),
-          mobility_trace("driving", duration, seed=k),
-          elevator_trace(duration)][k % 4]
-    qa = [QASample(t_ask=4.0 + 3.0 * i, obj_idx=i % len(sc.objects),
-                   answer_window=2.5) for i in range(2)]
-    cfg = SessionConfig(duration=duration, cc_kind=["gcc", "bbr"][k % 2],
-                        use_recap=k % 2 == 0, use_zeco=k < 2, seed=k)
-    return FleetSession(sc, qa, tr, cfg)
 
 
 # --------------------------------------------------------------------------
@@ -41,15 +26,7 @@ def test_fleet_n4_parity_with_serial():
               for s in specs]
     batched = run_fleet([_spec(k) for k in range(4)])
     for a, b in zip(serial, batched):
-        assert a.accuracy == b.accuracy
-        assert a.n_qa == b.n_qa and a.qa_results == b.qa_results
-        assert a.latencies == b.latencies
-        assert a.avg_bitrate == b.avg_bitrate
-        assert a.bandwidth_used == b.bandwidth_used
-        assert a.rates == b.rates
-        assert a.confidences == b.confidences
-        assert a.zeco_engaged_frames == b.zeco_engaged_frames
-        assert a.dropped_frames == b.dropped_frames
+        assert_metrics_equal(a, b)
 
 
 def test_fleet_fused_plan_matches_default():

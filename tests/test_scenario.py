@@ -7,48 +7,16 @@ import json
 import numpy as np
 import pytest
 
+from _builders import (assert_metrics_equal as _assert_metrics_equal,
+                       base_scenario_spec as _base,
+                       hetero_scenario_specs as _hetero_specs,
+                       mixed_cohort_specs)
 from repro.api import (PRESETS, RunResult, ScenarioSpec, build_fleet,
                        build_session, cohort_key, compile_cohorts, grid,
                        preset, register_preset, run_scenarios,
                        validate_run_result_json)
 from repro.core.fleet import Fleet
 from repro.core.session import run_session
-
-
-def _base(duration: float = 8.0) -> ScenarioSpec:
-    return ScenarioSpec(duration=duration, code_period_frames=40,
-                        qa="periodic",
-                        qa_kwargs=dict(start=3.0, period=2.5, count=2,
-                                       answer_window=2.0))
-
-
-def _hetero_specs(duration: float = 8.0):
-    """Heterogeneous but fleet-compatible: scene category, motion, trace
-    family, CC and system variant all differ across members."""
-    out = []
-    for k in range(4):
-        out.append(_base(duration).with_(
-            scene=["retail", "street", "office", "document"][k % 4],
-            moving=k % 2 == 1, scene_seed=k, trace_seed=k, seed=k,
-            trace=["static", "fluctuating", "mobility.driving",
-                   "elevator"][k % 4],
-            trace_kwargs=dict(mbps=0.5) if k % 4 == 0 else {},
-            cc_kind=["gcc", "bbr"][k % 2],
-            system=["artic", "webrtc+zeco", "webrtc+recap",
-                    "webrtc"][k]))
-    return out
-
-
-def _assert_metrics_equal(a, b):
-    assert a.accuracy == b.accuracy
-    assert a.n_qa == b.n_qa and a.qa_results == b.qa_results
-    assert a.latencies == b.latencies
-    assert a.avg_bitrate == b.avg_bitrate
-    assert a.bandwidth_used == b.bandwidth_used
-    assert a.rates == b.rates
-    assert a.confidences == b.confidences
-    assert a.zeco_engaged_frames == b.zeco_engaged_frames
-    assert a.dropped_frames == b.dropped_frames
 
 
 # --------------------------------------------------------------------------
@@ -180,6 +148,39 @@ def test_single_spec_matches_serial_run_session():
 def test_preset_name_accepted_directly():
     r = run_scenarios(["webrtc"], fused_plan=False)
     assert len(r) == 1 and r.specs[0].system == "webrtc"
+
+
+def test_run_result_rows_map_back_to_specs_after_repartitioning():
+    """Regression for cohort ordering: with cohorts INTERLEAVED in the
+    input (A B A B ...), run_scenarios partitions them apart, runs each
+    as one fleet, and must re-stack results into input positions.  Every
+    row is pinned to its originating spec by the tag/permutation
+    round-trip: the same multiset of specs run in cohort-grouped order
+    yields identical metrics per TAG, and the JSON export maps each row
+    back to its spec and cohort."""
+    inter = mixed_cohort_specs(duration=3.0, sizes=(64, 128),
+                               counts=(3, 2), interleave=True)
+    grouped = mixed_cohort_specs(duration=3.0, sizes=(64, 128),
+                                 counts=(3, 2), interleave=False)
+    assert inter != grouped  # genuinely permuted input
+    assert sorted(s.tag for s in inter) == sorted(s.tag for s in grouped)
+    r_inter = run_scenarios(inter)
+    r_grouped = run_scenarios(grouped)
+    # rows come back in input order, attached to their input spec
+    assert r_inter.specs == inter and r_grouped.specs == grouped
+    by_tag = {s.tag: m for s, m in zip(r_grouped.specs, r_grouped.metrics)}
+    for s, m in zip(r_inter.specs, r_inter.metrics):
+        _assert_metrics_equal(m, by_tag[s.tag])
+    # the export's cohort table round-trips the mapping
+    doc = r_inter.to_json()
+    validate_run_result_json(doc)
+    for i, rec in enumerate(doc["scenarios"]):
+        assert ScenarioSpec.from_dict(rec["spec"]) == inter[i]
+        assert i in doc["cohorts"][rec["cohort"]]["sessions"]
+    # cohorts really did split the interleaved input apart
+    assert len(doc["cohorts"]) == 2
+    assert doc["cohorts"][0]["sessions"] == [0, 2, 4]
+    assert doc["cohorts"][1]["sessions"] == [1, 3]
 
 
 # --------------------------------------------------------------------------

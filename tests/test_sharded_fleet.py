@@ -1,0 +1,110 @@
+"""Device-sharded fleet parity suite — the sharding acceptance contract.
+
+A fleet sharded over 8 virtual CPU devices must be BIT-identical to the
+single-device fleet, across system variants, padded (non-divisible) N,
+the fused plan+encode path, and mixed cohort grids through
+run_scenarios(mesh=...).  The heavy lifting happens in one subprocess
+(tests/_sharded_fleet_child.py) because jax fixes the host device count
+at import; the child asserts the sharded-vs-unsharded parity in-process
+and reports digests, and this module additionally checks that the
+child's *unsharded* run matches a run in THIS process — so the forced
+multi-device environment itself provably doesn't shift numerics.
+
+Quick (non-subprocess) tests cover the partition rules and the
+degenerate single-device mesh; the subprocess cases are marked `slow`
+(CI's quick lane runs -m "not slow"; the dedicated sharded-parity job
+and the full tier-1 run include them).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+import _builders as B
+from repro.core.fleet import Fleet, run_fleet
+from repro.distributed.sharding import pad_sessions, session_partition
+from repro.launch.mesh import make_fleet_mesh
+
+DEVICES = 8
+CASES = ("variants_n8", "padded_n12", "n64", "fused_n8", "mixed_grid")
+
+
+# --------------------------------------------------------------------------
+# Partition rules (pure, no devices needed)
+# --------------------------------------------------------------------------
+def test_pad_sessions_rounds_up_to_axis_multiple():
+    assert pad_sessions(8, 8) == 8
+    assert pad_sessions(12, 8) == 16
+    assert pad_sessions(1, 8) == 8
+    assert pad_sessions(64, 1) == 64
+    with pytest.raises(ValueError):
+        pad_sessions(0, 8)
+
+
+def test_session_partition_prefers_data_axis():
+    mesh = jax.sharding.Mesh(
+        np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    # a 1-way data axis is no partition at all
+    assert session_partition(mesh) == (None, 1)
+
+
+def test_single_device_mesh_degenerates_to_unsharded(fleet_member,
+                                                     metrics_equal):
+    """make_fleet_mesh over one device: Fleet accepts it, runs the plain
+    unsharded path (no padding), and matches the mesh-less fleet."""
+    mesh = make_fleet_mesh(1)
+    fl = Fleet([fleet_member(k, 2.0, hw=64) for k in range(2)], mesh=mesh)
+    assert fl.mesh is None and fl.pad == 0 and fl.n_pad == fl.n
+    base = run_fleet([fleet_member(k, 2.0, hw=64) for k in range(2)])
+    for a, b in zip(base, fl.run()):
+        metrics_equal(a, b)
+
+
+# --------------------------------------------------------------------------
+# The 8-virtual-device subprocess suite
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def child_result(virtual_devices):
+    child = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         "_sharded_fleet_child.py")
+    r = subprocess.run([sys.executable, child, str(DEVICES)],
+                       capture_output=True, text=True, timeout=1500,
+                       env=virtual_devices(DEVICES), cwd=B.ROOT)
+    assert r.returncode == 0, (r.stderr[-4000:] or r.stdout[-4000:])
+    lines = [ln for ln in r.stdout.splitlines() if ln.startswith("RESULT ")]
+    assert lines, f"no RESULT line in child stdout:\n{r.stdout[-2000:]}"
+    return json.loads(lines[-1][len("RESULT "):])
+
+
+@pytest.mark.slow
+def test_child_saw_forced_device_count(child_result):
+    assert child_result["devices"] == DEVICES
+    assert set(child_result["cases"]) == set(CASES)
+    # the child proves the mesh engaged; pin the padding it reported
+    assert child_result["cases"]["variants_n8"]["pad"] == 0
+    assert child_result["cases"]["padded_n12"]["pad"] == 4
+    assert child_result["cases"]["n64"]["pad"] == 0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("case", CASES)
+def test_sharded_bit_identical_to_single_device(child_result, case):
+    info = child_result["cases"][case]
+    assert info["equal"], f"{case}: {info['detail']}"
+
+
+@pytest.mark.slow
+def test_multi_device_process_matches_this_process(child_result):
+    """The unsharded run inside the 8-device process is bit-identical to
+    the same run in THIS process — forcing virtual devices does not
+    shift numerics, so the in-child parity assertions carry over to this
+    environment.  Must mirror the child's padded_n12 case exactly
+    (n=12, duration=4.0, hw=64)."""
+    local = run_fleet([B.hetero_fleet_session(k, 4.0, hw=64)
+                       for k in range(12)])
+    assert B.metrics_digest(local) == \
+        child_result["cases"]["padded_n12"]["digest"]

@@ -6,6 +6,7 @@ objects on identical feedback streams."""
 import numpy as np
 import pytest
 
+from _builders import random_timed_boxes
 from repro.core.grounding import TrajectoryPredictor
 from repro.core.zecostream import (TimedBoxes, ZeCoStream, ZeCoStreamBank,
                                    boxes_to_array, importance_map, qp_map,
@@ -207,17 +208,7 @@ def test_bank_matches_legacy_objects_exact_n4():
         t = 0.1 * step
         if step % 3 == 0:  # a fresh feedback packet every 3 ticks
             for k in range(n):
-                times = t + np.linspace(0.0, 1.5, 6)
-                rows = []
-                for _ in times:
-                    nb = int(rng.integers(0, 4))
-                    row = []
-                    for _ in range(nb):
-                        y0, x0 = rng.uniform(0, 200, 2)
-                        row.append((y0, x0, y0 + rng.uniform(10, 50),
-                                    x0 + rng.uniform(10, 50)))
-                    rows.append(row)
-                fb = TimedBoxes(times=times, boxes=rows)
+                fb = random_timed_boxes(rng, t)
                 legacy[k].on_feedback(fb)
                 bank.on_feedback(k, fb)
         # rates sweep across trigger/release so hysteresis paths all fire
