@@ -142,6 +142,114 @@ def run(quick: bool = True):
 
 
 # --------------------------------------------------------------------------
+# Whole-tick rollout sweep (lax.scan windows) + committed snapshot
+# --------------------------------------------------------------------------
+ROLLOUT_NS = (8, 64, 256)
+
+
+def _eager_once(duration: float, n: int) -> float:
+    fl = build_fleet([_spec(k, duration) for k in range(n)],
+                     fused_plan=True)
+    t0 = time.perf_counter()
+    fl.run()
+    return time.perf_counter() - t0
+
+
+def _rollout_once(duration: float, n: int, window: int) -> float:
+    fl = build_fleet([_spec(k, duration) for k in range(n)],
+                     fused_plan=True)
+    t0 = time.perf_counter()
+    fl.run(rollout=window)
+    return time.perf_counter() - t0
+
+
+def _rollout_roofline(duration: float, n: int, window: int,
+                      wall_per_window: float):
+    """Compile (without running) one window step and derive the roofline
+    attribution for it; `wall_per_window` is the measured seconds per
+    dispatched window (host replay included — the gap the report
+    attributes covers the whole driver, not just the XLA executable)."""
+    from repro.core.rollout import FleetRollout
+    from repro.roofline.analysis import fleet_step_report
+
+    fl = build_fleet([_spec(k, duration) for k in range(n)],
+                     fused_plan=True)
+    ro = FleetRollout(fl, window)
+    lowered, compiled = ro.aot()
+    return fleet_step_report(lowered, compiled, n_sessions=n,
+                             window=ro.window,
+                             wall_time_s=wall_per_window)
+
+
+def run_rollout(quick: bool = True, write: bool = True):
+    """Eager vs rollout sessions/sec at N in ROLLOUT_NS, interleaved and
+    median-of-ratios aggregated, each cell rooflined; returns (and by
+    default writes) the BENCH_fleet.json snapshot document."""
+    from benchmarks.snapshot import (BENCH_SCHEMA, PINNED_EAGER_BASELINE,
+                                     SNAPSHOT_PATH, env_knobs,
+                                     machine_info, save_snapshot)
+
+    duration = 5.0 if quick else 15.0
+    window = 3
+    cells = []
+    print(f"[fleet --rollout] eager vs rollout={window} "
+          f"(duration={duration:.0f}s, fused plan, medians of "
+          f"interleaved pairs)")
+    for n in ROLLOUT_NS:
+        reps = 2 if (quick and n >= 256) else 3
+        _eager_once(duration, n)        # warm both compile shapes
+        _rollout_once(duration, n, window)
+        t_e, t_r, ratios = [], [], []
+        for _ in range(reps):
+            te = _eager_once(duration, n)
+            tr = _rollout_once(duration, n, window)
+            t_e.append(te)
+            t_r.append(tr)
+            ratios.append(te / tr)
+        te = float(np.median(t_e))
+        tr = float(np.median(t_r))
+        ratio = float(np.median(ratios))
+        n_frames = int(duration * _spec(0, duration).fps)
+        n_windows = -(-n_frames // window)
+        roof = _rollout_roofline(duration, n, window, tr / n_windows)
+        cells.append({
+            "n": n, "window": window, "duration_s": duration,
+            "eager_sessions_per_sec": n / te,
+            "rollout_sessions_per_sec": n / tr,
+            "median_ratio": ratio,
+            "roofline": roof,
+        })
+        print(f"[fleet --rollout] N={n}: eager {n / te:.2f} -> rollout "
+              f"{n / tr:.2f} sessions/s ({ratio:.2f}x), roofline LB "
+              f"{roof['per_session_tick_lb_us']:.1f} us/session-tick vs "
+              f"{roof['per_session_tick_wall_us']:.1f} measured "
+              f"({roof['bottleneck']}-bound, attainment "
+              f"{roof['roofline_attainment']:.1%})")
+    doc = {
+        "schema": BENCH_SCHEMA,
+        "machine": machine_info(),
+        "env": env_knobs(),
+        "baseline": {"name": "pr5-eager-fleet-thumb",
+                     "sessions_per_sec": PINNED_EAGER_BASELINE},
+        "cells": cells,
+        "summary": {
+            "window": window,
+            "vs_pinned_eager": {
+                str(c["n"]): (c["rollout_sessions_per_sec"]
+                              / PINNED_EAGER_BASELINE[str(c["n"])])
+                for c in cells if str(c["n"]) in PINNED_EAGER_BASELINE},
+            "notes": "ratios are same-process medians of interleaved "
+                     "eager/rollout pairs; absolutes move with the "
+                     "runner, ratios gate CI (benchmarks.snapshot)",
+        },
+    }
+    if write:
+        save_snapshot(doc)
+        print(f"[fleet --rollout] snapshot -> {SNAPSHOT_PATH}")
+    return doc
+
+
+# --------------------------------------------------------------------------
 # Device-count sweep (sharded fleet)
 # --------------------------------------------------------------------------
 def _sweep_cell(n: int, devices: int, duration: float) -> float:
@@ -228,11 +336,17 @@ def _main() -> None:
     ap.add_argument("--devices", action="store_true",
                     help="run the sharded device-count sweep "
                          "(subprocesses with forced host device counts)")
+    ap.add_argument("--rollout", action="store_true",
+                    help="run the eager-vs-rollout sweep with roofline "
+                         "attribution and write BENCH_fleet.json")
     ap.add_argument("--_child", nargs=3, metavar=("N", "D", "DURATION"),
                     help=argparse.SUPPRESS)
     args = ap.parse_args()
     if args._child:
         _child_main(args._child)
+        return
+    if args.rollout:
+        run_rollout(QUICK)
         return
     rows = run_devices(QUICK) if args.devices else run(QUICK)
     print("\nname,us_per_call,derived")

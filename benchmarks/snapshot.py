@@ -1,0 +1,155 @@
+"""Committed benchmark snapshots: schema, validation, regression gate.
+
+`bench_fleet --rollout` writes BENCH_fleet.json at the repo root — a
+schema-versioned (`artic.bench.snapshot/v1`) record of the eager vs
+rollout throughput sweep plus the roofline attribution, with enough
+machine/env context to judge whether two snapshots are comparable at
+all.  CI re-runs the sweep and fails the build if the fresh numbers
+regress more than REGRESSION_TOL against the committed snapshot
+(`python -m benchmarks.snapshot --check`), so perf changes land as a
+reviewed diff of this file, never silently.
+
+Ratios, not absolutes, are what the gate compares: sessions/sec moves
+with the runner's hardware, but rollout-vs-eager measured in the SAME
+process is stable across machines.
+"""
+from __future__ import annotations
+
+import json
+import os
+import platform
+import sys
+from typing import Dict, List, Optional
+
+BENCH_SCHEMA = "artic.bench.snapshot/v1"
+SNAPSHOT_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_fleet.json")
+REGRESSION_TOL = 0.10
+
+# sessions/sec of the eager (per-tick) fleet on the SAME workload the
+# rollout sweep runs (the fleet-thumb preset: 64x64 frames, probe
+# stride 2), measured on the reference runner at the PR-6 branch point.
+# The rollout PR does not touch the eager tick path, so these equal the
+# PR-5 tip on this workload.  They are the denominator of
+# `summary.vs_pinned_eager`; comparing against a baseline from a
+# different workload (e.g. the 256x256 hetero grid) would silently
+# inflate the headline number several-fold.
+PINNED_EAGER_BASELINE = {"8": 55.29, "64": 82.27, "256": 93.33}
+
+_ENV_KNOBS = ("XLA_FLAGS", "JAX_PLATFORMS", "BENCH_QUICK",
+              "OMP_NUM_THREADS", "JAX_ENABLE_X64")
+
+
+def machine_info() -> Dict:
+    import jax
+    return {
+        "platform": platform.platform(),
+        "processor": platform.processor() or platform.machine(),
+        "cpu_count": os.cpu_count(),
+        "python": sys.version.split()[0],
+        "jax": jax.__version__,
+        "devices": len(jax.devices()),
+        "backend": jax.default_backend(),
+    }
+
+
+def env_knobs() -> Dict[str, Optional[str]]:
+    return {k: os.environ.get(k) for k in _ENV_KNOBS}
+
+
+def validate_snapshot(doc: Dict) -> None:
+    """Structural validation of a BENCH_fleet.json document; raises
+    ValueError with the offending path on the first mismatch."""
+    def need(cond, path):
+        if not cond:
+            raise ValueError(f"invalid bench snapshot: {path}")
+
+    need(isinstance(doc, dict), "document must be an object")
+    need(doc.get("schema") == BENCH_SCHEMA,
+         f"schema must be {BENCH_SCHEMA!r} (got {doc.get('schema')!r})")
+    need(isinstance(doc.get("machine"), dict), "machine")
+    for k in ("platform", "python", "jax", "devices"):
+        need(k in doc["machine"], f"machine.{k}")
+    need(isinstance(doc.get("env"), dict), "env")
+    need(isinstance(doc.get("baseline"), dict), "baseline")
+    need(isinstance(doc["baseline"].get("sessions_per_sec"), dict),
+         "baseline.sessions_per_sec")
+    cells = doc.get("cells")
+    need(isinstance(cells, list) and cells, "cells must be non-empty")
+    for i, c in enumerate(cells):
+        need(isinstance(c, dict), f"cells[{i}]")
+        for k in ("n", "window", "eager_sessions_per_sec",
+                  "rollout_sessions_per_sec", "median_ratio"):
+            need(k in c, f"cells[{i}].{k}")
+        need(int(c["n"]) > 0, f"cells[{i}].n > 0")
+        need(float(c["rollout_sessions_per_sec"]) > 0,
+             f"cells[{i}].rollout_sessions_per_sec > 0")
+        need(float(c["median_ratio"]) > 0, f"cells[{i}].median_ratio > 0")
+        if "roofline" in c:
+            for k in ("flops", "bytes_accessed", "step_time_lb_s",
+                      "bottleneck"):
+                need(k in c["roofline"], f"cells[{i}].roofline.{k}")
+    need(isinstance(doc.get("summary"), dict), "summary")
+
+
+def load_snapshot(path: str = SNAPSHOT_PATH) -> Dict:
+    with open(path) as f:
+        doc = json.load(f)
+    validate_snapshot(doc)
+    return doc
+
+
+def save_snapshot(doc: Dict, path: str = SNAPSHOT_PATH) -> None:
+    validate_snapshot(doc)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def check_regression(committed: Dict, fresh: Dict,
+                     tol: float = REGRESSION_TOL) -> List[str]:
+    """Compare the fresh sweep's rollout-vs-eager ratios against the
+    committed snapshot cell by cell.  Returns a list of human-readable
+    failures (empty == gate passes).  Machine-dependent absolutes are
+    reported but never gated on."""
+    failures = []
+    old = {int(c["n"]): c for c in committed["cells"]}
+    for c in fresh["cells"]:
+        n = int(c["n"])
+        if n not in old:
+            continue
+        was, now = float(old[n]["median_ratio"]), float(c["median_ratio"])
+        if now < was * (1.0 - tol):
+            failures.append(
+                f"N={n}: rollout/eager ratio regressed "
+                f"{was:.2f} -> {now:.2f} (>{tol:.0%} drop)")
+    return failures
+
+
+def _main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", action="store_true",
+                    help="re-run the rollout sweep (quick) and fail if "
+                         "it regresses vs the committed BENCH_fleet.json")
+    ap.add_argument("--validate", action="store_true",
+                    help="only validate the committed snapshot's schema")
+    args = ap.parse_args()
+    committed = load_snapshot()
+    print(f"[snapshot] {SNAPSHOT_PATH}: schema {committed['schema']} OK, "
+          f"{len(committed['cells'])} cells")
+    if args.validate or not args.check:
+        return
+    from benchmarks.bench_fleet import run_rollout
+    fresh = run_rollout(write=False)
+    failures = check_regression(committed, fresh)
+    for f in failures:
+        print(f"[snapshot] REGRESSION {f}")
+    if failures:
+        sys.exit(1)
+    print(f"[snapshot] gate OK (tolerance {REGRESSION_TOL:.0%})")
+
+
+if __name__ == "__main__":
+    _main()

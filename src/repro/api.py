@@ -89,6 +89,34 @@ def smoke(out_path: str = "/tmp/artic_scenario_smoke.json",
     return result
 
 
+def rollout_smoke(window: int = 3) -> None:
+    """Whole-tick rollout smoke: a tiny fleet run twice — eager per-tick
+    loop vs `Fleet.run(rollout=K)` compiled scan windows — must produce
+    identical metrics.  Interpret-mode friendly (pure jnp + lax.scan, no
+    Pallas), so the CI job runs it on the CPU backend directly."""
+    base = ScenarioSpec(duration=2.0, frame_h=64, frame_w=64,
+                        scene="retail", qa="periodic",
+                        qa_kwargs=dict(start=0.5, period=0.6, count=2,
+                                       answer_window=0.5))
+    specs = grid(base, system=["webrtc", "artic"],
+                 trace=["fluctuating", "elevator"])
+    eager = build_fleet(specs, fused_plan=True).run()
+    got = build_fleet(specs, fused_plan=True).run(rollout=window)
+    for k, (a, b) in enumerate(zip(eager, got)):
+        same = (a.latencies == b.latencies and a.rates == b.rates
+                and a.confidences == b.confidences
+                and a.accuracy == b.accuracy
+                and a.avg_bitrate == b.avg_bitrate
+                and a.bandwidth_used == b.bandwidth_used
+                and a.dropped_frames == b.dropped_frames
+                and a.zeco_engaged_frames == b.zeco_engaged_frames)
+        if not same:
+            raise AssertionError(
+                f"rollout metrics diverge from eager for session {k}")
+    print(f"[rollout-smoke] {len(specs)} sessions, rollout={window}: "
+          "metrics identical to the eager tick loop")
+
+
 def devibench_smoke(out_path: str = "/tmp/artic_devibench_smoke.json"
                     ) -> DeViBenchRunResult:
     """Tiny DeViBench grid end to end: one quick benchmark build, a
@@ -140,8 +168,13 @@ def _main() -> None:
     ap.add_argument("--sharded", action="store_true",
                     help="run the fleet smoke device-sharded over all "
                          "visible devices (make_fleet_mesh)")
+    ap.add_argument("--rollout", action="store_true",
+                    help="run the whole-tick rollout parity smoke "
+                         "(Fleet.run(rollout=K) vs the eager tick loop)")
     args = ap.parse_args()
-    if args.devibench:
+    if args.rollout:
+        rollout_smoke()
+    elif args.devibench:
         devibench_smoke(args.out)
     else:
         smoke(args.out, sharded=args.sharded)

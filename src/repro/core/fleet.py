@@ -66,6 +66,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.confidence import PlattCalibrator
 from repro.core.grounding import detect_cards_batch
+from repro.core.ingest import glyph_stats_batch
 from repro.core.recap_abr import CCOnlyABRBank, ReCapABRBank
 from repro.core.session import (QASample, SessionConfig, SessionMetrics,
                                 SessionState, client_record_send,
@@ -81,8 +82,7 @@ from repro.net.cc import make_cc_bank
 from repro.net.channel import ChannelBank
 from repro.net.traces import Trace
 from repro.video import codec
-from repro.video.scenes import (_PAYLOAD_IDX, _PAYLOAD_WEIGHTS, GLYPH_GRID,
-                                Scene)
+from repro.video.scenes import Scene
 
 # bandwidth assigned to masked dead sessions (the rows padding the fleet
 # up to the device count): any positive constant works — their results
@@ -155,25 +155,13 @@ def _ingest_batched(states: List[SessionState],
             patches.append(frame[y0:y0 + obj.size, x0:x0 + obj.size])
             owners.append((i, oi))
 
-    # one vectorized decode_glyph per geometry group
+    # one jitted glyph-stats dispatch per geometry group — the same
+    # batched jnp kernel the serial OracleServer.ingest runs at B=1
+    # (per-record results are batch-size-invariant, so serial, fleet
+    # and rollout ingestion read identical codes/margins)
     results = {}  # (item, obj_idx) -> (code, margin)
     for (size, cell), (patches, owners) in groups.items():
-        p = np.stack(patches)[:, :GLYPH_GRID * cell, :GLYPH_GRID * cell]
-        cells = p.reshape(len(patches), GLYPH_GRID, cell, GLYPH_GRID,
-                          cell).mean(axis=(2, 4))
-        lo = cells.min(axis=(1, 2))
-        hi = cells.max(axis=(1, 2))
-        thresh = 0.5 * (lo + hi)
-        denom = np.maximum(hi - lo, 1e-6)
-        margin = np.clip(
-            np.abs(cells - thresh[:, None, None])
-            / (0.5 * denom)[:, None, None], 0, 1).mean(axis=(1, 2))
-        # matches serial float64 promotion: float(mean) * float(contrast)
-        margin = (margin.astype(np.float64)
-                  * np.clip((hi - lo) / 0.5, 0, 1).astype(np.float64))
-        hard = cells.reshape(len(patches), -1)[:, _PAYLOAD_IDX] > \
-            thresh[:, None]
-        codes = (hard * _PAYLOAD_WEIGHTS).sum(axis=1)
+        codes, margin = glyph_stats_batch(np.stack(patches), cell)
         for g, owner in enumerate(owners):
             results[owner] = (int(codes[g]), float(margin[g]))
 
@@ -373,11 +361,25 @@ class Fleet:
             self._abr_groups.append((follow, CCOnlyABRBank(len(follow))))
 
     # ------------------------------------------------------------------
-    def _mark(self, phase: str, t0: float) -> float:
-        now = time.perf_counter()
+    def _mark(self, phase: str, t0: float, *sync) -> float:
+        """Charge `now - t0` to `phase` (when profiling) and return now.
+
+        JAX dispatches are asynchronous: without a sync, a phase's mark
+        lands before its device work finishes and the time gets charged
+        to whichever LATER phase first forces materialization (decode
+        used to be billed to `server`, where ingestion reads the lazy
+        batch).  Under `profile=True` every pytree in `sync` is
+        block_until_ready'd before the timestamp, so phases are charged
+        their own device time and the per-phase times sum to the total
+        tick wall time (tests/test_fleet.py).  The non-profiling path
+        never blocks — the async pipeline is the perf feature."""
         if self.phase_times is not None:
+            for obj in sync:
+                jax.block_until_ready(obj)
+            now = time.perf_counter()
             self.phase_times[phase] += now - t0
-        return now
+            return now
+        return time.perf_counter()
 
     def tick(self, t: float) -> None:
         """Advance every session by one frame interval.
@@ -420,7 +422,7 @@ class Fleet:
             # rate-control dispatch straight from the box arrays; they
             # come back only as a device array for the requantize path
             boxes, counts, engaged = self.zeco.plan_arrays(t, rate, conf)
-            t0 = self._mark("plan", t0)
+            t0 = self._mark("plan", t0, boxes, counts, engaged)
             if d is not None:
                 qp_shapes, _, enc = d.fused(
                     d.put(frames), d.put(boxes),
@@ -437,7 +439,7 @@ class Fleet:
             qp_shapes, _ = self.zeco.plan(
                 t, rate, conf,
                 dispatch=None if d is None else d.plan_dispatch())
-            t0 = self._mark("plan", t0)
+            t0 = self._mark("plan", t0, qp_shapes)
             # one dispatch: vmapped rate-controlled encode of the fleet
             if d is not None:
                 _, enc = d.rate_control(d.put(frames), d.put(qp_shapes),
@@ -447,7 +449,7 @@ class Fleet:
                     frames, qp_shapes, targets,
                     probe_stride=self._probe_stride)
         bits = np.asarray(enc.bits, np.float64)
-        t0 = self._mark("encode", t0)
+        t0 = self._mark("encode", t0, enc)
 
         # vectorized channel: N queues advance together
         rep = self.bank.send_frames(t, bits)
@@ -484,7 +486,7 @@ class Fleet:
             # would pin the tick's whole decoded batch until teardown
             if finite[k] and t + float(rep.latency[k]) <= self._t_last:
                 push_arrival(st, t, float(rep.latency[k]), rx.getter(k))
-        t0 = self._mark("decode", t0)
+        t0 = self._mark("decode", t0, rx.dev)
 
         # server phase: ingestion batched across all sessions, then the
         # per-session feedback/QA emission
@@ -496,7 +498,14 @@ class Fleet:
             server_emit(st, t)
         self._mark("server", t0)
 
-    def run(self) -> List[SessionMetrics]:
+    def run(self, rollout: Optional[int] = None) -> List[SessionMetrics]:
+        """Run every session to completion.
+
+        `rollout=K` compiles K-tick windows of the whole tick loop into
+        one `lax.scan` dispatch each (repro.core.rollout) instead of the
+        eager per-tick loop; metrics are bit-identical either way
+        (tests/test_rollout.py).  K is clamped to the largest window the
+        feedback-turnaround invariants allow (`rollout.max_window`)."""
         cfg0 = self.specs[0].cfg
         n_frames = int(cfg0.duration * cfg0.fps)
         dt = 1.0 / cfg0.fps
@@ -506,10 +515,25 @@ class Fleet:
         ctx = (use_mesh(self.mesh) if self.mesh is not None
                else contextlib.nullcontext())
         with ctx:
-            for i in range(n_frames):
-                self.tick(i * dt)
+            if rollout is not None:
+                self._run_rollout(int(rollout), n_frames)
+            else:
+                for i in range(n_frames):
+                    self.tick(i * dt)
         return [finalize(st, self.bank.reports_for(k))
                 for k, st in enumerate(self.states)]
+
+    def _run_rollout(self, window: int, n_frames: int) -> None:
+        # imported lazily: rollout imports this module at load time
+        from repro.core.rollout import FleetRollout
+
+        ro = FleetRollout(self, window)
+        i0 = 0
+        while i0 < n_frames:
+            w = min(ro.window, n_frames - i0)
+            ro.run_window(i0, w)
+            i0 += w
+        ro.finish()
 
 
 def run_fleet(sessions: Sequence[FleetSession],

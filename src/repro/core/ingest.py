@@ -1,0 +1,84 @@
+"""Batched glyph-ingestion kernel: the server-side decode-glyph/margin
+math as jitted jnp ops.
+
+`OracleServer.ingest` (serial) and the fleet's `_ingest_batched` used to
+carry two NumPy copies of the threshold-cell-means arithmetic; both now
+funnel their patches through `glyph_stats_batch`, one jitted kernel per
+glyph geometry (static `cell`).  The on-device rollout
+(repro.core.rollout) ingests through the same fleet path, so the ported
+kernel is what every execution mode's server sees.
+
+Determinism contract (the fleet/rollout parity requirement): every
+reduction is either exactly order-independent (min / max / the 12-term
+integer code sum) or written as a fixed sequence of elementwise adds
+(the cell means and the 16-cell margin mean), so per-record results are
+bit-identical at any batch size and under any XLA fusion — B=1 serial
+calls equal rows of a B=G fleet batch.  Scalar arithmetic stays float32
+exactly as in `scenes.decode_glyph`, with the final margin product
+promoted to float64 (the serial path's python-float multiply).
+`scenes.decode_glyph` itself is untouched — the DeViBench degradation
+grid keeps its pure-NumPy reference path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from repro.video.scenes import _PAYLOAD_IDX, _PAYLOAD_WEIGHTS, GLYPH_GRID
+
+
+@functools.partial(jax.jit, static_argnames=("cell",))
+def _glyph_stats(patches: jnp.ndarray, cell: int
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(B, S, S) float32 patches of one glyph geometry (S = 4*cell) ->
+    (codes (B,) int64, margins (B,) float64)."""
+    g = GLYPH_GRID
+    p = patches[:, :g * cell, :g * cell].reshape(-1, g, cell, g, cell)
+    # cell means: fixed-order elementwise adds over the cell x cell
+    # sub-pixels (unrolled — cell <= 12), then one float32 divide
+    acc = jnp.zeros((p.shape[0], g, g), jnp.float32)
+    for j in range(cell * cell):
+        acc = acc + p[:, :, j // cell, :, j % cell]
+    cells = acc / jnp.float32(cell * cell)
+    lo = jnp.min(cells, axis=(1, 2))
+    hi = jnp.max(cells, axis=(1, 2))
+    thresh = 0.5 * (lo + hi)
+    denom = jnp.maximum(hi - lo, 1e-6)
+    mc = jnp.clip(jnp.abs(cells - thresh[:, None, None])
+                  / (0.5 * denom)[:, None, None], 0.0, 1.0)
+    flat = mc.reshape(-1, g * g)
+    macc = jnp.zeros_like(lo)
+    for j in range(g * g):
+        macc = macc + flat[:, j]
+    margin = macc / jnp.float32(g * g)
+    contrast = jnp.clip((hi - lo) / 0.5, 0.0, 1.0)
+    margin64 = margin.astype(jnp.float64) * contrast.astype(jnp.float64)
+    hard = cells.reshape(-1, g * g)[:, _PAYLOAD_IDX] > thresh[:, None]
+    codes = jnp.sum(hard * jnp.asarray(_PAYLOAD_WEIGHTS), axis=1)
+    return codes, margin64
+
+
+def glyph_stats_batch(patches: np.ndarray, cell: int
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """Host entry: stack of same-geometry patches -> (codes int64,
+    margins float64) NumPy arrays.  Traced under enable_x64 so the
+    margin promotion and the weight sum really run in 64-bit (the
+    context only matters at trace time; later calls reuse the
+    executable).  The batch is padded to the next power of two so the
+    per-(cell, bucket) executable count stays logarithmic in the tick's
+    ingestion load — per-record results are batch-size-invariant, so
+    the zero pad rows are simply discarded."""
+    patches = np.asarray(patches, np.float32)
+    b = patches.shape[0]
+    bp = 1 << max(b - 1, 0).bit_length()
+    if bp != b:
+        patches = np.concatenate(
+            [patches, np.zeros((bp - b,) + patches.shape[1:], np.float32)])
+    with enable_x64():
+        codes, margins = _glyph_stats(jnp.asarray(patches), int(cell))
+    return np.asarray(codes)[:b], np.asarray(margins)[:b]

@@ -1,0 +1,760 @@
+"""Whole-tick on-device fleet rollout: `lax.scan` over jitted ticks.
+
+The eager fleet engine (repro.core.fleet) pays one Python tick per frame
+interval: host-side CC/ABR/trigger NumPy, two device dispatches, then
+host channel math.  This module compiles a K-tick window of the WHOLE
+per-tick loop into one jitted `lax.scan`: every per-session state the
+eager tick mutates on the host — ChannelBank backlogs and the ack
+history ring, GCC/BBR congestion-control lanes, the ReCap-ABR rate
+recursion, ZeCoStream trigger/hysteresis/feedback context — lives as a
+pytree of (N,)-leading device arrays in the scan carry, and the fused
+plan+encode (`zecostream.rate_control_batch_fused`) plus the delivered-
+bits decode run in-graph, so a K-tick window is ONE dispatch instead of
+~2K dispatches + K rounds of host arithmetic.
+
+Bit-exact parity with the eager tick loop is the design constraint, not
+an afterthought; every reduction the window performs is either exactly
+order-independent or routed through the same shared deterministic
+kernels the eager path uses (`channel.masked_mean_latency`,
+`ingest.glyph_stats_batch`).  Everything float-ordering-sensitive that
+remains on the host (server ingestion, feedback emission, QA, the event
+heaps) is *replayed* after each window from the scan outputs, in the
+exact per-tick order the eager loop runs it.
+
+Feedback turnaround and the depth-1 carry slot
+----------------------------------------------
+Server->client feedback closes the loop: an emission at tick t is
+delivered at t + inference_delay + downlink_delay and changes the
+client's confidence (hence ABR and the ZeCo trigger) from the delivery
+tick on.  The window length is clamped to
+
+    W_max = max(1, min(floor(turnaround / dt), floor(period / dt)))
+
+(`max_window`), which buys two invariants, both load-bearing:
+
+* an emission during a window can never be due within that same window
+  (turnaround > (W-1) * dt), so emissions can stay host-side in the
+  replay; and
+* at most ONE pending feedback packet per session becomes due inside
+  any window (consecutive emissions are >= feedback_period apart and a
+  window spans W * dt <= period), so the in-carry delivery buffer needs
+  depth 1.
+
+That depth-1 slot (`slot_*` carry leaves) is the fixed-latency delivery
+ring: before each window the host pops the (at most one) due entry per
+session off the downlink heap into the slot; in-graph, the tick whose
+timestamp passes `slot_t` applies the confidence and rewrites the
+session's ZeCo feedback-context rows, exactly like
+`session.deliver_feedback` + `ZeCoStreamBank.on_feedback`.
+
+Sharding
+--------
+With a fleet mesh the window function runs under
+`jit(shard_map(...))` with every (N,)-leading carry/xs/ys leaf split on
+the session axis (same `session_partition` axes and dead-session
+padding discipline as PR 5's eager sharded dispatches); trace arrays
+are replicated, and the per-row program contains no cross-session
+communication, so shard boundaries cannot perturb values.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental import enable_x64
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.fleet import DEAD_SESSION_RATE, Fleet, _ingest_batched
+from repro.core.recap_abr import ReCapABRBank
+from repro.core.session import (client_record_send, pop_due_arrivals,
+                                push_arrival, server_emit)
+from repro.core.zecostream import rate_control_batch_fused
+from repro.distributed.sharding import shard_map_compat
+from repro.net.cc import BBRBank, GCCBank, RATE_MAX, RATE_MIN
+from repro.net.channel import ACK_WINDOW, MTU_BITS, masked_mean_latency
+from repro.video import codec
+
+
+# Compiled window functions shared across FleetRollout instances, keyed
+# on every static the trace bakes in (see _jit_key).  Without this each
+# rollout run would re-jit — and thus recompile — the whole scanned
+# window from scratch, which costs seconds and would make the rollout
+# LOSE to the eager loop (whose per-phase jits are module-level and
+# shared across Fleet instances).  The cached callable closes over the
+# first instance with that signature; that is sound because everything
+# the trace reads from `self` is part of the key — array-shaped inputs
+# (carry/xs/consts) retrace within the wrapper as usual.
+_WINDOW_FN_CACHE: Dict[tuple, object] = {}
+
+
+def _no_fma(x):
+    """Exact identity that pins `x` to its IEEE-rounded value.
+
+    XLA CPU's backend may contract a multiply feeding an add/subtract
+    into a single fused multiply-add, which rounds once where the eager
+    host path (NumPy) rounds twice — a 1-ulp parity break (observed in
+    the channel departure search: `rem - bw*(se - tt)` compiled to an
+    FMA inside the scan body but not in the standalone executable).
+    Routing the product through sign-bit ops — abs + copysign lower to
+    integer bitmask ops — breaks the mul->add chain the contraction
+    looks for; `lax.optimization_barrier` does NOT prevent it, and a
+    plain bitcast round-trip is folded away by the HLO simplifier.
+    Exact for every float including -0.0 (copysign restores the sign
+    bit abs cleared).
+    """
+    return jnp.copysign(jnp.abs(x), x)
+
+
+def max_window(specs, fps: float) -> int:
+    """Largest window honouring the depth-1 feedback-slot invariants
+    (see the module docstring) across every member's delay/period."""
+    dt = 1.0 / fps
+    w = 10 ** 9
+    for s in specs:
+        turnaround = s.cfg.inference_delay + s.cfg.downlink_delay
+        w = min(w, int(turnaround / dt + 1e-9),
+                int(s.cfg.feedback_period / dt + 1e-9))
+    return max(1, w)
+
+
+class FleetRollout:
+    """Compiled K-tick windows over a `Fleet`'s session state.
+
+    Drives a *fresh* fleet (no ticks run yet — the carry is initialized
+    from the banks' start-of-run state, and BBR's ring/gain counters are
+    derived from the tick index).  `Fleet.run(rollout=K)` is the public
+    entry; this class owns the carry pytree, the jitted window function
+    (optionally shard_mapped over the fleet's mesh) and the host-side
+    replay that keeps servers/heaps/metrics identical to eager ticks.
+    """
+
+    def __init__(self, fleet: Fleet, window: Optional[int] = None):
+        f = fleet
+        self.fleet = f
+        cfg0 = f.specs[0].cfg
+        self.fps = cfg0.fps
+        self.dt = 1.0 / cfg0.fps
+        self._inv_fps = 1.0 / cfg0.fps
+        w_max = max_window(f.specs, cfg0.fps)
+        self.window = w_max if window is None else max(1, min(int(window),
+                                                              w_max))
+        n = f.n_pad
+        self.n = n
+        if f.bank._send_times or f.bank.now != 0.0:
+            raise ValueError("rollout must start from a fresh fleet "
+                             "(no eager ticks before Fleet.run(rollout=K))")
+        for s in f.specs:
+            if s.cfg.use_recap and s.cfg.gamma != 2.0:
+                raise NotImplementedError(
+                    "rollout supports the paper's gamma=2 ReCap weight "
+                    f"only (got gamma={s.cfg.gamma}); run eager ticks")
+
+        # -- statics closed over by the step function -------------------
+        self._dt_tr = float(f.bank.bank.dt)
+        self._queue_packets = int(f.bank.queue_packets)
+        # eager _drain covers at most ceil(dt_tick/dt_trace) trace steps
+        # (+1 for a float-boundary guard step); unrolled with masking
+        self._drain_steps = int(np.ceil(self.dt / self._dt_tr)) + 2
+        self._tts_iters = int(300.0 / self._dt_tr)
+        z = f.zeco
+        self._frame_hw = z.frame_hw
+        self._patch, self._mu = z.patch, z.mu
+        self._q_min, self._q_max = z.q_min, z.q_max
+        self._probe = f._probe_stride
+
+        gcc = next((b for _, b in f._cc_groups if isinstance(b, GCCBank)),
+                   None)
+        bbr = next((b for _, b in f._cc_groups if isinstance(b, BBRBank)),
+                   None)
+        self._gcc_beta = gcc.beta if gcc else 0.85
+        self._gcc_eta = gcc.eta if gcc else 1.05
+        self._gcc_thresh = gcc.overuse_thresh if gcc else 0.010
+        self._gcc_neghalf = -self._gcc_thresh / 2
+        self._bbr_window = bbr.window if bbr else 10
+        self._bbr_gain = np.asarray(BBRBank.GAIN_CYCLE, np.float64)
+        if bbr is not None and (bbr._count != 1 or bbr._phase != 0):
+            raise ValueError("rollout requires fresh BBR lanes")
+        recap = next((b for _, b in f._abr_groups
+                      if isinstance(b, ReCapABRBank)), None)
+        self._abr_min = recap.min_rate if recap else 150e3
+
+        self._kcap = z.fb_times.shape[1]
+        self._bcap = z.fb_boxes.shape[2]
+        self._consts_np = self._build_consts()
+        self.carry = self._init_carry()
+        self._windows_run = 0
+        self._build_call()
+
+    # ------------------------------------------------------------------
+    def _build_consts(self) -> Dict[str, np.ndarray]:
+        f, n = self.fleet, self.n
+        live = np.zeros(n, bool)
+        live[:f.n] = True
+        is_gcc = np.zeros(n, bool)
+        use_recap = np.zeros(n, bool)
+        abr_tau = np.ones(n, np.float64)
+        for k, s in enumerate(f.specs):
+            is_gcc[k] = s.cfg.cc_kind == "gcc"
+            use_recap[k] = s.cfg.use_recap
+            if s.cfg.use_recap:
+                abr_tau[k] = s.cfg.tau
+        z = f.zeco
+        return {
+            "tr_concat": np.asarray(f.bank.bank.concat, np.float64),
+            "tr_off": np.asarray(f.bank.bank.offsets, np.int64),
+            "tr_len": np.asarray(f.bank.bank.lengths, np.int64),
+            # trace dt as a RUNTIME operand, not a compile-time literal:
+            # XLA strength-reduces `x / const` into `x * (1/const)`,
+            # whose rounding differs from the host's true division right
+            # at trace-step boundaries (observed: 2.15/0.05 -> 42.99..
+            # on host, 43.0 via reciprocal -> different trace index).
+            # A runtime denominator keeps the real divide instruction.
+            "tr_dt": np.float64(f.bank.bank.dt),
+            "mtu": np.float64(MTU_BITS),
+            "live": live, "is_gcc": is_gcc, "use_recap": use_recap,
+            "abr_tau": abr_tau,
+            "z_enabled": z.enabled.copy(),
+            "z_trigger": z.trigger_bps.copy(),
+            "z_release": z.release_bps.copy(),
+            "z_tau": z.tau.copy(),
+        }
+
+    def _init_carry(self) -> Dict[str, np.ndarray]:
+        f, n = self.fleet, self.n
+        gcc_rate = np.full(n, 1e6)
+        gcc_prev = np.full(n, np.nan)
+        gcc_cap = np.full(n, 1e6)
+        bbr_samples = np.full((n, self._bbr_window), -np.inf)
+        bbr_samples[:, 0] = 1e6
+        for idx, bank in f._cc_groups:
+            if isinstance(bank, GCCBank):
+                gcc_rate[idx] = bank.rate
+                gcc_prev[idx] = bank._prev_delay
+                gcc_cap[idx] = bank._capacity
+            else:
+                bbr_samples[idx] = bank._samples.T
+        abr_rate = np.full(n, 1e6)
+        for idx, bank in f._abr_groups:
+            if isinstance(bank, ReCapABRBank):
+                abr_rate[idx] = bank.rate
+        conf = np.full(n, 0.5)
+        conf[:f.n] = [st.client.confidence for st in f.states]
+        z = f.zeco
+        return {
+            "ch_qb": f.bank._queue_bits.copy(),
+            "ch_qpk": f.bank._queue_pkts.copy(),
+            "ack_lat": np.full((n, ACK_WINDOW), np.inf),
+            "ack_deliv": np.zeros((n, ACK_WINDOW), np.int64),
+            "ack_drop": np.zeros((n, ACK_WINDOW), bool),
+            "ack_qd": np.zeros((n, ACK_WINDOW), np.float64),
+            "gcc_rate": gcc_rate, "gcc_prev": gcc_prev, "gcc_cap": gcc_cap,
+            "bbr_samples": bbr_samples,
+            "abr_rate": abr_rate,
+            "conf": conf,
+            "z_active": z.active.copy(),
+            "z_hasfb": z.has_fb.copy(),
+            "z_total": z.engaged_total.copy(),
+            "z_times": z.fb_times.copy(),
+            "z_boxes": z.fb_boxes.copy(),
+            "z_counts": z.fb_counts.copy(),
+            "z_len": z.fb_len.copy(),
+            **self._empty_slots(),
+        }
+
+    def _empty_slots(self) -> Dict[str, np.ndarray]:
+        n = self.n
+        return {
+            "slot_t": np.full(n, np.inf),
+            "slot_conf": np.zeros(n, np.float64),
+            "slot_has": np.zeros(n, bool),
+            "slot_len": np.zeros(n, np.int32),
+            "slot_times": np.full((n, self._kcap), np.inf),
+            "slot_boxes": np.zeros((n, self._kcap, self._bcap, 4),
+                                   np.float32),
+            "slot_counts": np.zeros((n, self._kcap), np.int32),
+        }
+
+    # ------------------------------------------------------------------
+    # In-graph tick
+    # ------------------------------------------------------------------
+    def _trace_at(self, tt, consts):
+        # Trace.at: int(t / dt) truncation (t >= 0), modulo trace length
+        # (runtime-operand denominator — see `tr_dt` in _build_consts)
+        k = (tt / consts["tr_dt"]).astype(jnp.int64)
+        return consts["tr_concat"][consts["tr_off"] + k % consts["tr_len"]]
+
+    def _ack_stats(self, carry, i):
+        """`ChannelBank.ack_stats_arrays` over the carry's ack ring:
+        window = the last min(i, 20) sends, gathered oldest-first so the
+        chronological order (hence the shared latency-mean kernel's add
+        sequence) matches the eager history stack bit for bit."""
+        w = ACK_WINDOW
+        m = jnp.minimum(i, w)
+        j = jnp.arange(w)
+        e = i - m + j                       # global send index per slot
+        valid = j < m
+        slot = jnp.where(valid, e % w, 0)
+        lat = jnp.where(valid[None, :], carry["ack_lat"][:, slot], jnp.inf)
+        deliv = jnp.where(valid[None, :], carry["ack_deliv"][:, slot], 0)
+        drop = jnp.where(valid[None, :], carry["ack_drop"][:, slot], False)
+        qd = carry["ack_qd"][:, slot]
+        mf = m.astype(jnp.float64)
+        span = jnp.maximum(
+            _no_fma((i - 1).astype(jnp.float64) * self.dt)
+            - _no_fma((i - m).astype(jnp.float64) * self.dt), 1e-6)
+        bits = jnp.sum(jnp.where(j < m - 1, deliv, 0), axis=1)
+        finite = jnp.isfinite(lat)
+        cnt = jnp.sum(finite, axis=1)
+        avg = masked_mean_latency(lat, finite)
+        min_lat = jnp.where(
+            cnt > 0, jnp.min(jnp.where(finite, lat, jnp.inf), axis=1), 0.0)
+        loss = jnp.sum(jnp.where(valid[None, :], drop, False),
+                       axis=1).astype(jnp.float64) / mf
+        app = jnp.sum(jnp.where(valid[None, :], qd < 0.02, False),
+                      axis=1).astype(jnp.float64) / mf
+        ok = m >= 2
+        return {
+            "delivery_rate": jnp.where(ok, bits.astype(jnp.float64) / span,
+                                       0.0),
+            "avg_latency": jnp.where(ok, avg, 0.05),
+            "min_latency": jnp.where(ok, min_lat, 0.05),
+            "loss": jnp.where(ok, loss, 0.0),
+            "app_limited": jnp.where(ok, app, 1.0),
+        }
+
+    def _cc(self, carry, ack, i, consts):
+        """GCCBank + BBRBank, both advanced elementwise for every row
+        (each row reads only its own algorithm's lanes via `is_gcc`)."""
+        delay = ack["avg_latency"] - ack["min_latency"]
+        grad = jnp.where(jnp.isnan(carry["gcc_prev"]), 0.0,
+                         delay - carry["gcc_prev"])
+        decrease = ((grad > self._gcc_thresh) | (ack["loss"] > 0.1)
+                    | (delay > 0.3))
+        hold = ~decrease & (grad < self._gcc_neghalf)
+        measured = jnp.maximum(ack["delivery_rate"], 1e4)
+        app = ack["app_limited"] > 0.5
+        cap = jnp.where(app, carry["gcc_cap"],
+                        _no_fma(0.7 * carry["gcc_cap"])
+                        + _no_fma(0.3 * measured))
+        dec_rate = jnp.where(app,
+                             jnp.minimum(carry["gcc_rate"], 1.2 * cap),
+                             self._gcc_beta * measured)
+        inc_cap = jnp.where(app, _no_fma(2.0 * cap) + 1e5,
+                            _no_fma(1.5 * measured) + 1e5)
+        inc_rate = jnp.minimum(carry["gcc_rate"] * self._gcc_eta, inc_cap)
+        gcc_rate = jnp.clip(
+            jnp.where(decrease, dec_rate,
+                      jnp.where(hold, carry["gcc_rate"], inc_rate)),
+            RATE_MIN, RATE_MAX)
+
+        samples = carry["bbr_samples"]
+        btlbw_prev = jnp.max(samples, axis=1)
+        bmeas = jnp.maximum(ack["delivery_rate"], 1e4)
+        bmeas = jnp.where(app, jnp.maximum(bmeas, btlbw_prev), bmeas)
+        # the eager bank starts _count=1/_phase=0 and bumps both once per
+        # tick, so at tick i the ring write lands at (1+i) % window and
+        # the pacing gain is GAIN_CYCLE[i % len]
+        samples = samples.at[:, (1 + i) % self._bbr_window].set(bmeas)
+        btlbw = jnp.max(samples, axis=1)
+        gain = jnp.asarray(self._bbr_gain)[i % len(self._bbr_gain)]
+        gain = jnp.where(delay > 0.25, jnp.minimum(gain, 0.75), gain)
+        bbr_rate = jnp.clip(btlbw * gain, RATE_MIN, RATE_MAX)
+
+        b_hat = jnp.where(consts["is_gcc"], gcc_rate, bbr_rate)
+        b_hat = jnp.where(consts["live"], b_hat, DEAD_SESSION_RATE)
+        upd = {"gcc_rate": gcc_rate, "gcc_prev": delay, "gcc_cap": cap,
+               "bbr_samples": samples}
+        return b_hat, upd
+
+    def _channel(self, carry, t, i, bits64, consts):
+        """`ChannelBank._drain` + `send_frames` + `_time_to_send` as
+        traced ops: bounded-unroll drain (masked), exact admission
+        arithmetic, and a `while_loop` departure search."""
+        dtr = consts["tr_dt"]
+        qb = carry["ch_qb"]
+        tt = jnp.maximum(i - 1, 0).astype(jnp.float64) * self.dt
+        for _ in range(self._drain_steps):
+            active = tt < t
+            se = (jnp.floor(tt / dtr + 1e-9) + 1.0) * dtr
+            se = jnp.where(se <= tt + 1e-12, tt + dtr, se)
+            se = jnp.minimum(t, se)
+            budget = _no_fma(self._trace_at(tt, consts) * (se - tt))
+            qb = jnp.where(active, qb - jnp.minimum(budget, qb), qb)
+            tt = jnp.where(active, se, tt)
+        queue_pkts = jnp.ceil(qb / consts["mtu"]).astype(jnp.int64)
+
+        bw_now = jnp.maximum(self._trace_at(t, consts), 1e3)
+        queue_delay = qb / bw_now
+        n_pkts = jnp.maximum(
+            jnp.ceil(bits64 / consts["mtu"]).astype(jnp.int64), 1)
+        free = jnp.maximum(self._queue_packets - queue_pkts, 0)
+        admitted_pkts = jnp.minimum(n_pkts, free)
+        admitted_bits = jnp.minimum(
+            bits64, (admitted_pkts * MTU_BITS).astype(jnp.float64))
+        dropped = admitted_pkts < n_pkts
+        backlog = qb + admitted_bits
+
+        def tts_cond(s):
+            it, _, _, _, done = s
+            return (it < self._tts_iters) & ~jnp.all(done)
+
+        def tts_body(s):
+            it, tt, rem, out, done = s
+            bw = jnp.maximum(self._trace_at(tt, consts), 1e3)
+            se = (jnp.floor(tt / dtr + 1e-9) + 1.0) * dtr
+            se = jnp.where(se <= tt + 1e-12, tt + dtr, se)
+            budget = _no_fma(bw * (se - tt))
+            fin = ~done & (budget >= rem)
+            out = jnp.where(fin, tt + rem / bw - t, out)
+            done = done | fin
+            rem = jnp.where(done, rem, rem - budget)
+            return it + 1, se, rem, out, done
+
+        it0 = jnp.zeros((), jnp.int64)
+        _, tt_f, _, out, done = lax.while_loop(
+            tts_cond, tts_body,
+            (it0, t, backlog, jnp.zeros_like(backlog),
+             jnp.zeros(backlog.shape, bool)))
+        tts = jnp.where(done, out, tt_f - t)  # capped at 300 s
+        latency = jnp.where(admitted_pkts > 0, tts, jnp.inf)
+        upd = {"ch_qb": backlog, "ch_qpk": queue_pkts + admitted_pkts}
+        return latency, admitted_bits, dropped, queue_delay, upd
+
+    def _step(self, carry, x, consts):
+        t = x["t"]
+        i = x["idx"].astype(jnp.int64)
+        ack = self._ack_stats(carry, i)
+
+        # -- feedback delivery from the depth-1 slot -------------------
+        due = carry["slot_t"] <= t
+        conf = jnp.where(due, carry["slot_conf"], carry["conf"])
+        ctx = due & carry["slot_has"]
+        z_hasfb = carry["z_hasfb"] | ctx
+        z_times = jnp.where(ctx[:, None], carry["slot_times"],
+                            carry["z_times"])
+        z_boxes = jnp.where(ctx[:, None, None, None], carry["slot_boxes"],
+                            carry["z_boxes"])
+        z_counts = jnp.where(ctx[:, None], carry["slot_counts"],
+                             carry["z_counts"])
+        z_len = jnp.where(ctx, carry["slot_len"], carry["z_len"])
+        slot_t = jnp.where(due, jnp.inf, carry["slot_t"])
+
+        # -- CC + ABR --------------------------------------------------
+        b_hat, cc_upd = self._cc(carry, ack, i, consts)
+        tau = consts["abr_tau"]
+        delta = (tau - conf) / tau
+        w_eq1 = delta * jnp.abs(delta)          # gamma == 2 exact power
+        recap = jnp.maximum(
+            jnp.minimum(b_hat, carry["abr_rate"]
+                        + _no_fma(w_eq1 * (b_hat - carry["abr_rate"]))),
+            self._abr_min)
+        cc_only = jnp.maximum(b_hat, self._abr_min)
+        abr_rate = jnp.where(consts["use_recap"], recap, cc_only)
+        rate = jnp.where(consts["live"], abr_rate, DEAD_SESSION_RATE)
+
+        # -- ZeCoStream trigger / selection (plan_arrays) --------------
+        struggling = conf < consts["z_tau"]
+        thresh = jnp.where(carry["z_active"], consts["z_release"],
+                           consts["z_trigger"])
+        decision = consts["z_enabled"] & struggling & (rate < thresh)
+        sel = jnp.argmin(jnp.abs(z_times - t), axis=1)
+        rows = jnp.arange(z_times.shape[0])
+        counts = jnp.where(z_len > 0, z_counts[rows, sel], 0)
+        boxes = z_boxes[rows, sel]
+        engaged = decision & z_hasfb & (counts > 0)
+        z_total = carry["z_total"] + engaged
+
+        # -- fused plan+encode ------------------------------------------
+        # The barriers bracket the eager dispatch's jaxpr as a scheduling
+        # unit.  They are belt-and-braces only: parity holds without them
+        # (tree_sum's fixed-order reductions, _no_fma and the runtime
+        # dt/MTU operands carry the bit-exactness contract), but they
+        # keep cross-phase fusion from ever becoming a parity suspect.
+        targets = (rate * self._inv_fps).astype(jnp.float32)
+        enc_in = lax.optimization_barrier(
+            (x["frames"], boxes, counts.astype(jnp.int32), engaged,
+             targets))
+        surf, _, enc = rate_control_batch_fused(
+            *enc_in, frame_hw=self._frame_hw, patch=self._patch,
+            mu=self._mu, q_min=self._q_min, q_max=self._q_max,
+            probe_stride=self._probe)
+        surf, enc = lax.optimization_barrier((surf, enc))
+        bits64 = enc.bits.astype(jnp.float64)
+
+        # -- channel + ack-ring write ----------------------------------
+        latency, admitted_bits, dropped, queue_delay, ch_upd = \
+            self._channel(carry, t, i, bits64, consts)
+        sent_i = bits64.astype(jnp.int64)
+        deliv_i = admitted_bits.astype(jnp.int64)
+        slot_w = i % ACK_WINDOW
+        ack_upd = {
+            "ack_lat": carry["ack_lat"].at[:, slot_w].set(latency),
+            "ack_deliv": carry["ack_deliv"].at[:, slot_w].set(deliv_i),
+            "ack_drop": carry["ack_drop"].at[:, slot_w].set(dropped),
+            "ack_qd": carry["ack_qd"].at[:, slot_w].set(queue_delay),
+        }
+
+        # -- decode what the uplink delivered --------------------------
+        delivered = jnp.maximum(deliv_i.astype(jnp.float64),
+                                1e3).astype(jnp.float32)
+        needs = jnp.isfinite(latency) & dropped & (deliv_i < sent_i)
+        dec_in = lax.optimization_barrier((enc, surf, delivered, needs))
+        decoded = codec.decode_delivered_batch(*dec_in,
+                                               probe_stride=self._probe)
+        decoded = lax.optimization_barrier(decoded)
+
+        new_carry = {
+            **ch_upd, **ack_upd, **cc_upd,
+            "abr_rate": abr_rate, "conf": conf,
+            "z_active": decision, "z_hasfb": z_hasfb, "z_total": z_total,
+            "z_times": z_times, "z_boxes": z_boxes, "z_counts": z_counts,
+            "z_len": z_len,
+            "slot_t": slot_t, "slot_conf": carry["slot_conf"],
+            "slot_has": carry["slot_has"], "slot_len": carry["slot_len"],
+            "slot_times": carry["slot_times"],
+            "slot_boxes": carry["slot_boxes"],
+            "slot_counts": carry["slot_counts"],
+        }
+        ys = {"rate": rate, "conf": conf, "bits": bits64,
+              "latency": latency, "bits_sent": sent_i,
+              "bits_delivered": deliv_i, "dropped": dropped,
+              "queue_delay": queue_delay, "decoded": decoded}
+        return new_carry, ys
+
+    # ------------------------------------------------------------------
+    def _window_fn(self, carry, xs, consts):
+        def step(c, x):
+            return self._step(c, x, consts)
+        return lax.scan(step, carry, xs)
+
+    def _jit_key(self) -> tuple:
+        """Hashable signature of every static value `_step` and its
+        helpers read off `self` during tracing, plus the mesh layout and
+        which consts are per-session (they pick the shard_map in_specs).
+        Two instances with equal keys trace to identical programs, so
+        they may share one compiled window function."""
+        f = self.fleet
+        mesh_sig = None
+        if f.mesh is not None:
+            ax = f._axes
+            mesh_sig = (tuple(f.mesh.axis_names), f.mesh.devices.shape,
+                        tuple(d.id for d in f.mesh.devices.flat),
+                        ax if (ax is None or isinstance(ax, str))
+                        else tuple(ax))
+        per_row = tuple(sorted(
+            (k, v.shape[:1] == (self.n,))
+            for k, v in self._consts_np.items()))
+        return (self.n, self.dt, self.fps, self._drain_steps,
+                self._tts_iters, self._queue_packets, self._frame_hw,
+                self._patch, self._mu, self._q_min, self._q_max,
+                self._probe, self._gcc_beta, self._gcc_eta,
+                self._gcc_thresh, self._bbr_window,
+                tuple(self._bbr_gain.tolist()), self._abr_min,
+                mesh_sig, per_row)
+
+    def _build_call(self):
+        f = self.fleet
+        key = self._jit_key()
+        cached = _WINDOW_FN_CACHE.get(key)
+        if cached is not None:
+            self._call = cached
+            with enable_x64():
+                if f.mesh is not None:
+                    self._consts = {
+                        k: jax.device_put(
+                            v, NamedSharding(f.mesh, self._consts_spec(k)))
+                        for k, v in self._consts_np.items()}
+                else:
+                    self._consts = jax.device_put(self._consts_np)
+            return
+        if f.mesh is not None:
+            ax = f._axes
+            row = P(ax)
+            carry_specs = {
+                k: row for k in self.carry}
+            xs_specs = {"frames": P(None, ax), "t": P(None),
+                        "idx": P(None)}
+            consts_specs = {k: self._consts_spec(k)
+                            for k in self._consts_np}
+            ys_specs = {k: P(None, ax) for k in
+                        ("rate", "conf", "bits", "latency", "bits_sent",
+                         "bits_delivered", "dropped", "queue_delay",
+                         "decoded")}
+            # check_rep=False: the drain/time-to-send while_loops have no
+            # replication rule; every operand is explicitly spec'd anyway.
+            self._call = jax.jit(shard_map_compat(
+                self._window_fn, f.mesh,
+                (carry_specs, xs_specs, consts_specs),
+                (carry_specs, ys_specs), check_rep=False))
+            with enable_x64():
+                self._consts = {
+                    k: jax.device_put(v, NamedSharding(f.mesh,
+                                                       consts_specs[k]))
+                    for k, v in self._consts_np.items()}
+        else:
+            self._call = jax.jit(self._window_fn)
+            with enable_x64():
+                self._consts = jax.device_put(self._consts_np)
+        _WINDOW_FN_CACHE[key] = self._call
+
+    def _consts_spec(self, k: str) -> P:
+        """PartitionSpec of one consts entry: per-session rows shard
+        over the session axes, everything else replicates."""
+        if self._consts_np[k].shape[:1] == (self.n,):
+            return P(self.fleet._axes)
+        return P()
+
+    # ------------------------------------------------------------------
+    # Host driver
+    # ------------------------------------------------------------------
+    def _grow_slots(self, kk: int, bb: int) -> None:
+        """A feedback packet exceeded the fb-context capacities: grow
+        power-of-two (the bank's `_ensure_capacity` policy), re-pad the
+        carry's context arrays host-side and let jit retrace."""
+        from repro.core.zecostream import _grow
+        kcap = _grow(self._kcap, kk)
+        bcap = _grow(self._bcap, bb)
+        c = jax.device_get(self.carry)
+        times = np.full((self.n, kcap), np.inf)
+        times[:, :self._kcap] = c["z_times"]
+        boxes = np.zeros((self.n, kcap, bcap, 4), np.float32)
+        boxes[:, :self._kcap, :self._bcap] = c["z_boxes"]
+        counts = np.zeros((self.n, kcap), np.int32)
+        counts[:, :self._kcap] = c["z_counts"]
+        c.update(z_times=times, z_boxes=boxes, z_counts=counts)
+        self._kcap, self._bcap = kcap, bcap
+        c.update({k: v for k, v in self._empty_slots().items()
+                  if k in ("slot_times", "slot_boxes", "slot_counts")})
+        self.carry = c
+
+    def _fill_slots(self, t_end: float) -> Dict[str, np.ndarray]:
+        """Pop the (provably <= 1 per session) feedback entries due by
+        the window's last tick off the downlink heaps into slot arrays."""
+        slots = self._empty_slots()
+        for k, st in enumerate(self.fleet.states):
+            fbs = []
+            while (st.client.feedbacks
+                   and st.client.feedbacks[0][0] <= t_end):
+                fbs.append(heapq.heappop(st.client.feedbacks))
+            if len(fbs) > 1:
+                raise RuntimeError(
+                    "rollout window invariant violated: >1 feedback due "
+                    f"for session {k} by t={t_end} (window too long?)")
+            if not fbs:
+                continue
+            t_recv, _, conf, fb = fbs[0]
+            slots["slot_t"][k] = t_recv
+            slots["slot_conf"][k] = conf
+            if fb is not None:
+                kk, bb = fb.boxes.shape[0], fb.boxes.shape[1]
+                if kk > self._kcap or bb > self._bcap:
+                    self._grow_slots(kk, bb)
+                    slots = self._resize_slots(slots)
+                slots["slot_has"][k] = True
+                slots["slot_len"][k] = kk
+                slots["slot_times"][k, :kk] = fb.times
+                slots["slot_boxes"][k, :kk, :bb] = fb.boxes
+                slots["slot_counts"][k, :kk] = fb.counts
+        return slots
+
+    def _resize_slots(self, old: Dict[str, np.ndarray]
+                      ) -> Dict[str, np.ndarray]:
+        new = self._empty_slots()
+        for k in ("slot_t", "slot_conf", "slot_has", "slot_len"):
+            new[k] = old[k]
+        kc, bc = old["slot_times"].shape[1], old["slot_boxes"].shape[2]
+        new["slot_times"][:, :kc] = old["slot_times"]
+        new["slot_boxes"][:, :kc, :bc] = old["slot_boxes"]
+        new["slot_counts"][:, :kc] = old["slot_counts"]
+        return new
+
+    def run_window(self, i0: int, w: int) -> None:
+        """Run ticks [i0, i0+w) as one compiled scan, then replay the
+        host-side server phase per tick from the scan outputs."""
+        f = self.fleet
+        ts = [i * self.dt for i in range(i0, i0 + w)]
+        slots = self._fill_slots(ts[-1])
+        frames = np.zeros((w, self.n) + self._frame_hw, np.float32)
+        for j, t in enumerate(ts):
+            fi = int(round(t * self.fps))
+            for k, st in enumerate(f.states):
+                frames[j, k] = st.scene.render(fi)
+        xs = {"frames": frames,
+              "t": np.asarray(ts, np.float64),
+              "idx": np.arange(i0, i0 + w, dtype=np.int32)}
+        carry = dict(self.carry)
+        carry.update(slots)
+        with enable_x64():
+            self.carry, ys = self._call(carry, xs, self._consts)
+        ys = jax.device_get(ys)
+        self._windows_run += 1
+        self._replay(ts, ys)
+
+    def _replay(self, ts: List[float], ys: Dict[str, np.ndarray]) -> None:
+        """The eager tick's host half, per window tick in order: channel
+        history, client accounting, arrival events, batched ingestion,
+        feedback emission + QA.  Identical call sequence to
+        `Fleet.tick`, so heaps/metrics/server state match bit for bit."""
+        f = self.fleet
+        bank = f.bank
+        for j, t in enumerate(ts):
+            lat = ys["latency"][j]
+            bank.now = t
+            bank._send_times.append(t)
+            bank._latency.append(lat)
+            bank._bits_sent.append(ys["bits_sent"][j])
+            bank._bits_delivered.append(ys["bits_delivered"][j])
+            bank._dropped.append(ys["dropped"][j])
+            bank._queue_delay.append(ys["queue_delay"][j])
+            decoded = ys["decoded"][j]
+            for k, st in enumerate(f.states):
+                st.client.rates.append(float(ys["rate"][j][k]))
+                st.client.confidence = float(ys["conf"][j][k])
+                client_record_send(st, float(ys["bits"][j][k]),
+                                   float(lat[k]))
+                if np.isfinite(lat[k]) and t + float(lat[k]) <= f._t_last:
+                    push_arrival(st, t, float(lat[k]), decoded[k].copy())
+            due = [(k, t_cap, frame)
+                   for k, st in enumerate(f.states)
+                   for t_cap, frame in pop_due_arrivals(st, t)]
+            _ingest_batched(f.states, due)
+            for st in f.states:
+                server_emit(st, t)
+
+    def finish(self) -> None:
+        """Sync the carry's resident state back into the fleet's banks
+        so post-run inspection (zeco metrics, channel backlog) sees what
+        eager ticks would have left behind."""
+        c = jax.device_get(self.carry)
+        f = self.fleet
+        z = f.zeco
+        z.active = np.asarray(c["z_active"], bool)
+        z.has_fb = np.asarray(c["z_hasfb"], bool)
+        z.engaged_total = np.asarray(c["z_total"], np.int64)
+        z.fb_times = np.asarray(c["z_times"], np.float64)
+        z.fb_boxes = np.asarray(c["z_boxes"], np.float32)
+        z.fb_counts = np.asarray(c["z_counts"], np.int32)
+        z.fb_len = np.asarray(c["z_len"], np.int32)
+        f.bank._queue_bits = np.asarray(c["ch_qb"], np.float64)
+        f.bank._queue_pkts = np.asarray(c["ch_qpk"], np.int64)
+
+    # ------------------------------------------------------------------
+    # Compiled-artifact access for the roofline report
+    # ------------------------------------------------------------------
+    def aot(self, w: Optional[int] = None) -> Tuple[object, object]:
+        """Lower + compile the window function for a `w`-tick window
+        without running it; returns (lowered, compiled) for
+        `roofline.analysis.fleet_step_report`."""
+        w = self.window if w is None else w
+        xs = {"frames": np.zeros((w, self.n) + self._frame_hw, np.float32),
+              "t": np.zeros(w, np.float64),
+              "idx": np.arange(w, dtype=np.int32)}
+        carry = dict(self.carry)
+        with enable_x64():
+            lowered = self._call.lower(carry, xs, self._consts)
+            compiled = lowered.compile()
+        return lowered, compiled

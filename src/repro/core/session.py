@@ -31,13 +31,14 @@ import numpy as np
 
 from repro.core.confidence import ConfidenceHead, PlattCalibrator
 from repro.core.grounding import TrajectoryPredictor, detect_cards
+from repro.core.ingest import glyph_stats_batch
 from repro.core.recap_abr import CCOnlyABR, ReCapABR
 from repro.core.zecostream import TimedBoxes, ZeCoStreamBank
 from repro.net.cc import make_cc
 from repro.net.channel import Channel
 from repro.net.traces import Trace
 from repro.video import codec
-from repro.video.scenes import Scene, decode_glyph
+from repro.video.scenes import Scene
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,7 +99,12 @@ class OracleServer:
 
     # -- ingestion ------------------------------------------------------
     def ingest(self, t_capture: float, frame: np.ndarray):
-        """Process one received (already decoded, degraded) frame."""
+        """Process one received (already decoded, degraded) frame.
+
+        The glyph decode/margin math runs through the batched jnp
+        kernel (`ingest.glyph_stats_batch`, B=1 per object here) — the
+        same kernel the fleet engine and the on-device rollout use, so
+        every execution mode's server sees identical readings."""
         self.frames_seen += 1
         frame_idx = int(round(t_capture * self.cfg.fps))
         epoch = self.scene.epoch(frame_idx)
@@ -108,7 +114,8 @@ class OracleServer:
             y0 = int(np.clip(y0, 0, self.scene.h - obj.size))
             x0 = int(np.clip(x0, 0, self.scene.w - obj.size))
             patch = frame[y0:y0 + obj.size, x0:x0 + obj.size]
-            code, margin = decode_glyph(patch, obj.cell)
+            codes, margs = glyph_stats_batch(patch[None], obj.cell)
+            code, margin = int(codes[0]), float(margs[0])
             margins.append(margin)
             best = self.memory.get((idx, epoch), (0.0, -1))
             if margin > best[0]:

@@ -240,7 +240,9 @@ def _surface_one(boxes: jnp.ndarray, count: jnp.ndarray,
     qp = q_min + (q_max - q_min) * jnp.square(1.0 - rho)
     iy, ix = _block_to_patch_idx(frame_hw, patch)
     qp_blocks = qp[jnp.asarray(iy)][:, jnp.asarray(ix)]
-    surf = qp_blocks - jnp.mean(qp_blocks)
+    # fixed-order sum (see codec.tree_sum): the zero-mean shift feeds the
+    # quantizer, so its rounding must not depend on the fusion context
+    surf = qp_blocks - codec.tree_sum(qp_blocks, 2) / qp_blocks.size
     return jnp.where(engaged, surf, 0.0).astype(jnp.float32)
 
 

@@ -172,14 +172,26 @@ def sharding_report(axes_tree: Any, shapes_tree: Any, mesh: Mesh,
 # --------------------------------------------------------------------------
 # Session-axis partitioning (the fleet engine's data parallelism)
 # --------------------------------------------------------------------------
-def shard_map_compat(f, mesh: Mesh, in_specs, out_specs):
+def shard_map_compat(f, mesh: Mesh, in_specs, out_specs,
+                     check_rep: bool = True):
     """Version-compat shard_map: `jax.shard_map` (new) falling back to
-    `jax.experimental.shard_map.shard_map` (every JAX we support)."""
+    `jax.experimental.shard_map.shard_map` (every JAX we support).
+
+    `check_rep=False` disables the static replication checker, which has
+    no rule for `while` — required by any body containing a
+    `lax.while_loop` (e.g. the rollout's packet-drain loops)."""
+    kw = {} if check_rep else {"check_rep": False}
     if hasattr(jax, "shard_map"):
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs)
+        try:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, **kw)
+        except TypeError:  # newer JAX renamed check_rep -> check_vma
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs,
+                                 **({"check_vma": False} if kw else {}))
     from jax.experimental.shard_map import shard_map
-    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     **kw)
 
 
 def session_partition(mesh: Mesh, logical: str = "batch",

@@ -13,12 +13,54 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, NamedTuple, Optional, Sequence
 
+import jax
+import jax.numpy as jnp
 import numpy as np
+from jax.experimental import enable_x64
 
 from repro.net.traces import Trace, TraceBank
 
 MTU_BITS = 1500 * 8
 QUEUE_PACKETS = 60
+
+ACK_WINDOW = 20
+
+
+def masked_mean_latency(lat: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Deterministic masked mean over the trailing (window) axis.
+
+    The one ack-stat reduction whose float result depends on summation
+    order: serial `Channel.ack_stats`, the vectorized
+    `ChannelBank.ack_stats_arrays` and the on-device rollout
+    (repro.core.rollout) all funnel their latency windows through THIS
+    sequence of adds — a fixed chronological fori_loop of elementwise
+    masked accumulations — so the three paths agree bit for bit.  Masked
+    slots contribute an exact +0.0 and never perturb the accumulator,
+    which makes the result invariant to where padding sits and to the
+    batch shape (elementwise adds compile to the same scalar op
+    sequence per lane at any N).  float64 in, float64 out; empty
+    windows return the serial path's 1.0 fallback."""
+    acc = jnp.zeros(lat.shape[:-1], lat.dtype)
+    for j in range(lat.shape[-1]):
+        acc = acc + jnp.where(mask[..., j], lat[..., j], 0.0)
+    cnt = jnp.sum(mask, axis=-1)
+    return jnp.where(cnt > 0, acc / cnt, 1.0)
+
+
+@jax.jit
+def _masked_mean_latency_jit(lat, mask):
+    return masked_mean_latency(lat, mask)
+
+
+def _avg_latency_host(lat: np.ndarray) -> np.ndarray:
+    """Host entry: (N, window) float64 latencies (inf = undelivered) ->
+    (N,) float64 mean over the finite entries (1.0 where none).  Traced
+    under enable_x64 so the kernel really runs in float64 — the context
+    only matters at trace time, later calls reuse the executable."""
+    lat = np.asarray(lat, np.float64)
+    with enable_x64():
+        out = _masked_mean_latency_jit(lat, np.isfinite(lat))
+    return np.asarray(out)
 
 
 class FrameReport(NamedTuple):
@@ -120,9 +162,14 @@ class Channel:
         bits = sum(r.bits_delivered for r in recent[:-1])
         finite = [r.latency for r in recent if np.isfinite(r.latency)]
         app_limited = float(np.mean([r.queue_delay < 0.02 for r in recent]))
+        # avg latency via the shared deterministic kernel (see
+        # `masked_mean_latency`): pad the chronological window to a fixed
+        # shape so every call reuses one compiled executable
+        lat_w = np.full((1, window), np.inf)
+        lat_w[0, :len(recent)] = [r.latency for r in recent]
         return {
             "delivery_rate": bits / span,
-            "avg_latency": float(np.mean(finite)) if finite else 1.0,
+            "avg_latency": float(_avg_latency_host(lat_w)[0]),
             "min_latency": float(np.min(finite)) if finite else 0.0,
             "loss": float(np.mean([r.dropped for r in recent])),
             "app_limited": app_limited,
@@ -279,10 +326,14 @@ class ChannelBank:
         finite = np.isfinite(lat)
         cnt = finite.sum(axis=0)
         # min / loss / app_limited are order-independent reductions, so
-        # they vectorize exactly; the latency *mean* must use the same
-        # pairwise np.mean as the serial path to stay bit-identical
-        avg_lat = np.asarray([float(np.mean(lat[finite[:, k], k]))
-                              if cnt[k] else 1.0 for k in range(self.n)])
+        # they vectorize exactly; the latency *mean* goes through the
+        # shared deterministic kernel (chronological masked adds) that
+        # the serial path and the on-device rollout also use, so all
+        # three stay bit-identical.  Pad the window to a fixed shape so
+        # one executable serves the whole run.
+        lat_w = np.full((window, self.n), np.inf)
+        lat_w[:lat.shape[0]] = lat
+        avg_lat = _avg_latency_host(lat_w.T)
         min_lat = np.where(cnt > 0,
                            np.where(finite, lat, np.inf).min(axis=0), 0.0)
         return {"delivery_rate": bits / span,

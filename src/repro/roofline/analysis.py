@@ -143,6 +143,98 @@ class RooflineTerms:
         }
 
 
+# --------------------------------------------------------------------------
+# Fleet rollout-step roofline (host CPU)
+# --------------------------------------------------------------------------
+# Single-core CPU envelope for the fleet benchmarks (the harness pins one
+# core): ~2 FMA ports x 8 f32 lanes x 2 flops x ~3 GHz, and one core's
+# share of memory bandwidth.  Coarse by design — the report's job is to
+# say WHICH wall the compiled window step sits against and how far the
+# measured wall time is from it, not to be a cycle model.
+CPU_PEAK_FLOPS = 1.0e11   # flops/s, one core, f32 FMA
+CPU_MEM_BW = 2.0e10       # bytes/s, one core
+
+_HLO_OP_RE = re.compile(r"=\s*\S+\s+([\w\-]+)\(")
+
+
+def _cost_dict(compiled) -> Dict[str, float]:
+    """`compiled.cost_analysis()` result as one flat dict.
+
+    JAX has returned a dict, a list-of-dicts (one per partition), and
+    None for unsupported backends, depending on version — normalize all
+    of them."""
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else None
+    return dict(ca) if ca else {}
+
+
+def hlo_op_histogram(hlo_text: str, top: int = 12) -> Dict[str, int]:
+    """Instruction-kind counts of an HLO module text, largest first —
+    the attribution trail for 'where did the step time go' (a wall of
+    `while` means serial drain loops, `fusion` count tracks dispatch
+    granularity, `custom-call` flags opaque kernels the cost model
+    can't see into)."""
+    counts: Dict[str, int] = {}
+    for m in _HLO_OP_RE.finditer(hlo_text):
+        op = m.group(1)
+        counts[op] = counts.get(op, 0) + 1
+    ranked = sorted(counts.items(), key=lambda kv: -kv[1])
+    return dict(ranked[:top])
+
+
+def fleet_step_report(lowered, compiled, *, n_sessions: int, window: int,
+                      wall_time_s: Optional[float] = None,
+                      peak_flops: float = CPU_PEAK_FLOPS,
+                      mem_bw: float = CPU_MEM_BW) -> Dict:
+    """Roofline report for one compiled rollout window step.
+
+    Takes the `(lowered, compiled)` pair from `FleetRollout.aot()` and
+    derives compute/memory lower bounds from XLA's own cost analysis,
+    normalized per session-tick so sweeps across N and K compare
+    directly.  `wall_time_s` (measured seconds per window dispatch, if
+    available) turns the bounds into an attainment figure: how much of
+    the remaining gap is NOT explained by the roofline — i.e. dispatch
+    overhead, serial `while` drains, or cost-model-invisible
+    custom-calls (see `hlo_ops`)."""
+    cost = _cost_dict(compiled)
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    transcendentals = float(cost.get("transcendentals", 0.0))
+    t_compute = flops / peak_flops
+    t_memory = nbytes / mem_bw
+    step_lb = max(t_compute, t_memory)
+    ticks = max(n_sessions * window, 1)
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = lowered.as_text() if hasattr(lowered, "as_text") else ""
+    report = {
+        "n_sessions": n_sessions,
+        "window": window,
+        "flops": flops,
+        "bytes_accessed": nbytes,
+        "transcendentals": transcendentals,
+        "arithmetic_intensity": flops / max(nbytes, 1.0),
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "bottleneck": "compute" if t_compute >= t_memory else "memory",
+        "step_time_lb_s": step_lb,
+        "per_session_tick_lb_us": step_lb / ticks * 1e6,
+        "hlo_ops": hlo_op_histogram(hlo),
+        "peak_flops": peak_flops,
+        "mem_bw": mem_bw,
+    }
+    if wall_time_s is not None:
+        report["wall_time_s"] = wall_time_s
+        report["per_session_tick_wall_us"] = wall_time_s / ticks * 1e6
+        report["roofline_attainment"] = step_lb / max(wall_time_s, 1e-12)
+    return report
+
+
 def model_flops(cfg, shape_kind: str, tokens: int, n_params: int,
                 n_active: Optional[int] = None) -> float:
     """6ND for train, 2ND for inference; N = active params for MoE."""

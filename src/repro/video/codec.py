@@ -44,6 +44,31 @@ def qstep(qp):
     return 2.0 ** ((qp - 4.0) / 6.0)
 
 
+def tree_sum(x: jnp.ndarray, ndims: int) -> jnp.ndarray:
+    """Fixed-order pairwise-tree sum over the trailing `ndims` axes.
+
+    Written as an explicit log2-depth chain of elementwise adds (after an
+    exact zero pad to the next power of two) instead of an XLA reduce.
+    Reduce accumulation order is a backend/fusion decision: the same
+    `jnp.sum` can round differently when the surrounding graph changes —
+    e.g. the rate model inlined into the rollout's `lax.scan` body vs the
+    standalone fleet executable.  An explicit add DAG has exactly one
+    evaluation order under any fusion, which is what pins `bits` to the
+    same float across the serial, fleet-eager and fleet-rollout paths.
+    All summands here are finite and non-negative, so the zero pad is
+    exact.
+    """
+    lead = x.shape[:x.ndim - ndims]
+    flat = x.reshape(lead + (-1,))
+    n = flat.shape[-1]
+    p = 1 << max(n - 1, 0).bit_length()
+    if p != n:
+        flat = jnp.pad(flat, [(0, 0)] * len(lead) + [(0, p - n)])
+    while flat.shape[-1] > 1:
+        flat = flat[..., ::2] + flat[..., 1::2]
+    return flat[..., 0]
+
+
 class EncodedFrame(NamedTuple):
     coeffs: jnp.ndarray   # quantized DCT coefficients (nby, nbx, 8, 8) int32
     qp_blocks: jnp.ndarray  # per-block QP used (nby, nbx) float32
@@ -95,11 +120,16 @@ def encode(frame: jnp.ndarray, qp_blocks: jnp.ndarray) -> EncodedFrame:
     coef = _dct_blocks(frame)
     qs = qstep(qp_blocks)[..., None, None] * (1.0 / 64.0)
     q = jnp.round(coef / qs).astype(jnp.int32)
-    # rate proxy: ~log2(1+|q|) bits per coefficient + per-block overhead
-    bits_blocks = (RATE_COEF * jnp.sum(jnp.log2(1.0 + jnp.abs(q)), axis=(-1, -2))
-                   + RATE_OVERHEAD_PER_BLOCK)
+    # rate proxy: ~log2(1+|q|) bits per coefficient + per-block overhead.
+    # The int32->float32 cast is explicit so the arithmetic stays float32
+    # even when traced under enable_x64 (the rollout scan), where the
+    # weak-scalar promotion of `1.0 + int32` would otherwise yield f64.
+    bits_blocks = (RATE_COEF * tree_sum(
+        jnp.log2(jnp.float32(1.0) + jnp.abs(q).astype(jnp.float32)), 2)
+        + RATE_OVERHEAD_PER_BLOCK)
     return EncodedFrame(coeffs=q, qp_blocks=qp_blocks,
-                        bits=jnp.sum(bits_blocks), bits_blocks=bits_blocks)
+                        bits=tree_sum(bits_blocks, 2),
+                        bits_blocks=bits_blocks)
 
 
 @jax.jit
@@ -128,7 +158,7 @@ def _rate_model(coef: jnp.ndarray, qp: jnp.ndarray) -> jnp.ndarray:
     run it on cached/subsampled coefficients without re-transforming."""
     qs = qstep(qp)[..., None, None] * (1.0 / 64.0)
     q = jnp.round(coef / qs)
-    return (RATE_COEF * jnp.sum(jnp.log2(1.0 + jnp.abs(q)), axis=(-1, -2))
+    return (RATE_COEF * tree_sum(jnp.log2(1.0 + jnp.abs(q)), 2)
             + RATE_OVERHEAD_PER_BLOCK)
 
 
@@ -170,7 +200,7 @@ def rate_control(frame: jnp.ndarray, qp_shape: jnp.ndarray,
         lo, hi = carry
         mid = 0.5 * (lo + hi)
         qp = jnp.clip(shape_p + mid, QP_MIN, QP_MAX)
-        bits = jnp.sum(_rate_model(coef_p, qp)) * scale
+        bits = tree_sum(_rate_model(coef_p, qp), 2) * scale
         # too many bits -> raise QP (raise lo)
         lo = jnp.where(bits > target_bits, mid, lo)
         hi = jnp.where(bits > target_bits, hi, mid)
@@ -228,7 +258,7 @@ def _rc_core_from_coef(coef: jnp.ndarray, qp_shape: jnp.ndarray,
         lo, hi = carry
         mid = 0.5 * (lo + hi)
         qp = jnp.clip(shape_p + mid, QP_MIN, QP_MAX)
-        bits = jnp.sum(_rate_model(coef_p, qp)) * scale
+        bits = tree_sum(_rate_model(coef_p, qp), 2) * scale
         lo = jnp.where(bits > target_bits, mid, lo)
         hi = jnp.where(bits > target_bits, hi, mid)
         return lo, hi
@@ -237,9 +267,11 @@ def _rc_core_from_coef(coef: jnp.ndarray, qp_shape: jnp.ndarray,
     qp = jnp.clip(qp_shape + 0.5 * (lo + hi), QP_MIN, QP_MAX)
     qs = qstep(qp)[..., None, None] * (1.0 / 64.0)
     q = jnp.round(coef / qs).astype(jnp.int32)
-    bb = (RATE_COEF * jnp.sum(jnp.log2(1.0 + jnp.abs(q)), axis=(-1, -2))
-          + RATE_OVERHEAD_PER_BLOCK)
-    return EncodedFrame(coeffs=q, qp_blocks=qp, bits=jnp.sum(bb),
+    # explicit float32 cast: x64-trace-robust, see `encode`
+    bb = (RATE_COEF * tree_sum(
+        jnp.log2(jnp.float32(1.0) + jnp.abs(q).astype(jnp.float32)), 2)
+        + RATE_OVERHEAD_PER_BLOCK)
+    return EncodedFrame(coeffs=q, qp_blocks=qp, bits=tree_sum(bb, 2),
                         bits_blocks=bb)
 
 

@@ -48,7 +48,7 @@ def main() -> None:
     mesh = make_fleet_mesh()
     cases = {}
 
-    def fleet_case(name, n, duration, fused=False):
+    def fleet_case(name, n, duration, fused=False, rollout=None):
         def members():
             return [B.hetero_fleet_session(k, duration, hw=64)
                     for k in range(n)]
@@ -58,7 +58,7 @@ def main() -> None:
         # prove the mesh actually engaged and the padding is as expected
         assert fl.mesh is not None, f"{name}: mesh did not engage"
         assert fl.n_pad == pad_sessions(n, expect), (name, fl.n_pad)
-        shard = fl.run()
+        shard = fl.run(rollout=rollout)
         detail = _compare(base, shard)
         cases[name] = {"equal": detail is None, "detail": detail,
                        "n": n, "pad": fl.pad,
@@ -73,6 +73,11 @@ def main() -> None:
     fleet_case("n64", n=64, duration=2.5)
     # fused plan+encode dispatch (surfaces computed in-graph)
     fleet_case("fused_n8", n=8, duration=4.0, fused=True)
+    # whole-tick rollout (lax.scan windows) under shard_map, vs the
+    # EAGER single-device fleet: one case per dispatch shape — even N
+    # and padded N (12 pads to 16 on 8 devices, dead tail masked)
+    fleet_case("rollout_n8", n=8, duration=4.0, fused=True, rollout=3)
+    fleet_case("rollout_pad_n12", n=12, duration=3.0, rollout=3)
 
     # mixed cohort grid through run_scenarios(mesh=...): two frame
     # sizes interleaved in input order, cohort sizes 3 and 5 (both pad

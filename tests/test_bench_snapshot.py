@@ -1,0 +1,75 @@
+"""The committed BENCH_fleet.json perf snapshot: schema + gate logic.
+
+The snapshot is a committed artifact (like tests/golden/*) — CI
+re-measures and gates on it, so its structure must stay loadable and
+the regression comparator must actually fire on a regressed ratio.
+"""
+import copy
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__)))))
+
+from benchmarks.snapshot import (BENCH_SCHEMA, REGRESSION_TOL,  # noqa: E402
+                                 SNAPSHOT_PATH, check_regression,
+                                 load_snapshot, validate_snapshot)
+
+
+@pytest.fixture(scope="module")
+def committed():
+    assert os.path.exists(SNAPSHOT_PATH), (
+        "BENCH_fleet.json must be committed at the repo root "
+        "(python -m benchmarks.bench_fleet --rollout writes it)")
+    return load_snapshot()
+
+
+def test_committed_snapshot_validates(committed):
+    assert committed["schema"] == BENCH_SCHEMA
+    ns = sorted(int(c["n"]) for c in committed["cells"])
+    assert ns == [8, 64, 256]
+    for c in committed["cells"]:
+        assert c["rollout_sessions_per_sec"] > 0
+        assert "roofline" in c and "bottleneck" in c["roofline"]
+
+
+def test_validator_rejects_corruption(committed):
+    for mutate in (
+        lambda d: d.update(schema="artic.bench.snapshot/v0"),
+        lambda d: d.pop("cells"),
+        lambda d: d["cells"][0].pop("median_ratio"),
+        lambda d: d["cells"][0].update(rollout_sessions_per_sec=0.0),
+        lambda d: d["cells"][0]["roofline"].pop("bottleneck"),
+        lambda d: d["machine"].pop("jax"),
+    ):
+        doc = copy.deepcopy(committed)
+        mutate(doc)
+        with pytest.raises(ValueError):
+            validate_snapshot(doc)
+
+
+def test_regression_gate_fires_on_ratio_drop(committed):
+    fresh = copy.deepcopy(committed)
+    assert check_regression(committed, fresh) == []
+    # a drop just inside the tolerance passes ...
+    ok = copy.deepcopy(committed)
+    ok["cells"][0]["median_ratio"] *= (1.0 - REGRESSION_TOL + 0.02)
+    assert check_regression(committed, ok) == []
+    # ... past it fails, naming the N that regressed
+    bad = copy.deepcopy(committed)
+    bad["cells"][0]["median_ratio"] *= (1.0 - REGRESSION_TOL - 0.05)
+    failures = check_regression(committed, bad)
+    assert len(failures) == 1
+    assert f"N={bad['cells'][0]['n']}" in failures[0]
+
+
+def test_gate_ignores_machine_dependent_absolutes(committed):
+    """Absolutes (sessions/sec) may move arbitrarily across runners —
+    only the same-process rollout/eager ratio is gated."""
+    fresh = copy.deepcopy(committed)
+    for c in fresh["cells"]:
+        c["eager_sessions_per_sec"] *= 0.1
+        c["rollout_sessions_per_sec"] *= 0.1
+    assert check_regression(committed, fresh) == []

@@ -44,6 +44,30 @@ def test_fleet_fused_plan_matches_default():
         assert a.zeco_engaged_frames == b.zeco_engaged_frames
 
 
+def test_profile_phase_times_sum_to_tick_loop_total():
+    """`_mark` syncs each phase's device work before stamping it, so the
+    per-phase times account for (nearly) all of the tick-loop wall time
+    — async dispatch must not let one phase's work be billed to a later
+    phase (or escape the accounting entirely)."""
+    import time
+
+    fl = Fleet([_spec(k, duration=3.0, hw=64) for k in range(4)],
+               profile=True)
+    cfg = fl.specs[0].cfg
+    n_frames = int(cfg.duration * cfg.fps)
+    t0 = time.perf_counter()
+    for i in range(n_frames):
+        fl.tick(i / cfg.fps)
+    total = time.perf_counter() - t0
+    assert fl.phase_times is not None
+    assert all(v >= 0.0 for v in fl.phase_times.values())
+    phase_sum = sum(fl.phase_times.values())
+    # every phase ends in a sync, so the sum can only miss pure-python
+    # glue between marks; allow 20% + scheduling noise
+    assert phase_sum <= total + 1e-6
+    assert phase_sum >= 0.8 * total - 0.05, (fl.phase_times, total)
+
+
 def test_fleet_rejects_mismatched_members():
     a = _spec(0)
     b = _spec(1)

@@ -1,0 +1,135 @@
+"""Whole-tick rollout parity suite — the PR's acceptance contract.
+
+`Fleet.run(rollout=K)` compiles K-tick windows of the entire tick loop
+into single `lax.scan` dispatches with all per-session state (channel
+queues, CC/ABR lanes, ZeCoStream context, ack rings) resident in the
+scan carry.  The contract is BIT-exactness: every metric list, channel
+history row and client trajectory must equal the eager per-tick loop —
+no tolerance — for every window size, fused or not, and for any way the
+tick range is split into windows.  The sharded variant of the same
+contract lives in tests/test_sharded_fleet.py (rollout_* cases).
+"""
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+import _builders as B
+from _hypothesis_compat import HAVE_HYPOTHESIS, hypothesis, st
+from repro.core.fleet import Fleet, run_fleet
+from repro.core.rollout import FleetRollout, max_window
+from repro.core.session import finalize
+from repro.net.cc import RATE_MAX, RATE_MIN
+
+N, DUR, HW = 4, 3.0, 64
+
+
+def _members(n=N, duration=DUR):
+    return [B.hetero_fleet_session(k, duration, hw=HW) for k in range(n)]
+
+
+@functools.lru_cache(maxsize=None)
+def _eager_digest(n=N, duration=DUR, fused=True):
+    # plain function, not a fixture: the hypothesis fallback shim calls
+    # property tests with strategy examples only (no fixture injection)
+    return B.metrics_digest(run_fleet(_members(n, duration),
+                                      fused_plan=fused))
+
+
+# --------------------------------------------------------------------------
+# Window-size invariants
+# --------------------------------------------------------------------------
+def test_max_window_honours_turnaround_and_feedback_period():
+    specs = _members()
+    cfg = specs[0].cfg
+    dt = 1.0 / cfg.fps
+    w = max_window(specs, cfg.fps)
+    for s in specs:
+        turnaround = s.cfg.inference_delay + s.cfg.downlink_delay
+        assert w <= int(turnaround / dt + 1e-9)
+        assert w <= int(s.cfg.feedback_period / dt + 1e-9)
+    assert w >= 1
+
+
+def test_rollout_clamps_oversized_window():
+    fl = Fleet(_members(), fused_plan=True)
+    ro = FleetRollout(fl, window=10 ** 6)
+    assert ro.window == max_window(fl.specs, fl.specs[0].cfg.fps)
+
+
+def test_rollout_rejects_partially_run_fleet():
+    fl = Fleet(_members(), fused_plan=True)
+    fl.tick(0.0)
+    with pytest.raises(ValueError):
+        FleetRollout(fl, 2)
+
+
+# --------------------------------------------------------------------------
+# Bit-exact parity with the eager tick loop
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("window", [1, 2, 3])
+def test_rollout_bit_identical_to_eager(window):
+    got = Fleet(_members(), fused_plan=True).run(rollout=window)
+    assert B.metrics_digest(got) == _eager_digest()
+
+
+def test_rollout_matches_nonfused_eager_fleet():
+    """The rollout always plans in-graph (fused); the default bank-plan
+    eager path must still match bit for bit (the two eager plan paths
+    are themselves exact-equal, test_fleet.py)."""
+    base = run_fleet(_members(), fused_plan=False)
+    got = Fleet(_members(), fused_plan=False).run(rollout=3)
+    for a, b in zip(base, got):
+        B.assert_metrics_equal(a, b)
+
+
+def test_rollout_syncs_bank_state_back():
+    """After finish(), zeco/channel bank state equals the eager run's —
+    post-run inspection must not see stale start-of-run arrays."""
+    fa = Fleet(_members(), fused_plan=True)
+    fa.run()
+    fb = Fleet(_members(), fused_plan=True)
+    fb.run(rollout=3)
+    np.testing.assert_array_equal(fa.zeco.active, fb.zeco.active)
+    np.testing.assert_array_equal(fa.zeco.engaged_total,
+                                  fb.zeco.engaged_total)
+    np.testing.assert_array_equal(fa.bank._queue_bits, fb.bank._queue_bits)
+    np.testing.assert_array_equal(fa.bank._queue_pkts, fb.bank._queue_pkts)
+
+
+# --------------------------------------------------------------------------
+# Property: parity is invariant to how ticks are split into windows,
+# and the resident carry stays inside its physical envelope throughout
+# --------------------------------------------------------------------------
+@hypothesis.settings(max_examples=3, deadline=None)
+@hypothesis.given(seed=st.integers(min_value=0, max_value=31))
+def test_carry_invariant_under_window_split_points(seed):
+    rng = np.random.default_rng(seed)
+    fl = Fleet(_members(), fused_plan=True)
+    cfg = fl.specs[0].cfg
+    n_frames = int(cfg.duration * cfg.fps)
+    ro = FleetRollout(fl)
+    i0 = 0
+    while i0 < n_frames:
+        w = min(int(rng.integers(1, ro.window + 1)), n_frames - i0)
+        ro.run_window(i0, w)
+        c = jax.device_get(ro.carry)
+        # channel queues: non-negative bits, packet count within cap
+        assert np.all(np.asarray(c["ch_qb"]) >= 0.0)
+        qpk = np.asarray(c["ch_qpk"])
+        assert np.all((qpk >= 0) & (qpk <= fl.bank.queue_packets))
+        # CC lanes stay inside the rate envelope
+        for key in ("gcc_rate", "abr_rate"):
+            r = np.asarray(c[key])
+            assert np.all((r >= RATE_MIN) & (r <= RATE_MAX)), key
+        # hysteresis flags are strict booleans; only zeco-enabled
+        # sessions may engage
+        act = np.asarray(c["z_active"])
+        assert act.dtype == np.bool_
+        assert np.all(act[~np.asarray(fl.zeco.enabled, bool)] == False)  # noqa: E712
+        i0 += w
+    ro.finish()
+    got = [finalize(s, fl.bank.reports_for(k))
+           for k, s in enumerate(fl.states)]
+    assert B.metrics_digest(got) == _eager_digest()

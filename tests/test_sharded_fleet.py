@@ -30,7 +30,8 @@ from repro.distributed.sharding import pad_sessions, session_partition
 from repro.launch.mesh import make_fleet_mesh
 
 DEVICES = 8
-CASES = ("variants_n8", "padded_n12", "n64", "fused_n8", "mixed_grid")
+CASES = ("variants_n8", "padded_n12", "n64", "fused_n8",
+         "rollout_n8", "rollout_pad_n12", "mixed_grid")
 
 
 # --------------------------------------------------------------------------
@@ -88,6 +89,7 @@ def test_child_saw_forced_device_count(child_result):
     assert child_result["cases"]["variants_n8"]["pad"] == 0
     assert child_result["cases"]["padded_n12"]["pad"] == 4
     assert child_result["cases"]["n64"]["pad"] == 0
+    assert child_result["cases"]["rollout_pad_n12"]["pad"] == 4
 
 
 @pytest.mark.slow
