@@ -23,6 +23,7 @@ the sweep uses the physical device counts).
 """
 from __future__ import annotations
 
+import gc
 import time
 
 import numpy as np
@@ -150,35 +151,57 @@ ROLLOUT_NS = (8, 64, 256)
 def _eager_once(duration: float, n: int) -> float:
     fl = build_fleet([_spec(k, duration) for k in range(n)],
                      fused_plan=True)
+    gc.collect()   # don't bill this run for the previous run's garbage
     t0 = time.perf_counter()
     fl.run()
     return time.perf_counter() - t0
 
 
-def _rollout_once(duration: float, n: int, window: int) -> float:
+# rollout execution modes benchmarked as separate snapshot cells;
+# "megakernel" runs interpret-mode Pallas on CPU (a validation cell —
+# only meaningful as a perf mode on real TPU hardware), so the sweep
+# times it at the smallest N only
+ROLLOUT_MODES = ("baseline", "on_device_server", "megakernel")
+_MODE_KW = {"baseline": {},
+            "on_device_server": {"on_device_server": True},
+            "megakernel": {"megakernel": True, "on_device_server": True}}
+
+
+def _rollout_once(duration: float, n: int, window: int,
+                  mode: str = "baseline"):
     fl = build_fleet([_spec(k, duration) for k in range(n)],
-                     fused_plan=True)
+                     fused_plan=True, **_MODE_KW[mode])
+    gc.collect()   # don't bill this run for the previous run's garbage
     t0 = time.perf_counter()
     fl.run(rollout=window)
-    return time.perf_counter() - t0
+    return time.perf_counter() - t0, fl
 
 
 def _rollout_roofline(duration: float, n: int, window: int,
-                      wall_per_window: float):
+                      wall_per_window: float, mode: str = "baseline",
+                      timed_fleet=None):
     """Compile (without running) one window step and derive the roofline
     attribution for it; `wall_per_window` is the measured seconds per
     dispatched window (host replay included — the gap the report
-    attributes covers the whole driver, not just the XLA executable)."""
+    attributes covers the whole driver, not just the XLA executable).
+    `timed_fleet` is the fleet object of a measured run: its rollout's
+    phase timers and outfeed byte counter become the host-side
+    attribution columns."""
     from repro.core.rollout import FleetRollout
     from repro.roofline.analysis import fleet_step_report
 
     fl = build_fleet([_spec(k, duration) for k in range(n)],
-                     fused_plan=True)
+                     fused_plan=True, **_MODE_KW[mode])
     ro = FleetRollout(fl, window)
     lowered, compiled = ro.aot()
+    extra = {}
+    timed_ro = getattr(timed_fleet, "_last_rollout", None)
+    if timed_ro is not None:
+        extra = {"host_replay_s": timed_ro.t_replay,
+                 "outfeed_bytes": float(timed_ro._ys_nbytes)}
     return fleet_step_report(lowered, compiled, n_sessions=n,
                              window=ro.window,
-                             wall_time_s=wall_per_window)
+                             wall_time_s=wall_per_window, **extra)
 
 
 def run_rollout(quick: bool = True, write: bool = True):
@@ -193,40 +216,61 @@ def run_rollout(quick: bool = True, write: bool = True):
     window = 3
     cells = []
     print(f"[fleet --rollout] eager vs rollout={window} "
-          f"(duration={duration:.0f}s, fused plan, medians of "
-          f"interleaved pairs)")
+          f"(duration={duration:.0f}s, fused plan, medians of adjacent "
+          f"eager/rollout pairs; modes: {', '.join(ROLLOUT_MODES)})")
     for n in ROLLOUT_NS:
-        reps = 2 if (quick and n >= 256) else 3
-        _eager_once(duration, n)        # warm both compile shapes
-        _rollout_once(duration, n, window)
-        t_e, t_r, ratios = [], [], []
-        for _ in range(reps):
-            te = _eager_once(duration, n)
-            tr = _rollout_once(duration, n, window)
-            t_e.append(te)
-            t_r.append(tr)
-            ratios.append(te / tr)
-        te = float(np.median(t_e))
-        tr = float(np.median(t_r))
-        ratio = float(np.median(ratios))
+        reps = 3
+        # the megakernel cell is interpret-mode Pallas on CPU —
+        # validation only, timed at the smallest N to bound the sweep
+        modes = [m for m in ROLLOUT_MODES
+                 if m != "megakernel" or n == min(ROLLOUT_NS)]
+        _eager_once(duration, n)        # warm every compile shape
+        for m in modes:
+            _rollout_once(duration, n, window, m)
         n_frames = int(duration * _spec(0, duration).fps)
         n_windows = -(-n_frames // window)
-        roof = _rollout_roofline(duration, n, window, tr / n_windows)
-        cells.append({
-            "n": n, "window": window, "duration_s": duration,
-            "eager_sessions_per_sec": n / te,
-            "rollout_sessions_per_sec": n / tr,
-            "median_ratio": ratio,
-            "roofline": roof,
-        })
-        print(f"[fleet --rollout] N={n}: eager {n / te:.2f} -> rollout "
-              f"{n / tr:.2f} sessions/s ({ratio:.2f}x), roofline LB "
-              f"{roof['per_session_tick_lb_us']:.1f} us/session-tick vs "
-              f"{roof['per_session_tick_wall_us']:.1f} measured "
-              f"({roof['bottleneck']}-bound, attainment "
-              f"{roof['roofline_attainment']:.1%})")
+        for m in modes:
+            # each mode gets its own ADJACENT eager/rollout pairs: the
+            # ratio of a pair is taken between back-to-back runs, so
+            # slowly-varying machine noise cancels inside the pair
+            # instead of drifting between one shared eager measurement
+            # and a rollout run several fleets later (the big modes
+            # churn ~100s of MB of outfeed, which is exactly the kind
+            # of allocator state that made split pairs noisy)
+            t_e, t_r, ratios = [], [], []
+            fleet_m = None
+            for _ in range(reps):
+                te_i = _eager_once(duration, n)
+                tr_i, fleet_m = _rollout_once(duration, n, window, m)
+                t_e.append(te_i)
+                t_r.append(tr_i)
+                ratios.append(te_i / tr_i)
+            te = float(np.median(t_e))
+            tr = float(np.median(t_r))
+            ratio = float(np.median(ratios))
+            roof = _rollout_roofline(duration, n, window, tr / n_windows,
+                                     m, fleet_m)
+            cells.append({
+                "n": n, "mode": m, "window": window,
+                "duration_s": duration,
+                "eager_sessions_per_sec": n / te,
+                "rollout_sessions_per_sec": n / tr,
+                "median_ratio": ratio,
+                "roofline": roof,
+            })
+            host = (f", host replay {roof['host_replay_s']:.2f}s"
+                    if "host_replay_s" in roof else "")
+            print(f"[fleet --rollout] N={n} {m}: eager {n / te:.2f} -> "
+                  f"rollout {n / tr:.2f} sessions/s ({ratio:.2f}x), "
+                  f"roofline LB {roof['per_session_tick_lb_us']:.1f} "
+                  f"us/session-tick vs "
+                  f"{roof['per_session_tick_wall_us']:.1f} measured "
+                  f"({roof['bottleneck']}-bound, attainment "
+                  f"{roof['roofline_attainment']:.1%}{host})")
+    headline = {c["n"]: c for c in cells if c["mode"] == "on_device_server"}
     doc = {
         "schema": BENCH_SCHEMA,
+        "kind": "fleet",
         "machine": machine_info(),
         "env": env_knobs(),
         "baseline": {"name": "pr5-eager-fleet-thumb",
@@ -234,13 +278,20 @@ def run_rollout(quick: bool = True, write: bool = True):
         "cells": cells,
         "summary": {
             "window": window,
+            "headline_mode": "on_device_server",
             "vs_pinned_eager": {
-                str(c["n"]): (c["rollout_sessions_per_sec"]
-                              / PINNED_EAGER_BASELINE[str(c["n"])])
-                for c in cells if str(c["n"]) in PINNED_EAGER_BASELINE},
-            "notes": "ratios are same-process medians of interleaved "
-                     "eager/rollout pairs; absolutes move with the "
-                     "runner, ratios gate CI (benchmarks.snapshot)",
+                str(n): (c["rollout_sessions_per_sec"]
+                         / PINNED_EAGER_BASELINE[str(n)])
+                for n, c in headline.items()
+                if str(n) in PINNED_EAGER_BASELINE},
+            "notes": "ratios are same-process medians of ADJACENT "
+                     "eager/rollout pairs (each mode paired with its "
+                     "own eager runs, gc.collect before every timed "
+                     "run), one cell per (n, mode); "
+                     "absolutes move with the runner, ratios gate CI "
+                     "(benchmarks.snapshot); the megakernel cell is "
+                     "interpret-mode Pallas on CPU (validation, not a "
+                     "perf claim)",
         },
     }
     if write:

@@ -15,7 +15,8 @@ import numpy as np
 from benchmarks.common import Row
 from repro.kernels.flash_attention import ops as fa_ops
 from repro.kernels.flash_decode import ops as fd_ops
-from repro.kernels.qp_codec.ops import qp_codec_frame, zeco_codec_frames
+from repro.kernels.qp_codec.ops import (qp_codec_frame, tick_codec_frames,
+                                        zeco_codec_frames)
 
 
 def _time(fn, *args, reps=3, **kw):
@@ -73,6 +74,57 @@ def run(quick: bool = True):
                     f"frames=4,blocks={4 * 32 * 32},"
                     "box_to_bits_one_vmem_pass"))
 
+    # tick megakernel: the rollout scan's whole per-tick client phase
+    # (surface -> strided-probe bisection -> quantize -> rate) emitting
+    # codec products instead of a reconstruction; 96x96 exercises the
+    # partial-patch one-hot upsample path
+    for hw in (256, 96):
+        fr = jax.random.uniform(key, (4, hw, hw))
+        us = _time(tick_codec_frames, fr, boxes, jnp.full((4,), 2),
+                   jnp.ones(4, bool), jnp.full((4,), 8e4),
+                   frame_hw=(hw, hw), probe_stride=2, interpret=True)
+        rows.append(Row(f"kernel.tick_megakernel.hw{hw}.interp", us,
+                        f"frames=4,blocks={4 * (hw // 8) ** 2},"
+                        "tick_products_one_vmem_pass"))
+
     for r in rows:
         print(f"[kernels] {r.csv()}")
     return rows
+
+
+def snapshot_doc(rows):
+    """Wrap bench rows in the committed-snapshot envelope
+    (BENCH_kernels.json; see benchmarks.snapshot)."""
+    from benchmarks.snapshot import BENCH_SCHEMA, env_knobs, machine_info
+    return {
+        "schema": BENCH_SCHEMA,
+        "kind": "kernels",
+        "machine": machine_info(),
+        "env": env_knobs(),
+        "rows": [{"name": r.name, "us_per_call": r.us,
+                  "derived": r.derived} for r in rows],
+        "notes": "interpret-mode CPU timings — validation figures, not "
+                 "perf claims; the snapshot gate checks row coverage "
+                 "only (benchmarks.snapshot.check_kernels_coverage)",
+    }
+
+
+def _main() -> None:
+    import argparse
+
+    from benchmarks.common import QUICK
+    from benchmarks.snapshot import KERNELS_SNAPSHOT_PATH, \
+        save_kernels_snapshot
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--write", action="store_true",
+                    help="write BENCH_kernels.json from this run")
+    args = ap.parse_args()
+    rows = run(QUICK)
+    if args.write:
+        save_kernels_snapshot(snapshot_doc(rows))
+        print(f"[kernels] snapshot -> {KERNELS_SNAPSHOT_PATH}")
+
+
+if __name__ == "__main__":
+    _main()

@@ -22,9 +22,9 @@ import sys
 from typing import Dict, List, Optional
 
 BENCH_SCHEMA = "artic.bench.snapshot/v1"
-SNAPSHOT_PATH = os.path.join(
-    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-    "BENCH_fleet.json")
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SNAPSHOT_PATH = os.path.join(_ROOT, "BENCH_fleet.json")
+KERNELS_SNAPSHOT_PATH = os.path.join(_ROOT, "BENCH_kernels.json")
 REGRESSION_TOL = 0.10
 
 # sessions/sec of the eager (per-tick) fleet on the SAME workload the
@@ -93,6 +93,32 @@ def validate_snapshot(doc: Dict) -> None:
     need(isinstance(doc.get("summary"), dict), "summary")
 
 
+def validate_kernels_snapshot(doc: Dict) -> None:
+    """Structural validation of a BENCH_kernels.json document — the same
+    `artic.bench.snapshot/v1` envelope (schema/machine/env) with a
+    `rows` list of kernel-microbench CSV rows instead of sweep cells."""
+    def need(cond, path):
+        if not cond:
+            raise ValueError(f"invalid kernels snapshot: {path}")
+
+    need(isinstance(doc, dict), "document must be an object")
+    need(doc.get("schema") == BENCH_SCHEMA,
+         f"schema must be {BENCH_SCHEMA!r} (got {doc.get('schema')!r})")
+    need(doc.get("kind") == "kernels", "kind must be 'kernels'")
+    need(isinstance(doc.get("machine"), dict), "machine")
+    for k in ("platform", "python", "jax", "devices"):
+        need(k in doc["machine"], f"machine.{k}")
+    need(isinstance(doc.get("env"), dict), "env")
+    rows = doc.get("rows")
+    need(isinstance(rows, list) and rows, "rows must be non-empty")
+    for i, r in enumerate(rows):
+        need(isinstance(r, dict), f"rows[{i}]")
+        need(isinstance(r.get("name"), str) and r["name"], f"rows[{i}].name")
+        need(float(r.get("us_per_call", -1.0)) >= 0.0,
+             f"rows[{i}].us_per_call >= 0")
+        need(isinstance(r.get("derived"), str), f"rows[{i}].derived")
+
+
 def load_snapshot(path: str = SNAPSHOT_PATH) -> Dict:
     with open(path) as f:
         doc = json.load(f)
@@ -107,43 +133,83 @@ def save_snapshot(doc: Dict, path: str = SNAPSHOT_PATH) -> None:
         f.write("\n")
 
 
+def load_kernels_snapshot(path: str = KERNELS_SNAPSHOT_PATH) -> Dict:
+    with open(path) as f:
+        doc = json.load(f)
+    validate_kernels_snapshot(doc)
+    return doc
+
+
+def save_kernels_snapshot(doc: Dict,
+                          path: str = KERNELS_SNAPSHOT_PATH) -> None:
+    validate_kernels_snapshot(doc)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def _cell_key(c: Dict):
+    """Gate key: (n, mode).  Pre-mode snapshots carried one implicit
+    cell per N; those read as mode='baseline' so old and new documents
+    stay comparable."""
+    return int(c["n"]), str(c.get("mode", "baseline"))
+
+
 def check_regression(committed: Dict, fresh: Dict,
                      tol: float = REGRESSION_TOL) -> List[str]:
     """Compare the fresh sweep's rollout-vs-eager ratios against the
-    committed snapshot cell by cell.  Returns a list of human-readable
-    failures (empty == gate passes).  Machine-dependent absolutes are
-    reported but never gated on."""
+    committed snapshot cell by cell, keyed on (n, mode).  Returns a list
+    of human-readable failures (empty == gate passes).
+    Machine-dependent absolutes are reported but never gated on."""
     failures = []
-    old = {int(c["n"]): c for c in committed["cells"]}
+    old = {_cell_key(c): c for c in committed["cells"]}
     for c in fresh["cells"]:
-        n = int(c["n"])
-        if n not in old:
+        key = _cell_key(c)
+        if key not in old:
             continue
-        was, now = float(old[n]["median_ratio"]), float(c["median_ratio"])
+        was = float(old[key]["median_ratio"])
+        now = float(c["median_ratio"])
         if now < was * (1.0 - tol):
             failures.append(
-                f"N={n}: rollout/eager ratio regressed "
+                f"N={key[0]} mode={key[1]}: rollout/eager ratio regressed "
                 f"{was:.2f} -> {now:.2f} (>{tol:.0%} drop)")
     return failures
+
+
+def check_kernels_coverage(committed: Dict, fresh_rows) -> List[str]:
+    """Kernel-microbench gate: every committed row name must still be
+    produced by a fresh `bench_kernels.run()`.  Interpret-mode CPU
+    timings are machine noise, so (unlike the fleet sweep's in-process
+    ratios) they are recorded but never compared — the gate catches
+    kernels silently dropping out of the bench, not slow runners."""
+    fresh_names = {r.name for r in fresh_rows}
+    return [f"kernel row {r['name']!r} missing from fresh bench"
+            for r in committed["rows"] if r["name"] not in fresh_names]
 
 
 def _main() -> None:
     import argparse
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--check", action="store_true",
-                    help="re-run the rollout sweep (quick) and fail if "
-                         "it regresses vs the committed BENCH_fleet.json")
+                    help="re-run the rollout sweep + kernel bench (quick) "
+                         "and fail on regression vs the committed "
+                         "BENCH_fleet.json / BENCH_kernels.json")
     ap.add_argument("--validate", action="store_true",
-                    help="only validate the committed snapshot's schema")
+                    help="only validate the committed snapshots' schemas")
     args = ap.parse_args()
     committed = load_snapshot()
     print(f"[snapshot] {SNAPSHOT_PATH}: schema {committed['schema']} OK, "
           f"{len(committed['cells'])} cells")
+    kernels = load_kernels_snapshot()
+    print(f"[snapshot] {KERNELS_SNAPSHOT_PATH}: schema "
+          f"{kernels['schema']} OK, {len(kernels['rows'])} rows")
     if args.validate or not args.check:
         return
     from benchmarks.bench_fleet import run_rollout
+    from benchmarks.bench_kernels import run as run_kernels
     fresh = run_rollout(write=False)
     failures = check_regression(committed, fresh)
+    failures += check_kernels_coverage(kernels, run_kernels(quick=True))
     for f in failures:
         print(f"[snapshot] REGRESSION {f}")
     if failures:

@@ -273,9 +273,27 @@ class Fleet:
 
     def __init__(self, sessions: Sequence[FleetSession], *,
                  fused_plan: bool = False, profile: bool = False,
-                 mesh=None):
+                 mesh=None, megakernel: bool = False,
+                 on_device_server: bool = False):
         if not sessions:
             raise ValueError("fleet needs at least one session")
+        # rollout-mode switches (repro.core.rollout reads them; the eager
+        # tick loop ignores both):
+        # * megakernel=True routes the scan's per-tick encode through the
+        #   fused Pallas tick kernel (kernels.qp_codec.ops.tick_codec_frames)
+        #   — a fast-math tier, NOT covered by the bit-exactness contract;
+        # * on_device_server=True computes the server-phase ingestion
+        #   numerics (glyph stats + card boxes) in-graph at the send tick
+        #   and drops the decoded-frame outfeed; the host replays only
+        #   heap/metrics bookkeeping from the stats outputs (bit-exact).
+        self.megakernel = bool(megakernel)
+        self.on_device_server = bool(on_device_server)
+        if self.megakernel and mesh is not None:
+            raise NotImplementedError(
+                "megakernel=True is single-device only: the Pallas tick "
+                "kernel is not shard_map-wrapped yet — drop the mesh or "
+                "the megakernel flag")
+        self._last_rollout = None  # set by _run_rollout (bench introspection)
         self.specs = list(sessions)
         cfg0 = self.specs[0].cfg
         hw0 = (self.specs[0].scene.h, self.specs[0].scene.w)
@@ -528,6 +546,7 @@ class Fleet:
         from repro.core.rollout import FleetRollout
 
         ro = FleetRollout(self, window)
+        self._last_rollout = ro  # benches read the phase timers off this
         i0 = 0
         while i0 < n_frames:
             w = min(ro.window, n_frames - i0)

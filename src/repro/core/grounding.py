@@ -17,6 +17,8 @@ Three grounding sources, all producing TimedBoxes feedback packets:
 from __future__ import annotations
 
 import dataclasses
+import functools
+import math
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -59,6 +61,16 @@ class TrackedRegion:
         return np.asarray(b1, np.float64)[None, :] + d[:, None] * shift
 
 
+@functools.lru_cache(maxsize=16)
+def _horizon_offsets(horizon: float, steps: int) -> np.ndarray:
+    """`np.linspace(0, horizon, steps)`, cached: every feedback emission
+    uses the same grid, and linspace itself costs ~20us per call — a
+    measurable slice of the per-tick server phase at fleet scale."""
+    out = np.linspace(0.0, horizon, steps)
+    out.setflags(write=False)
+    return out
+
+
 class TrajectoryPredictor:
     """Matches observations to tracks (nearest center) and emits TimedBoxes."""
 
@@ -72,7 +84,7 @@ class TrajectoryPredictor:
             best, best_d = None, self.match_dist
             for tr in self.tracks:
                 tc = _center(tr.history[-1][1])
-                d = float(np.hypot(c[0] - tc[0], c[1] - tc[1]))
+                d = math.hypot(c[0] - tc[0], c[1] - tc[1])
                 if d < best_d:
                     best, best_d = tr, d
             if best is None:
@@ -88,7 +100,7 @@ class TrajectoryPredictor:
         """Predicted boxes for `steps` future timestamps covering horizon,
         emitted directly in the stacked (K, B, 4) array format (one
         constant-velocity extrapolation op across every track)."""
-        times = t + np.linspace(0.0, horizon, steps)
+        times = t + _horizon_offsets(horizon, steps)
         n = len(self.tracks)
         if n == 0:
             return TimedBoxes(times=times,
@@ -187,6 +199,106 @@ def detect_cards_batch(frames: np.ndarray, min_size: int = 8,
         out.append(_boxes_from_mask(
             masks[m], _merge_runs(sr[b0:b1], er[b0:b1] - 1), min_size))
     return out
+
+
+# --------------------------------------------------------------------------
+# Traceable detect_cards (the on-device rollout's server grounding)
+# --------------------------------------------------------------------------
+# The rollout scan (repro.core.rollout) computes card boxes in-graph from
+# the decoded frames, so the per-window device->host frame transfer and
+# the host-side numpy detector disappear from the replay.  The port must
+# be BIT-EXACT vs `detect_cards` on the same frame: box coordinates are
+# integer-valued (exact in float32) and the comparisons are integer
+# arithmetic, so exactness reduces to producing the same runs in the
+# same order.
+#
+# Fixed capacities (a traced program cannot return ragged lists):
+# * runs along an axis of length L are separated by > min_gap absent
+#   positions, so at most `run_capacity(L)` runs exist — the nonzero
+#   extraction pads to that bound;
+# * candidate boxes are compacted (order-preserving) into `box_cap`
+#   rows with a count + overflow flag; the host raises on overflow
+#   instead of silently truncating.
+
+def run_capacity(length: int, min_gap: int = 4) -> int:
+    """Upper bound on the number of projection runs along an axis of
+    `length` pixels: consecutive runs' starts are >= min_gap + 1 apart."""
+    return (length + min_gap) // (min_gap + 1)
+
+
+def _runs_last(present, cap: int, min_gap: int = 4):
+    """Bridged runs of True along the LAST axis of a bool array.
+
+    A position starts a run iff it is present and none of the previous
+    `min_gap` positions are (mirrors `split_runs`: a break needs a gap
+    > min_gap between consecutive present indices); ends symmetrically.
+    Returns (starts, ends) int32 arrays of shape (..., cap), ascending,
+    padded with L — padded slots produce zero-span (invalid) runs."""
+    import jax.numpy as jnp
+
+    L = present.shape[-1]
+    pad = [(0, 0)] * (present.ndim - 1) + [(min_gap, min_gap)]
+    pp = jnp.pad(present, pad)
+    prev_any = jnp.zeros_like(present)
+    next_any = jnp.zeros_like(present)
+    for s in range(1, min_gap + 1):
+        prev_any = prev_any | pp[..., min_gap - s: min_gap - s + L]
+        next_any = next_any | pp[..., min_gap + s: min_gap + s + L]
+    ar = jnp.arange(L, dtype=jnp.int32)
+    fill = jnp.int32(L)
+    s_idx = jnp.sort(jnp.where(present & ~prev_any, ar, fill),
+                     axis=-1)[..., :cap]
+    e_idx = jnp.sort(jnp.where(present & ~next_any, ar, fill),
+                     axis=-1)[..., :cap]
+    return s_idx, e_idx
+
+
+def detect_cards_core(frame, *, min_size: int = 8, bright: float = 0.75,
+                      box_cap: int = 16, min_gap: int = 4):
+    """Traceable `detect_cards` for ONE (H, W) frame.
+
+    Returns (boxes (box_cap, 4) float32, count int32, overflow bool);
+    rows [0, count) equal `detect_cards(frame)` in order (row-run-major,
+    then column runs ascending).  `overflow` flags more than box_cap
+    valid boxes — the caller must treat the result as unusable then."""
+    import jax.numpy as jnp
+
+    H, W = frame.shape
+    r_cap = run_capacity(H, min_gap)
+    c_cap = run_capacity(W, min_gap)
+    mask = frame > bright
+    enough = jnp.sum(mask.astype(jnp.int32)) >= min_size * min_size
+    r0s, r1s = _runs_last(mask.any(axis=1), r_cap, min_gap)      # (r_cap,)
+    rows = jnp.arange(H, dtype=jnp.int32)
+    in_run = ((rows[None, :] >= r0s[:, None])
+              & (rows[None, :] <= r1s[:, None]))                 # (r_cap, H)
+    # any(mask[r0:r1+1, w]) as an f32 GEMM: 0/1 products sum to integer
+    # counts <= H (exact in float32), so `> 0` is exactly the boolean
+    # any() — the dot hits the tuned GEMM path on CPU where the
+    # (r_cap, H, W) broadcast-and-reduce lowers to a slow scalar loop
+    # (this runs per scan tick in the on-device rollout's server phase)
+    col_present = jnp.dot(in_run.astype(jnp.float32),
+                          mask.astype(jnp.float32)) > 0          # (r_cap, W)
+    c0s, c1s = _runs_last(col_present, c_cap, min_gap)   # (r_cap, c_cap)
+    row_ok = (r1s - r0s) >= min_size                             # (r_cap,)
+    col_ok = (c0s < W) & ((c1s - c0s) >= min_size)
+    valid = (enough & row_ok[:, None] & col_ok).reshape(-1)
+    cand = jnp.stack(
+        [jnp.broadcast_to(r0s[:, None], (r_cap, c_cap)), c0s,
+         jnp.broadcast_to(r1s[:, None], (r_cap, c_cap)), c1s],
+        axis=-1).astype(jnp.float32).reshape(-1, 4)
+    rank = jnp.cumsum(valid.astype(jnp.int32)) - 1
+    count = jnp.sum(valid.astype(jnp.int32))
+    slot = jnp.where(valid, rank, box_cap)  # rank >= cap also drops
+    # compaction as a one-hot f32 matmul instead of a scatter (XLA CPU
+    # scatters lower to a serial loop, ~5x slower here); slot values are
+    # unique, so each boxes row sums exactly one cand row, and the
+    # integer-valued coordinates are exact in float32
+    onehot = (slot[None, :]
+              == jnp.arange(box_cap, dtype=jnp.int32)[:, None]
+              ).astype(jnp.float32)                      # (box_cap, rc*cc)
+    boxes = jnp.dot(onehot, cand)
+    return boxes, jnp.minimum(count, box_cap), count > box_cap
 
 
 # --------------------------------------------------------------------------

@@ -3,10 +3,11 @@ math as jitted jnp ops.
 
 `OracleServer.ingest` (serial) and the fleet's `_ingest_batched` used to
 carry two NumPy copies of the threshold-cell-means arithmetic; both now
-funnel their patches through `glyph_stats_batch`, one jitted kernel per
-glyph geometry (static `cell`).  The on-device rollout
-(repro.core.rollout) ingests through the same fleet path, so the ported
-kernel is what every execution mode's server sees.
+funnel their patches through `glyph_stats_batch`, one compiled kernel
+per glyph geometry (static `cell`).  The on-device rollout
+(repro.core.rollout) inlines the same arithmetic into its scan body via
+`glyph_stats_core`, so the ported kernel is what every execution mode's
+server sees.
 
 Determinism contract (the fleet/rollout parity requirement): every
 reduction is either exactly order-independent (min / max / the 12-term
@@ -18,11 +19,21 @@ exactly as in `scenes.decode_glyph`, with the final margin product
 promoted to float64 (the serial path's python-float multiply).
 `scenes.decode_glyph` itself is untouched — the DeViBench degradation
 grid keeps its pure-NumPy reference path.
+
+x64 handling: the float64 promotion needs an `enable_x64()` scope, but
+only while TRACING — a compiled executable keeps its dtypes regardless
+of the ambient config.  `glyph_stats_batch` therefore AOT-compiles one
+executable per (cell, padded batch) under the context and caches it;
+steady-state calls invoke the cached executable directly and never
+re-enter the context manager.  (Skipping the context around a plain
+`jax.jit` call would NOT work: `jax_enable_x64` is part of the jit
+cache key, so the call would silently retrace with the promotion
+demoted to float32.)
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,11 +43,14 @@ from jax.experimental import enable_x64
 from repro.video.scenes import _PAYLOAD_IDX, _PAYLOAD_WEIGHTS, GLYPH_GRID
 
 
-@functools.partial(jax.jit, static_argnames=("cell",))
-def _glyph_stats(patches: jnp.ndarray, cell: int
-                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def glyph_stats_core(patches: jnp.ndarray, cell: int
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """(B, S, S) float32 patches of one glyph geometry (S = 4*cell) ->
-    (codes (B,) int64, margins (B,) float64)."""
+    (codes (B,) int64, margins (B,) float64).
+
+    Pure traceable jnp — no jit, no x64 context: the caller decides the
+    staging (the AOT cache below, or inlining into the rollout's
+    enable_x64-traced scan body)."""
     g = GLYPH_GRID
     p = patches[:, :g * cell, :g * cell].reshape(-1, g, cell, g, cell)
     # cell means: fixed-order elementwise adds over the cell x cell
@@ -63,22 +77,44 @@ def _glyph_stats(patches: jnp.ndarray, cell: int
     return codes, margin64
 
 
+# back-compat jitted alias (tests and callers that manage x64 themselves)
+_glyph_stats = jax.jit(glyph_stats_core, static_argnames=("cell",))
+
+# AOT-compiled executables keyed by (cell, padded patch shape); a
+# compiled executable is config-independent, so steady-state calls skip
+# enable_x64 entirely.
+_COMPILED: Dict[Tuple[int, Tuple[int, ...]], "jax.stages.Compiled"] = {}
+
+
+def _compiled_glyph_stats(cell: int, shape: Tuple[int, ...]):
+    key = (cell, shape)
+    fn = _COMPILED.get(key)
+    if fn is None:
+        with enable_x64():
+            fn = (jax.jit(functools.partial(glyph_stats_core, cell=cell))
+                  .lower(jax.ShapeDtypeStruct(shape, jnp.float32))
+                  .compile())
+        _COMPILED[key] = fn
+    return fn
+
+
 def glyph_stats_batch(patches: np.ndarray, cell: int
                       ) -> Tuple[np.ndarray, np.ndarray]:
     """Host entry: stack of same-geometry patches -> (codes int64,
-    margins float64) NumPy arrays.  Traced under enable_x64 so the
-    margin promotion and the weight sum really run in 64-bit (the
-    context only matters at trace time; later calls reuse the
-    executable).  The batch is padded to the next power of two so the
-    per-(cell, bucket) executable count stays logarithmic in the tick's
-    ingestion load — per-record results are batch-size-invariant, so
-    the zero pad rows are simply discarded."""
+    margins float64) NumPy arrays.  Compiled once per (cell, padded
+    batch) under enable_x64 so the margin promotion and the weight sum
+    really run in 64-bit; steady-state calls hit the `_COMPILED` cache
+    and never re-enter the context manager (see the module docstring).
+    The batch is padded to the next power of two so the executable
+    count stays logarithmic in the tick's ingestion load — per-record
+    results are batch-size-invariant, so the zero pad rows are simply
+    discarded."""
     patches = np.asarray(patches, np.float32)
     b = patches.shape[0]
     bp = 1 << max(b - 1, 0).bit_length()
     if bp != b:
         patches = np.concatenate(
             [patches, np.zeros((bp - b,) + patches.shape[1:], np.float32)])
-    with enable_x64():
-        codes, margins = _glyph_stats(jnp.asarray(patches), int(cell))
+    fn = _compiled_glyph_stats(int(cell), patches.shape)
+    codes, margins = fn(patches)
     return np.asarray(codes)[:b], np.asarray(margins)[:b]

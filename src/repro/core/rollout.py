@@ -21,31 +21,66 @@ remains on the host (server ingestion, feedback emission, QA, the event
 heaps) is *replayed* after each window from the scan outputs, in the
 exact per-tick order the eager loop runs it.
 
-Feedback turnaround and the depth-1 carry slot
-----------------------------------------------
+Feedback turnaround and the depth-S carry slots
+-----------------------------------------------
 Server->client feedback closes the loop: an emission at tick t is
 delivered at t + inference_delay + downlink_delay and changes the
 client's confidence (hence ABR and the ZeCo trigger) from the delivery
 tick on.  The window length is clamped to
 
-    W_max = max(1, min(floor(turnaround / dt), floor(period / dt)))
+    W_max = max(1, floor(turnaround / dt))
 
-(`max_window`), which buys two invariants, both load-bearing:
+(`max_window`): an emission during a window can never be due within
+that same window (turnaround > (W-1) * dt), so emissions stay
+host-side in the replay.  The feedback PERIOD no longer clamps the
+window — the in-carry delivery buffer is a depth-S slot ring, with
 
-* an emission during a window can never be due within that same window
-  (turnaround > (W-1) * dt), so emissions can stay host-side in the
-  replay; and
-* at most ONE pending feedback packet per session becomes due inside
-  any window (consecutive emissions are >= feedback_period apart and a
-  window spans W * dt <= period), so the in-carry delivery buffer needs
-  depth 1.
+    S = ceil(W * dt / feedback_period)
 
-That depth-1 slot (`slot_*` carry leaves) is the fixed-latency delivery
-ring: before each window the host pops the (at most one) due entry per
-session off the downlink heap into the slot; in-graph, the tick whose
-timestamp passes `slot_t` applies the confidence and rewrites the
-session's ZeCo feedback-context rows, exactly like
-`session.deliver_feedback` + `ZeCoStreamBank.on_feedback`.
+slots per session (maximized over members): consecutive emissions are
+>= feedback_period apart, so at most S pending packets can become due
+inside any W-tick window.  Before each window the host pops the due
+entries per session off the downlink heap into the slots in pop order
+(ascending due time); in-graph, each tick applies every slot whose
+`slot_t` has passed, in slot order — confidence and the ZeCo
+feedback-context rows are overwritten sequentially, exactly like the
+eager `session.deliver_feedback` loop (last due packet wins).  With
+the default config (period 0.5 s, turnaround 0.3 s, dt 0.1 s) S == 1
+and both window and carry layout are unchanged from the depth-1
+scheme, so the default path's bit-exactness contract is untouched.
+
+On-device server phase (`Fleet(..., on_device_server=True)`)
+------------------------------------------------------------
+By default the scan outfeeds the decoded (W, N, H, W) frame batch and
+the host replays the full server phase — card detection, glyph
+decoding, memory/predictor updates — from the frames.  In on-device
+mode the scan instead computes the ingestion NUMERICS in-graph at the
+send tick (they depend only on the decoded frame and its capture
+index, not on the arrival tick): per-object glyph codes/margins
+(`ingest.glyph_stats_core`, geometry-unrolled with static per-row
+masks) and the contrast-based card boxes
+(`grounding.detect_cards_core`, bit-exact port of `detect_cards`).
+The ys carry those small stats arrays INSTEAD of the decoded frames,
+so the dominant device->host transfer and the host-side detector /
+glyph dispatches disappear; the host replay pushes lightweight stats
+records through the same arrival heaps and applies them on pop
+(`_apply_stats`), keeping feedback emission (Platt-calibrated
+confidence — host-only by the 1-ulp `exp` divergence), QA and all
+heap/metrics bookkeeping host-replayed and therefore bit-exact.
+
+On-device composite render
+--------------------------
+Frame INPUT is symmetric to the stats outfeed: when every member's
+scene is the procedural `Scene` renderer, the scan synthesizes frames
+in-graph (`_render_frames`) from per-(session, object, epoch)
+card+glyph composite patches built host-side with `Scene.render`'s own
+numpy expressions and uploaded once as consts, plus the background
+stack.  The host render loop and the (W, N, H, W) per-window frame
+upload both vanish — the xs shrink to timestamps, clamped object
+positions and code-epoch indices — while bit-exactness holds because
+the in-graph stamp only selects the host renderer's float32 bits.
+Fleets with any non-`Scene` member fall back to host-rendered frame
+xs.
 
 Sharding
 --------
@@ -58,7 +93,9 @@ communication, so shard boundaries cannot perturb values.
 """
 from __future__ import annotations
 
+import functools
 import heapq
+import time
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -77,6 +114,7 @@ from repro.distributed.sharding import shard_map_compat
 from repro.net.cc import BBRBank, GCCBank, RATE_MAX, RATE_MIN
 from repro.net.channel import ACK_WINDOW, MTU_BITS, masked_mean_latency
 from repro.video import codec
+from repro.video.scenes import GLYPH_GRID, Scene, glyph_pattern
 
 
 # Compiled window functions shared across FleetRollout instances, keyed
@@ -110,15 +148,26 @@ def _no_fma(x):
 
 
 def max_window(specs, fps: float) -> int:
-    """Largest window honouring the depth-1 feedback-slot invariants
-    (see the module docstring) across every member's delay/period."""
+    """Largest window honouring the in-window-emission invariant (see
+    the module docstring) across every member's turnaround.  The
+    feedback period no longer bounds the window — the depth-S slot ring
+    absorbs multiple due deliveries per window."""
     dt = 1.0 / fps
     w = 10 ** 9
     for s in specs:
         turnaround = s.cfg.inference_delay + s.cfg.downlink_delay
-        w = min(w, int(turnaround / dt + 1e-9),
-                int(s.cfg.feedback_period / dt + 1e-9))
+        w = min(w, int(turnaround / dt + 1e-9))
     return max(1, w)
+
+
+def slot_depth(specs, fps: float, window: int) -> int:
+    """Feedback-slot ring depth for a `window`-tick scan: consecutive
+    emissions per session are >= feedback_period apart, so at most
+    ceil(window * dt / period) can come due inside one window."""
+    dt = 1.0 / fps
+    return max(1, max(
+        int(np.ceil(window * dt / s.cfg.feedback_period - 1e-9))
+        for s in specs))
 
 
 class FleetRollout:
@@ -142,6 +191,7 @@ class FleetRollout:
         w_max = max_window(f.specs, cfg0.fps)
         self.window = w_max if window is None else max(1, min(int(window),
                                                               w_max))
+        self._slot_depth = slot_depth(f.specs, cfg0.fps, self.window)
         n = f.n_pad
         self.n = n
         if f.bank._send_times or f.bank.now != 0.0:
@@ -165,6 +215,55 @@ class FleetRollout:
         self._patch, self._mu = z.patch, z.mu
         self._q_min, self._q_max = z.q_min, z.q_max
         self._probe = f._probe_stride
+        self._megakernel = bool(f.megakernel)
+        self._on_device = bool(f.on_device_server)
+        if self._megakernel and f.mesh is not None:
+            raise NotImplementedError(
+                "megakernel=True is single-device only (no shard_map "
+                "lowering for the Pallas tick kernel); drop the mesh or "
+                "the flag")
+        # on-device server phase: static object geometry for the in-scan
+        # glyph/card stats (positions are a precomputed xs input — the
+        # constant-velocity trajectories are known host-side)
+        self._card_cap = 16
+        cells = sorted({obj.cell for s in f.specs
+                        for obj in s.scene.objects})
+        self._geo_cells = tuple(cells)
+        self._o_max = max([len(s.scene.objects) for s in f.specs] + [1])
+        # on-device composite render: frames are synthesized IN-GRAPH
+        # from per-(session, object, epoch) composite patches stamped on
+        # the background stack (see _render_frames), so neither the host
+        # render loop nor the (W, N, H, W) frame upload happens at all.
+        # Only the procedural `Scene` renderer is portable this way;
+        # anything else falls back to host-rendered frame xs.
+        self._device_render = all(
+            type(s.scene) is Scene
+            and (s.scene.h, s.scene.w) == self._frame_hw
+            for s in f.specs)
+        if self._device_render:
+            self._rd_period = np.zeros(n, np.int64)
+            for k, s in enumerate(f.specs):
+                self._rd_period[k] = s.scene.code_period_frames or 0
+        if self._on_device or self._device_render:
+            o = self._o_max
+            self._obj_pos0 = np.zeros((n, o, 2))
+            self._obj_vel = np.zeros((n, o, 2))
+            self._obj_hi = np.zeros((n, o, 2), np.int64)
+            self._geo_masks = {c: np.zeros((n, o), bool)
+                               for c in self._geo_cells}
+            for k, s in enumerate(f.specs):
+                for oi, obj in enumerate(s.scene.objects):
+                    self._obj_pos0[k, oi] = obj.pos0
+                    self._obj_vel[k, oi] = obj.vel
+                    self._obj_hi[k, oi] = (s.scene.h - obj.size,
+                                           s.scene.w - obj.size)
+                    self._geo_masks[obj.cell][k, oi] = True
+        # wall-clock attribution for the roofline/bench reports: device
+        # dispatch+outfeed vs host replay, plus the ys transfer volume
+        self.t_render = 0.0
+        self.t_dispatch = 0.0
+        self.t_replay = 0.0
+        self._ys_nbytes = 0
 
         gcc = next((b for _, b in f._cc_groups if isinstance(b, GCCBank)),
                    None)
@@ -203,7 +302,7 @@ class FleetRollout:
             if s.cfg.use_recap:
                 abr_tau[k] = s.cfg.tau
         z = f.zeco
-        return {
+        out = {
             "tr_concat": np.asarray(f.bank.bank.concat, np.float64),
             "tr_off": np.asarray(f.bank.bank.offsets, np.int64),
             "tr_len": np.asarray(f.bank.bank.lengths, np.int64),
@@ -222,6 +321,56 @@ class FleetRollout:
             "z_release": z.release_bps.copy(),
             "z_tau": z.tau.copy(),
         }
+        if self._on_device:
+            # (n, O_max) bool masks selecting which (session, object)
+            # rows carry each glyph geometry — per-session rows, so the
+            # shard_map specs split them on the session axis like every
+            # other (n,)-leading const
+            for c, m in self._geo_masks.items():
+                out[f"geo_{c}"] = m
+        if self._device_render:
+            out.update(self._render_consts())
+        return out
+
+    def _render_consts(self) -> Dict[str, np.ndarray]:
+        """Background stack + pre-composed card+glyph patches for the
+        in-graph render.  Each (session, object, epoch) composite is the
+        uncropped (size + 2*pad)^2 region `Scene.render` would stamp —
+        0.9 card border, `0.15 + 0.7 * g` glyph interior — built with
+        the SAME numpy expressions on the same float32 buffers, so the
+        bits the scan gathers out of it are the bits the host renderer
+        would have written.  Epochs roll every `code_period_frames`, so
+        a whole run needs at most epoch(n_frames - 1) + 1 composites:
+        a few MB uploaded once, vs ~H*W*4 bytes per session-tick of
+        frame xs."""
+        f, n, o = self.fleet, self.n, self._o_max
+        hh, ww = self._frame_hw
+        cfg0 = f.specs[0].cfg
+        n_frames = int(cfg0.duration * cfg0.fps)
+        e_max, sc_max = 1, 1
+        for s in f.specs:
+            e_max = max(e_max, s.scene.epoch(max(n_frames - 1, 0)) + 1)
+            for obj in s.scene.objects:
+                sc_max = max(sc_max,
+                             obj.size + 2 * max(obj.cell // 2, 2))
+        bg = np.zeros((n, hh, ww), np.float32)
+        comp = np.zeros((n, o, e_max, sc_max, sc_max), np.float32)
+        size = np.zeros((n, o), np.int32)
+        pad = np.zeros((n, o), np.int32)
+        valid = np.zeros((n, o), bool)
+        for k, s in enumerate(f.specs):
+            bg[k] = s.scene._bg
+            for oi, obj in enumerate(s.scene.objects):
+                sz, pd = obj.size, max(obj.cell // 2, 2)
+                size[k, oi], pad[k, oi] = sz, pd
+                valid[k, oi] = True
+                for e in range(e_max):
+                    g = glyph_pattern(obj.code_at(e), obj.cell)
+                    patch = comp[k, oi, e]
+                    patch[:sz + 2 * pd, :sz + 2 * pd] = 0.9
+                    patch[pd:pd + sz, pd:pd + sz] = 0.15 + 0.7 * g
+        return {"rd_bg": bg, "rd_comp": comp, "rd_size": size,
+                "rd_pad": pad, "rd_valid": valid}
 
     def _init_carry(self) -> Dict[str, np.ndarray]:
         f, n = self.fleet, self.n
@@ -266,16 +415,16 @@ class FleetRollout:
         }
 
     def _empty_slots(self) -> Dict[str, np.ndarray]:
-        n = self.n
+        n, S = self.n, self._slot_depth
         return {
-            "slot_t": np.full(n, np.inf),
-            "slot_conf": np.zeros(n, np.float64),
-            "slot_has": np.zeros(n, bool),
-            "slot_len": np.zeros(n, np.int32),
-            "slot_times": np.full((n, self._kcap), np.inf),
-            "slot_boxes": np.zeros((n, self._kcap, self._bcap, 4),
+            "slot_t": np.full((n, S), np.inf),
+            "slot_conf": np.zeros((n, S), np.float64),
+            "slot_has": np.zeros((n, S), bool),
+            "slot_len": np.zeros((n, S), np.int32),
+            "slot_times": np.full((n, S, self._kcap), np.inf),
+            "slot_boxes": np.zeros((n, S, self._kcap, self._bcap, 4),
                                    np.float32),
-            "slot_counts": np.zeros((n, self._kcap), np.int32),
+            "slot_counts": np.zeros((n, S, self._kcap), np.int32),
         }
 
     # ------------------------------------------------------------------
@@ -429,19 +578,27 @@ class FleetRollout:
         i = x["idx"].astype(jnp.int64)
         ack = self._ack_stats(carry, i)
 
-        # -- feedback delivery from the depth-1 slot -------------------
-        due = carry["slot_t"] <= t
-        conf = jnp.where(due, carry["slot_conf"], carry["conf"])
-        ctx = due & carry["slot_has"]
-        z_hasfb = carry["z_hasfb"] | ctx
-        z_times = jnp.where(ctx[:, None], carry["slot_times"],
-                            carry["z_times"])
-        z_boxes = jnp.where(ctx[:, None, None, None], carry["slot_boxes"],
-                            carry["z_boxes"])
-        z_counts = jnp.where(ctx[:, None], carry["slot_counts"],
-                             carry["z_counts"])
-        z_len = jnp.where(ctx, carry["slot_len"], carry["z_len"])
-        slot_t = jnp.where(due, jnp.inf, carry["slot_t"])
+        # -- feedback delivery from the depth-S slot ring --------------
+        # slots are filled in ascending due time, so applying them in
+        # slot order reproduces the eager deliver_feedback pop order
+        # (last due packet wins the conf/context overwrite)
+        conf = carry["conf"]
+        z_hasfb = carry["z_hasfb"]
+        z_times, z_boxes = carry["z_times"], carry["z_boxes"]
+        z_counts, z_len = carry["z_counts"], carry["z_len"]
+        for s in range(self._slot_depth):
+            due = carry["slot_t"][:, s] <= t
+            conf = jnp.where(due, carry["slot_conf"][:, s], conf)
+            ctx = due & carry["slot_has"][:, s]
+            z_hasfb = z_hasfb | ctx
+            z_times = jnp.where(ctx[:, None], carry["slot_times"][:, s],
+                                z_times)
+            z_boxes = jnp.where(ctx[:, None, None, None],
+                                carry["slot_boxes"][:, s], z_boxes)
+            z_counts = jnp.where(ctx[:, None], carry["slot_counts"][:, s],
+                                 z_counts)
+            z_len = jnp.where(ctx, carry["slot_len"][:, s], z_len)
+        slot_t = jnp.where(carry["slot_t"] <= t, jnp.inf, carry["slot_t"])
 
         # -- CC + ABR --------------------------------------------------
         b_hat, cc_upd = self._cc(carry, ack, i, consts)
@@ -475,13 +632,28 @@ class FleetRollout:
         # dt/MTU operands carry the bit-exactness contract), but they
         # keep cross-phase fusion from ever becoming a parity suspect.
         targets = (rate * self._inv_fps).astype(jnp.float32)
+        if self._device_render:
+            frames = self._render_frames(x["patch_pos"], x["epoch"],
+                                         consts)
+        else:
+            frames = x["frames"]
         enc_in = lax.optimization_barrier(
-            (x["frames"], boxes, counts.astype(jnp.int32), engaged,
+            (frames, boxes, counts.astype(jnp.int32), engaged,
              targets))
-        surf, _, enc = rate_control_batch_fused(
-            *enc_in, frame_hw=self._frame_hw, patch=self._patch,
-            mu=self._mu, q_min=self._q_min, q_max=self._q_max,
-            probe_stride=self._probe)
+        if self._megakernel:
+            # fused Pallas tick kernel (fast-math tier, not bit-exact
+            # vs eager): surface -> bisection -> quantize in one VMEM
+            # pass per frame; interpret mode traces as jnp off-TPU
+            from repro.kernels.qp_codec import ops as qp_ops
+            surf, enc = qp_ops.tick_codec_frames(
+                *enc_in, frame_hw=self._frame_hw, patch=self._patch,
+                mu=self._mu, q_min=self._q_min, q_max=self._q_max,
+                probe_stride=self._probe)
+        else:
+            surf, _, enc = rate_control_batch_fused(
+                *enc_in, frame_hw=self._frame_hw, patch=self._patch,
+                mu=self._mu, q_min=self._q_min, q_max=self._q_max,
+                probe_stride=self._probe)
         surf, enc = lax.optimization_barrier((surf, enc))
         bits64 = enc.bits.astype(jnp.float64)
 
@@ -507,6 +679,9 @@ class FleetRollout:
                                                probe_stride=self._probe)
         decoded = lax.optimization_barrier(decoded)
 
+        if self._on_device:
+            stats = self._server_stats(decoded, x["patch_pos"], consts)
+
         new_carry = {
             **ch_upd, **ack_upd, **cc_upd,
             "abr_rate": abr_rate, "conf": conf,
@@ -522,8 +697,87 @@ class FleetRollout:
         ys = {"rate": rate, "conf": conf, "bits": bits64,
               "latency": latency, "bits_sent": sent_i,
               "bits_delivered": deliv_i, "dropped": dropped,
-              "queue_delay": queue_delay, "decoded": decoded}
+              "queue_delay": queue_delay}
+        if self._on_device:
+            ys.update(stats)  # small stats arrays replace the frames
+        else:
+            ys["decoded"] = decoded
         return new_carry, ys
+
+    def _render_frames(self, pos, epoch, consts):
+        """`Scene.render`, in-graph: per object, one clipped card-rect
+        mask + one clamped gather from that object's per-epoch composite
+        patch, `jnp.where`-stamped onto the background in object order
+        (later objects overwrite, like the host's sequential fills).
+
+        Bit-exact by construction: the composites and backgrounds carry
+        the host renderer's float32 bits (`_render_consts`), and the
+        stamp only SELECTS them.  Wherever the mask is true, rows sit in
+        [max(y-pad, 0), min(y+size+pad, H)), so the gather index
+        `rows - (y - pad)` is already inside the composite — the clip
+        only sanitizes indices at positions the mask discards.  Border
+        cropping falls out the same way: a card clipped at the frame
+        edge starts its mask at row 0, which gathers composite row
+        `pad - y` — exactly the surviving part of the host's cropped
+        `frame[y0:y1, x0:x1] = 0.9` fill (the glyph interior never
+        crops; positions are pre-clamped to [0, H - size])."""
+        hh, ww = self._frame_hw
+        rows = lax.broadcasted_iota(jnp.int32, (hh, ww), 0)
+        cols = lax.broadcasted_iota(jnp.int32, (hh, ww), 1)
+
+        def one(bg, comp, p, e, size, pad, valid):
+            frame = bg
+            for oi in range(self._o_max):
+                y, x = p[oi, 0], p[oi, 1]
+                s, pd = size[oi], pad[oi]
+                y0, x0 = y - pd, x - pd
+                mask = ((rows >= jnp.maximum(y0, 0))
+                        & (rows < jnp.minimum(y + s + pd, hh))
+                        & (cols >= jnp.maximum(x0, 0))
+                        & (cols < jnp.minimum(x + s + pd, ww))
+                        & valid[oi])
+                ri = jnp.clip(rows - y0, 0, comp.shape[-2] - 1)
+                ci = jnp.clip(cols - x0, 0, comp.shape[-1] - 1)
+                frame = jnp.where(mask, comp[oi, e, ri, ci], frame)
+            return frame
+
+        return jax.vmap(one)(consts["rd_bg"], consts["rd_comp"], pos,
+                             epoch, consts["rd_size"], consts["rd_pad"],
+                             consts["rd_valid"])
+
+    def _server_stats(self, decoded, pos, consts):
+        """The server phase's ingestion numerics, in-graph at the send
+        tick: per-object glyph codes/margins and per-frame card boxes
+        from the decoded frames.  Valid at the SEND tick because the
+        eager path's per-arrival ingestion depends only on (decoded
+        frame, capture frame index) — the arrival tick only orders the
+        host-side memory/predictor bookkeeping, which `_apply_stats`
+        replays from these outputs."""
+        from repro.core.grounding import detect_cards_core
+        from repro.core.ingest import glyph_stats_core
+
+        # local batch size, not self.n: under shard_map this traces with
+        # the per-device session slice
+        n, o = decoded.shape[0], self._o_max
+        margins = jnp.zeros((n, o), jnp.float64)
+        codes = jnp.zeros((n, o), jnp.int64)
+        for cell in self._geo_cells:
+            size = GLYPH_GRID * cell
+            patches = jax.vmap(lambda fr, ps: jax.vmap(
+                lambda p: lax.dynamic_slice(fr, (p[0], p[1]),
+                                            (size, size)))(ps))(
+                decoded, pos)
+            c_all, m_all = glyph_stats_core(
+                patches.reshape(n * o, size, size), cell)
+            mask = consts[f"geo_{cell}"]
+            margins = jnp.where(mask, m_all.reshape(n, o), margins)
+            codes = jnp.where(mask, c_all.reshape(n, o), codes)
+        card = functools.partial(detect_cards_core,
+                                 box_cap=self._card_cap)
+        card_boxes, card_counts, card_over = jax.vmap(card)(decoded)
+        return {"margins": margins, "codes": codes,
+                "card_boxes": card_boxes, "card_counts": card_counts,
+                "card_overflow": card_over}
 
     # ------------------------------------------------------------------
     def _window_fn(self, carry, xs, consts):
@@ -554,7 +808,17 @@ class FleetRollout:
                 self._probe, self._gcc_beta, self._gcc_eta,
                 self._gcc_thresh, self._bbr_window,
                 tuple(self._bbr_gain.tolist()), self._abr_min,
-                mesh_sig, per_row)
+                self._slot_depth, self._megakernel, self._on_device,
+                self._device_render, self._o_max, self._geo_cells,
+                self._card_cap, mesh_sig, per_row)
+
+    def _ys_names(self) -> Tuple[str, ...]:
+        base = ("rate", "conf", "bits", "latency", "bits_sent",
+                "bits_delivered", "dropped", "queue_delay")
+        if self._on_device:
+            return base + ("margins", "codes", "card_boxes",
+                           "card_counts", "card_overflow")
+        return base + ("decoded",)
 
     def _build_call(self):
         f = self.fleet
@@ -576,14 +840,16 @@ class FleetRollout:
             row = P(ax)
             carry_specs = {
                 k: row for k in self.carry}
-            xs_specs = {"frames": P(None, ax), "t": P(None),
-                        "idx": P(None)}
+            xs_specs = {"t": P(None), "idx": P(None)}
+            if not self._device_render:
+                xs_specs["frames"] = P(None, ax)
+            if self._on_device or self._device_render:
+                xs_specs["patch_pos"] = P(None, ax)
+            if self._device_render:
+                xs_specs["epoch"] = P(None, ax)
             consts_specs = {k: self._consts_spec(k)
                             for k in self._consts_np}
-            ys_specs = {k: P(None, ax) for k in
-                        ("rate", "conf", "bits", "latency", "bits_sent",
-                         "bits_delivered", "dropped", "queue_delay",
-                         "decoded")}
+            ys_specs = {k: P(None, ax) for k in self._ys_names()}
             # check_rep=False: the drain/time-to-send while_loops have no
             # replication rule; every operand is explicitly spec'd anyway.
             self._call = jax.jit(shard_map_compat(
@@ -632,33 +898,33 @@ class FleetRollout:
         self.carry = c
 
     def _fill_slots(self, t_end: float) -> Dict[str, np.ndarray]:
-        """Pop the (provably <= 1 per session) feedback entries due by
-        the window's last tick off the downlink heaps into slot arrays."""
+        """Pop the (provably <= slot_depth per session) feedback entries
+        due by the window's last tick off the downlink heaps into the
+        slot ring, in pop order (ascending due time)."""
         slots = self._empty_slots()
         for k, st in enumerate(self.fleet.states):
             fbs = []
             while (st.client.feedbacks
                    and st.client.feedbacks[0][0] <= t_end):
                 fbs.append(heapq.heappop(st.client.feedbacks))
-            if len(fbs) > 1:
+            if len(fbs) > self._slot_depth:
                 raise RuntimeError(
-                    "rollout window invariant violated: >1 feedback due "
+                    "rollout window invariant violated: "
+                    f"{len(fbs)} > {self._slot_depth} feedbacks due "
                     f"for session {k} by t={t_end} (window too long?)")
-            if not fbs:
-                continue
-            t_recv, _, conf, fb = fbs[0]
-            slots["slot_t"][k] = t_recv
-            slots["slot_conf"][k] = conf
-            if fb is not None:
-                kk, bb = fb.boxes.shape[0], fb.boxes.shape[1]
-                if kk > self._kcap or bb > self._bcap:
-                    self._grow_slots(kk, bb)
-                    slots = self._resize_slots(slots)
-                slots["slot_has"][k] = True
-                slots["slot_len"][k] = kk
-                slots["slot_times"][k, :kk] = fb.times
-                slots["slot_boxes"][k, :kk, :bb] = fb.boxes
-                slots["slot_counts"][k, :kk] = fb.counts
+            for s, (t_recv, _, conf, fb) in enumerate(fbs):
+                slots["slot_t"][k, s] = t_recv
+                slots["slot_conf"][k, s] = conf
+                if fb is not None:
+                    kk, bb = fb.boxes.shape[0], fb.boxes.shape[1]
+                    if kk > self._kcap or bb > self._bcap:
+                        self._grow_slots(kk, bb)
+                        slots = self._resize_slots(slots)
+                    slots["slot_has"][k, s] = True
+                    slots["slot_len"][k, s] = kk
+                    slots["slot_times"][k, s, :kk] = fb.times
+                    slots["slot_boxes"][k, s, :kk, :bb] = fb.boxes
+                    slots["slot_counts"][k, s, :kk] = fb.counts
         return slots
 
     def _resize_slots(self, old: Dict[str, np.ndarray]
@@ -666,10 +932,10 @@ class FleetRollout:
         new = self._empty_slots()
         for k in ("slot_t", "slot_conf", "slot_has", "slot_len"):
             new[k] = old[k]
-        kc, bc = old["slot_times"].shape[1], old["slot_boxes"].shape[2]
-        new["slot_times"][:, :kc] = old["slot_times"]
-        new["slot_boxes"][:, :kc, :bc] = old["slot_boxes"]
-        new["slot_counts"][:, :kc] = old["slot_counts"]
+        kc, bc = old["slot_times"].shape[2], old["slot_boxes"].shape[3]
+        new["slot_times"][:, :, :kc] = old["slot_times"]
+        new["slot_boxes"][:, :, :kc, :bc] = old["slot_boxes"]
+        new["slot_counts"][:, :, :kc] = old["slot_counts"]
         return new
 
     def run_window(self, i0: int, w: int) -> None:
@@ -678,21 +944,60 @@ class FleetRollout:
         f = self.fleet
         ts = [i * self.dt for i in range(i0, i0 + w)]
         slots = self._fill_slots(ts[-1])
-        frames = np.zeros((w, self.n) + self._frame_hw, np.float32)
-        for j, t in enumerate(ts):
-            fi = int(round(t * self.fps))
-            for k, st in enumerate(f.states):
-                frames[j, k] = st.scene.render(fi)
-        xs = {"frames": frames,
-              "t": np.asarray(ts, np.float64),
+        t0 = time.perf_counter()
+        xs = {"t": np.asarray(ts, np.float64),
               "idx": np.arange(i0, i0 + w, dtype=np.int32)}
+        if not self._device_render:
+            frames = np.zeros((w, self.n) + self._frame_hw, np.float32)
+            for j, t in enumerate(ts):
+                fi = int(round(t * self.fps))
+                for k, st in enumerate(f.states):
+                    frames[j, k] = st.scene.render(fi)
+            xs["frames"] = frames
+        if self._on_device or self._device_render:
+            xs["patch_pos"] = self._patch_positions(i0, w)
+        if self._device_render:
+            xs["epoch"] = self._epochs(ts)
+        t0 = self._tick_timer("t_render", t0)
         carry = dict(self.carry)
         carry.update(slots)
         with enable_x64():
             self.carry, ys = self._call(carry, xs, self._consts)
         ys = jax.device_get(ys)
+        self._ys_nbytes += sum(v.nbytes for v in ys.values())
         self._windows_run += 1
-        self._replay(ts, ys)
+        t0 = self._tick_timer("t_dispatch", t0)
+        if self._on_device:
+            self._replay_on_device(ts, ys)
+        else:
+            self._replay(ts, ys)
+        self._tick_timer("t_replay", t0)
+
+    def _tick_timer(self, name: str, t0: float) -> float:
+        now = time.perf_counter()
+        setattr(self, name, getattr(self, name) + (now - t0))
+        return now
+
+    def _patch_positions(self, i0: int, w: int) -> np.ndarray:
+        """Clamped top-left glyph-patch coordinates for every (tick,
+        session, object) of the window, (w, n, O_max, 2) int32.  Matches
+        the eager path's `obj.bbox(frame_idx)` + integer clamp exactly:
+        np.round is round-half-even like python round, and the clip
+        bounds are the same (h - size, w - size) integers."""
+        fi = np.arange(i0, i0 + w, dtype=np.float64)
+        pos = self._obj_pos0[None] + self._obj_vel[None] * fi[:, None,
+                                                             None, None]
+        return np.clip(np.round(pos), 0, self._obj_hi[None]
+                       ).astype(np.int32)
+
+    def _epochs(self, ts: List[float]) -> np.ndarray:
+        """Per-(tick, session) code-epoch indices, (w, n) int32.  Frame
+        index via the same `round(t * fps)` the host render loop uses;
+        period 0 marks epoch-less scenes (and padded dead rows)."""
+        fi = np.asarray([int(round(t * self.fps)) for t in ts], np.int64)
+        per = self._rd_period
+        return np.where(per > 0, fi[:, None] // np.maximum(per, 1),
+                        0).astype(np.int32)
 
     def _replay(self, ts: List[float], ys: Dict[str, np.ndarray]) -> None:
         """The eager tick's host half, per window tick in order: channel
@@ -701,6 +1006,10 @@ class FleetRollout:
         `Fleet.tick`, so heaps/metrics/server state match bit for bit."""
         f = self.fleet
         bank = f.bank
+        rate_l, conf_l = ys["rate"].tolist(), ys["conf"].tolist()
+        bits_l, lat_l = ys["bits"].tolist(), ys["latency"].tolist()
+        deliver = (np.asarray(ts, np.float64)[:, None]
+                   + ys["latency"]) <= f._t_last
         for j, t in enumerate(ts):
             lat = ys["latency"][j]
             bank.now = t
@@ -711,19 +1020,96 @@ class FleetRollout:
             bank._dropped.append(ys["dropped"][j])
             bank._queue_delay.append(ys["queue_delay"][j])
             decoded = ys["decoded"][j]
+            rj, cj, bj, lj = rate_l[j], conf_l[j], bits_l[j], lat_l[j]
             for k, st in enumerate(f.states):
-                st.client.rates.append(float(ys["rate"][j][k]))
-                st.client.confidence = float(ys["conf"][j][k])
-                client_record_send(st, float(ys["bits"][j][k]),
-                                   float(lat[k]))
-                if np.isfinite(lat[k]) and t + float(lat[k]) <= f._t_last:
-                    push_arrival(st, t, float(lat[k]), decoded[k].copy())
+                st.client.rates.append(rj[k])
+                st.client.confidence = cj[k]
+                client_record_send(st, bj[k], lj[k])
+                if deliver[j, k]:
+                    push_arrival(st, t, lj[k], decoded[k].copy())
             due = [(k, t_cap, frame)
                    for k, st in enumerate(f.states)
                    for t_cap, frame in pop_due_arrivals(st, t)]
             _ingest_batched(f.states, due)
             for st in f.states:
                 server_emit(st, t)
+
+    def _replay_on_device(self, ts: List[float],
+                          ys: Dict[str, np.ndarray]) -> None:
+        """Host replay when the ingestion numerics ran in-graph: only
+        heap/metrics bookkeeping remains.  Channel history appends stay
+        tick-major (shared bank lists); the per-session work runs
+        session-major — valid because every remaining update touches
+        only its own session's state (heaps, client metrics, server
+        memory — the seq counters are per-SessionState), so the
+        cross-session interleaving of the eager loop is irrelevant."""
+        f = self.fleet
+        bank = f.bank
+        for j, t in enumerate(ts):
+            bank.now = t
+            bank._send_times.append(t)
+            bank._latency.append(ys["latency"][j])
+            bank._bits_sent.append(ys["bits_sent"][j])
+            bank._bits_delivered.append(ys["bits_delivered"][j])
+            bank._dropped.append(ys["dropped"][j])
+            bank._queue_delay.append(ys["queue_delay"][j])
+        # Bulk-convert the per-(tick, session) scalars once per window:
+        # ndarray.tolist() yields the same python floats float() would
+        # (f32 -> double is exact), ~10x cheaper than 12k+ scalar
+        # __getitem__/float() round-trips on a big fleet.
+        lat = ys["latency"]
+        lat_l, rate_l = lat.tolist(), ys["rate"].tolist()
+        conf_l, bits_l = ys["conf"].tolist(), ys["bits"].tolist()
+        margins, codes = ys["margins"], ys["codes"]
+        cboxes, ccounts = ys["card_boxes"], ys["card_counts"]
+        ccounts_l = ccounts.tolist()
+        # delivered <=> finite latency AND lands inside the run: NaN/inf
+        # latencies fail the <= comparison, so one vectorized mask
+        # matches the eager per-element isfinite+deadline test exactly
+        deliver = (np.asarray(ts, np.float64)[:, None] + lat) <= f._t_last
+        bad = ys["card_overflow"] & deliver
+        if bad.any():
+            j, k = (int(v) for v in np.argwhere(bad)[0])
+            raise RuntimeError(
+                "detect_cards_core overflow (more than "
+                f"{self._card_cap} boxes) for session {k} "
+                f"at t={ts[j]}; raise the cap")
+        for k, st in enumerate(f.states):
+            rates = st.client.rates
+            for j, t in enumerate(ts):
+                rates.append(rate_l[j][k])
+                st.client.confidence = conf_l[j][k]
+                lk = lat_l[j][k]
+                client_record_send(st, bits_l[j][k], lk)
+                if deliver[j, k]:
+                    push_arrival(st, t, lk,
+                                 (margins[j, k], codes[j, k],
+                                  cboxes[j, k], ccounts_l[j][k]))
+                for t_cap, rec in pop_due_arrivals(st, t):
+                    self._apply_stats(st, t_cap, rec)
+                server_emit(st, t)
+
+    @staticmethod
+    def _apply_stats(st, t_cap: float, rec) -> None:
+        """`_ingest_batched`'s apply phase from precomputed stats: the
+        memory/predictor updates the eager path runs per arrival, fed by
+        the in-graph glyph/card numerics instead of a decoded frame."""
+        m_row, c_row, boxes_arr, n_boxes = rec
+        srv = st.server.server
+        frame_idx = int(round(t_cap * srv.cfg.fps))
+        epoch = srv.scene.epoch(frame_idx)
+        srv.frames_seen += 1
+        m_list, c_list = m_row.tolist(), c_row.tolist()
+        margins = []
+        for oi in range(len(srv.scene.objects)):
+            margin = m_list[oi]
+            margins.append(margin)
+            best = srv.memory.get((oi, epoch), (0.0, -1))
+            if margin > best[0]:
+                srv.memory[(oi, epoch)] = (margin, c_list[oi])
+        srv.last_margins = margins or [0.0]
+        srv.predictor.observe(
+            t_cap, [tuple(r) for r in boxes_arr[:n_boxes].tolist()])
 
     def finish(self) -> None:
         """Sync the carry's resident state back into the fleet's banks
@@ -750,9 +1136,16 @@ class FleetRollout:
         without running it; returns (lowered, compiled) for
         `roofline.analysis.fleet_step_report`."""
         w = self.window if w is None else w
-        xs = {"frames": np.zeros((w, self.n) + self._frame_hw, np.float32),
-              "t": np.zeros(w, np.float64),
+        xs = {"t": np.zeros(w, np.float64),
               "idx": np.arange(w, dtype=np.int32)}
+        if not self._device_render:
+            xs["frames"] = np.zeros((w, self.n) + self._frame_hw,
+                                    np.float32)
+        if self._on_device or self._device_render:
+            xs["patch_pos"] = np.zeros((w, self.n, self._o_max, 2),
+                                       np.int32)
+        if self._device_render:
+            xs["epoch"] = np.zeros((w, self.n), np.int32)
         carry = dict(self.carry)
         with enable_x64():
             lowered = self._call.lower(carry, xs, self._consts)

@@ -205,7 +205,16 @@ def session_partition(mesh: Mesh, logical: str = "batch",
     engine pads it up to the next multiple with masked dead sessions
     (`pad_sessions`) so the partition always applies.  Returns
     (None, 1) when no multi-way candidate exists (single-device mesh),
-    which callers treat as "run unsharded"."""
+    which callers treat as "run unsharded".
+
+    Everything the rollout scan stacks along the session dimension rides
+    this partition unchanged — including the on-device server phase's
+    stats outputs (glyph margins/codes, card boxes/counts), which is why
+    shard-local bodies must size per-session buffers from the local
+    shard (`x.shape[0]`), never the global N.  The megakernel rollout is
+    the one exception: Pallas grids don't compose with shard_map here,
+    so `Fleet` rejects megakernel+mesh up front rather than letting a
+    partition silently fall back."""
     sizes = _mesh_axis_sizes(mesh)
     for candidate in (rules or current_rules()).get(logical, (None,)):
         n = _axes_size(candidate, sizes)

@@ -6,8 +6,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.kernels.qp_codec.qp_codec import qp_codec_blocks, zeco_rc_blocks
+from repro.kernels.qp_codec.qp_codec import (qp_codec_blocks, tick_rc_blocks,
+                                             zeco_rc_blocks)
 from repro.video import codec
 from repro.video.codec import QP_MAX, QP_MIN
 
@@ -118,3 +120,78 @@ def zeco_codec_frames(frames: jnp.ndarray, boxes: jnp.ndarray,
                                interpret=interpret)
     rec = rec.reshape(N, nby, nbx, 8, 8).transpose(0, 1, 3, 2, 4)
     return rec.reshape(N, H, W), bits.sum(axis=1)
+
+
+@functools.lru_cache(maxsize=64)
+def _tick_geometry(frame_hw, patch: int, probe_stride: int):
+    """Static per-(frame geometry) kernel inputs: partial-patch center
+    grids, the (gy*gx, nblk) one-hot patch->block upsample matrix, the
+    blocks-per-row count and the probe rescale factor of codec._probe."""
+    from repro.core.zecostream import (_block_to_patch_idx, _patch_centers,
+                                       _patch_grid)
+    H, W = frame_hw
+    nby, nbx = H // 8, W // 8
+    nblk = nby * nbx
+    gy, gx = _patch_grid(frame_hw, patch)
+    yy, xx = _patch_centers(frame_hw, patch)
+    cy = np.ascontiguousarray(yy, np.float32)
+    cx = np.ascontiguousarray(xx, np.float32)
+    iy, ix = _block_to_patch_idx(frame_hw, patch)
+    pidx = (iy[:, None] * gx + ix[None, :]).reshape(-1)
+    up = np.zeros((gy * gx, nblk), np.float32)
+    up[pidx, np.arange(nblk)] = 1.0
+    s = max(int(probe_stride), 1)
+    scale = nblk / (-(-nby // s) * -(-nbx // s))
+    return cy, cx, up, nbx, float(scale)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "frame_hw", "patch", "mu", "q_min", "q_max", "iters", "probe_stride",
+    "interpret"))
+def tick_codec_frames(frames: jnp.ndarray, boxes: jnp.ndarray,
+                      counts: jnp.ndarray, engaged: jnp.ndarray,
+                      target_bits: jnp.ndarray, *, frame_hw,
+                      patch: int = 64, mu: float = 0.5,
+                      q_min: float = float(QP_MIN),
+                      q_max: float = float(QP_MAX), iters: int = 8,
+                      probe_stride: int = 1, interpret=None):
+    """Tick megakernel: the rollout scan's whole per-tick client phase —
+    box arrays -> importance (Eq. 3) -> QP surface (Eq. 4) -> DCT ->
+    strided-probe bisection rate control -> quantize -> packetized rate —
+    fused into one VMEM pass per frame over all N sessions.
+
+    Unlike `zeco_codec_frames` it emits the CODEC PRODUCTS the scan
+    carries forward instead of a reconstruction: (surfaces (N, nby, nbx)
+    zero-mean relative QP, EncodedFrame(coeffs int32, qp_blocks, bits,
+    bits_blocks)) — the scan's shared `decode_delivered_batch` does the
+    (possibly partial-delivery requantized) reconstruction downstream.
+    Handles non-divisible H/W via partial-patch centers + a one-hot
+    upsample matmul, and supports `probe_stride` (an in-kernel iota mask
+    replaces codec._probe's strided slice).  This is the
+    `Fleet(..., megakernel=True)` encode path: kernel-vs-ref parity is
+    bitwise in interpret mode (tests/test_kernels.py); vs the eager jnp
+    fleet it is a documented fast-math tolerance tier, NOT bit-exact."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    N, H, W = frames.shape
+    nby, nbx = H // 8, W // 8
+    blocks = frames.reshape(N, nby, 8, nbx, 8).transpose(0, 1, 3, 2, 4)
+    blocks = blocks.reshape(N, nby * nbx, 8, 8)
+    meta = jnp.stack([counts.astype(jnp.float32),
+                      engaged.astype(jnp.float32),
+                      target_bits.astype(jnp.float32)], axis=1)
+    cy, cx, up, _, scale = _tick_geometry(tuple(frame_hw), int(patch),
+                                          int(probe_stride))
+    coeffs, qp, bitsb, surf = tick_rc_blocks(
+        blocks, boxes, meta, (cy, cx), up, nbx=nbx,
+        mu_diag=float(mu * np.hypot(H, W)), q_min=float(q_min),
+        q_max=float(q_max), iters=iters, probe_stride=int(probe_stride),
+        probe_scale=scale, interpret=interpret)
+    surf = surf.reshape(N, nby, nbx)
+    bitsb = bitsb.reshape(N, nby, nbx)
+    enc = codec.EncodedFrame(
+        coeffs=coeffs.reshape(N, nby, nbx, 8, 8),
+        qp_blocks=qp.reshape(N, nby, nbx),
+        bits=codec.tree_sum(bitsb, 2),
+        bits_blocks=bitsb)
+    return surf, enc

@@ -199,3 +199,137 @@ def zeco_rc_blocks(blocks: jnp.ndarray, boxes: jnp.ndarray,
         interpret=interpret,
     )(jnp.asarray(dct_matrix()), blocks.astype(jnp.float32),
       boxes.astype(jnp.float32), meta.astype(jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# Whole-tick client megakernel: surface -> bisection -> quantize -> rate,
+# emitting the rollout scan's codec products (no reconstruction — the
+# scan's shared decode path consumes the coefficients downstream)
+# --------------------------------------------------------------------------
+def _tick_rc_kernel(d_ref, x_ref, box_ref, meta_ref, cy_ref, cx_ref,
+                    up_ref, coef_ref, qp_ref, bits_ref, surf_ref, *,
+                    mu_diag: float, q_min: float, q_max: float,
+                    iters: int, nblk: int, nbx: int, probe_stride: int,
+                    probe_scale: float):
+    """One grid step = one frame of the rollout's per-tick client
+    compute: Eq. 3 importance (partial-patch centers come in as
+    `cy/cx`), Eq. 4 QP surface, one-hot upsample to the block grid
+    (`up_ref`, handles non-divisible H/W), strided-probe bisection rate
+    control, and the final quantize + per-block packetized rate — every
+    intermediate in VMEM.  Outputs the scan's codec products: int32
+    coefficients, final per-block QP, per-block bits and the zero-mean
+    relative surface (the partial-drop requantize input)."""
+    D = d_ref[...]
+    x = x_ref[0].astype(jnp.float32) - 0.5          # (nblk, 8, 8)
+    t = jax.lax.dot_general(x, D, (((2,), (1,)), ((), ())))   # x @ D^T
+    coef = jax.lax.dot_general(
+        t.transpose(0, 2, 1), D, (((2,), (1,)), ((), ()))).transpose(0, 2, 1)
+
+    b = box_ref[0]                                  # (B, 4)
+    count, engaged, target = meta_ref[0, 0], meta_ref[0, 1], meta_ref[0, 2]
+    cy, cx = cy_ref[...], cx_ref[...]               # (gy, gx) centers
+    dy = jnp.maximum(jnp.maximum(b[:, 0, None, None] - cy,
+                                 cy - b[:, 2, None, None]), 0.0)
+    dx = jnp.maximum(jnp.maximum(b[:, 1, None, None] - cx,
+                                 cx - b[:, 3, None, None]), 0.0)
+    d = jnp.sqrt(dy * dy + dx * dx)
+    valid = jax.lax.broadcasted_iota(jnp.float32, d.shape, 0) < count
+    d_min = jnp.min(jnp.where(valid, d, jnp.inf), axis=0)
+    rho = jnp.maximum(0.0, 1.0 - d_min / mu_diag)
+    qp = q_min + (q_max - q_min) * jnp.square(1.0 - rho)
+
+    # patch -> block upsample as a one-hot matmul (the gather-free MXU
+    # formulation of zecostream._block_to_patch_idx)
+    qpb = jax.lax.dot_general(qp.reshape(1, -1), up_ref[...],
+                              (((1,), (0,)), ((), ()))).reshape(-1)
+    shape = (qpb - jnp.mean(qpb)) * engaged         # (nblk,)
+    surf_ref[0, :] = shape
+
+    # strided block probe (codec._probe): bisection iterations rate only
+    # the (by % s == 0) & (bx % s == 0) blocks, scaled back up
+    if probe_stride > 1:
+        bi = jax.lax.broadcasted_iota(jnp.int32, (nblk,), 0)
+        pmask = (((bi // nbx) % probe_stride == 0)
+                 & ((bi % nbx) % probe_stride == 0))
+
+    def rate_at(mid):
+        qpx = jnp.clip(shape + mid, QP_MIN, QP_MAX)
+        qs = jnp.exp2((qpx - 4.0) / 6.0) * (1.0 / 64.0)
+        q = jnp.round(coef / qs[:, None, None])
+        bb = (RATE_COEF * jnp.sum(jnp.log2(1.0 + jnp.abs(q)),
+                                  axis=(-1, -2))
+              + RATE_OVERHEAD_PER_BLOCK)
+        if probe_stride > 1:
+            return jnp.sum(jnp.where(pmask, bb, 0.0)) * probe_scale
+        return jnp.sum(bb)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        over = rate_at(mid) > target
+        return jnp.where(over, mid, lo), jnp.where(over, hi, mid)
+
+    lo0 = QP_MIN - jnp.max(shape)
+    hi0 = QP_MAX - jnp.min(shape)
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo0, hi0))
+
+    qp_f = jnp.clip(shape + 0.5 * (lo + hi), QP_MIN, QP_MAX)
+    qs = jnp.exp2((qp_f - 4.0) / 6.0) * (1.0 / 64.0)
+    q = jnp.round(coef / qs[:, None, None])
+    coef_ref[0] = q.astype(jnp.int32)
+    qp_ref[0, :] = qp_f
+    bits_ref[0, :] = (RATE_COEF * jnp.sum(jnp.log2(1.0 + jnp.abs(q)),
+                                          axis=(-1, -2))
+                      + RATE_OVERHEAD_PER_BLOCK)
+
+
+def tick_rc_blocks(blocks: jnp.ndarray, boxes: jnp.ndarray,
+                   meta: jnp.ndarray, centers, upsample, *, nbx: int,
+                   mu_diag: float, q_min: float, q_max: float,
+                   iters: int = 8, probe_stride: int = 1,
+                   probe_scale: float = 1.0, interpret: bool = False):
+    """Tick-megakernel entry on the block-list layout.
+
+    blocks (N, nblk, 8, 8); boxes (N, B, 4); meta (N, 3) float32 rows of
+    (box_count, engaged, target_bits); centers = (cy, cx) patch-center
+    grids (gy, gx); upsample (gy*gx, nblk) one-hot float32; nbx = blocks
+    per frame row -> (coeffs int32 (N, nblk, 8, 8), qp (N, nblk),
+    bits (N, nblk), surf (N, nblk))."""
+    N, nblk = blocks.shape[:2]
+    cy, cx = centers
+    gy, gx = cy.shape
+    gp = gy * gx
+    kern = functools.partial(
+        _tick_rc_kernel, mu_diag=float(mu_diag), q_min=float(q_min),
+        q_max=float(q_max), iters=iters, nblk=nblk, nbx=int(nbx),
+        probe_stride=int(probe_stride), probe_scale=float(probe_scale))
+    B = boxes.shape[1]
+    return pl.pallas_call(
+        kern,
+        grid=(N,),
+        in_specs=[
+            pl.BlockSpec((8, 8), lambda i: (0, 0)),
+            pl.BlockSpec((1, nblk, 8, 8), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, B, 4), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 3), lambda i: (i, 0)),
+            pl.BlockSpec((gy, gx), lambda i: (0, 0)),
+            pl.BlockSpec((gy, gx), lambda i: (0, 0)),
+            pl.BlockSpec((gp, nblk), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, nblk, 8, 8), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, nblk), lambda i: (i, 0)),
+            pl.BlockSpec((1, nblk), lambda i: (i, 0)),
+            pl.BlockSpec((1, nblk), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, nblk, 8, 8), jnp.int32),
+            jax.ShapeDtypeStruct((N, nblk), jnp.float32),
+            jax.ShapeDtypeStruct((N, nblk), jnp.float32),
+            jax.ShapeDtypeStruct((N, nblk), jnp.float32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(dct_matrix()), blocks.astype(jnp.float32),
+      boxes.astype(jnp.float32), meta.astype(jnp.float32),
+      jnp.asarray(cy, jnp.float32), jnp.asarray(cx, jnp.float32),
+      jnp.asarray(upsample, jnp.float32))

@@ -2,6 +2,8 @@
 repro.video.codec math on a block list layout)."""
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -76,6 +78,109 @@ def _zeco_rc_ref_one(frame, boxes, count, engaged, target, *, patch, mu,
                    0.0, 1.0)
     rec = rec.reshape(nby, nbx, 8, 8).transpose(0, 2, 1, 3)
     return rec.reshape(H, W), jnp.sum(bits)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "nbx", "mu_diag", "q_min", "q_max", "iters", "probe_stride",
+    "probe_scale"))
+def _tick_rc_ref_one(blocks, boxes, count, engaged, target, cy, cx, up, *,
+                     nbx, mu_diag, q_min, q_max, iters, probe_stride,
+                     probe_scale):
+    """jnp oracle mirroring `_tick_rc_kernel` op-for-op for ONE frame's
+    block list (same dot_general forms, iota masks and reduction
+    shapes).  Jitted so XLA applies the same fusion/FMA contractions it
+    applies to the interpret-mode kernel trace — eager op-by-op
+    execution drifts by ~2 ulp in the surface; under jit the
+    interpret-mode kernel output is bitwise identical."""
+    D = jnp.asarray(dct_matrix())
+    nblk = blocks.shape[0]
+    x = blocks.astype(jnp.float32) - 0.5
+    t = jax.lax.dot_general(x, D, (((2,), (1,)), ((), ())))
+    coef = jax.lax.dot_general(
+        t.transpose(0, 2, 1), D, (((2,), (1,)), ((), ()))).transpose(0, 2, 1)
+
+    dy = jnp.maximum(jnp.maximum(boxes[:, 0, None, None] - cy,
+                                 cy - boxes[:, 2, None, None]), 0.0)
+    dx = jnp.maximum(jnp.maximum(boxes[:, 1, None, None] - cx,
+                                 cx - boxes[:, 3, None, None]), 0.0)
+    d = jnp.sqrt(dy * dy + dx * dx)
+    valid = jax.lax.broadcasted_iota(jnp.float32, d.shape, 0) < count
+    d_min = jnp.min(jnp.where(valid, d, jnp.inf), axis=0)
+    rho = jnp.maximum(0.0, 1.0 - d_min / mu_diag)
+    qp = q_min + (q_max - q_min) * jnp.square(1.0 - rho)
+
+    qpb = jax.lax.dot_general(qp.reshape(1, -1), up,
+                              (((1,), (0,)), ((), ()))).reshape(-1)
+    shape = (qpb - jnp.mean(qpb)) * engaged
+
+    if probe_stride > 1:
+        bi = jax.lax.broadcasted_iota(jnp.int32, (nblk,), 0)
+        pmask = (((bi // nbx) % probe_stride == 0)
+                 & ((bi % nbx) % probe_stride == 0))
+
+    def rate_at(mid):
+        qpx = jnp.clip(shape + mid, QP_MIN, QP_MAX)
+        qs = jnp.exp2((qpx - 4.0) / 6.0) * (1.0 / 64.0)
+        q = jnp.round(coef / qs[:, None, None])
+        bb = (RATE_COEF * jnp.sum(jnp.log2(1.0 + jnp.abs(q)),
+                                  axis=(-1, -2))
+              + RATE_OVERHEAD_PER_BLOCK)
+        if probe_stride > 1:
+            return jnp.sum(jnp.where(pmask, bb, 0.0)) * probe_scale
+        return jnp.sum(bb)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        over = rate_at(mid) > target
+        return jnp.where(over, mid, lo), jnp.where(over, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body,
+                               (QP_MIN - jnp.max(shape),
+                                QP_MAX - jnp.min(shape)))
+    qp_f = jnp.clip(shape + 0.5 * (lo + hi), QP_MIN, QP_MAX)
+    qs = jnp.exp2((qp_f - 4.0) / 6.0) * (1.0 / 64.0)
+    q = jnp.round(coef / qs[:, None, None])
+    bits = (RATE_COEF * jnp.sum(jnp.log2(1.0 + jnp.abs(q)), axis=(-1, -2))
+            + RATE_OVERHEAD_PER_BLOCK)
+    return q.astype(jnp.int32), qp_f, bits, shape
+
+
+def tick_codec_ref(frames, boxes, counts, engaged, target_bits, *,
+                   frame_hw, patch: int = 64, mu: float = 0.5,
+                   q_min: float = float(QP_MIN),
+                   q_max: float = float(QP_MAX), iters: int = 8,
+                   probe_stride: int = 1):
+    """Oracle for `ops.tick_codec_frames`: same frame-level signature and
+    (surfaces, EncodedFrame) products, built from the mirrored
+    per-frame oracle above."""
+    from repro.kernels.qp_codec.ops import _tick_geometry
+    from repro.video import codec
+    N, H, W = frames.shape
+    nby, nbx = H // 8, W // 8
+    cy, cx, up, _, scale = _tick_geometry(tuple(frame_hw), int(patch),
+                                          int(probe_stride))
+    cy_j, cx_j = jnp.asarray(cy), jnp.asarray(cx)
+    up_j = jnp.asarray(up)
+    outs = []
+    for i in range(N):
+        blocks = jnp.asarray(frames[i], jnp.float32)
+        blocks = blocks.reshape(nby, 8, nbx, 8).transpose(0, 2, 1, 3)
+        outs.append(_tick_rc_ref_one(
+            blocks.reshape(-1, 8, 8), jnp.asarray(boxes[i], jnp.float32),
+            jnp.float32(counts[i]), jnp.float32(engaged[i]),
+            jnp.float32(target_bits[i]), cy_j, cx_j, up_j, nbx=nbx,
+            mu_diag=float(mu * np.hypot(H, W)), q_min=float(q_min),
+            q_max=float(q_max), iters=iters,
+            probe_stride=int(probe_stride), probe_scale=float(scale)))
+    coeffs = jnp.stack([o[0] for o in outs]).reshape(N, nby, nbx, 8, 8)
+    qp = jnp.stack([o[1] for o in outs]).reshape(N, nby, nbx)
+    bitsb = jnp.stack([o[2] for o in outs]).reshape(N, nby, nbx)
+    surf = jnp.stack([o[3] for o in outs]).reshape(N, nby, nbx)
+    enc = codec.EncodedFrame(coeffs=coeffs, qp_blocks=qp,
+                             bits=codec.tree_sum(bitsb, 2),
+                             bits_blocks=bitsb)
+    return surf, enc
 
 
 def zeco_codec_ref(frames, boxes, counts, engaged, target_bits, *,

@@ -188,6 +188,8 @@ def hlo_op_histogram(hlo_text: str, top: int = 12) -> Dict[str, int]:
 
 def fleet_step_report(lowered, compiled, *, n_sessions: int, window: int,
                       wall_time_s: Optional[float] = None,
+                      host_replay_s: Optional[float] = None,
+                      outfeed_bytes: Optional[float] = None,
                       peak_flops: float = CPU_PEAK_FLOPS,
                       mem_bw: float = CPU_MEM_BW) -> Dict:
     """Roofline report for one compiled rollout window step.
@@ -199,7 +201,14 @@ def fleet_step_report(lowered, compiled, *, n_sessions: int, window: int,
     available) turns the bounds into an attainment figure: how much of
     the remaining gap is NOT explained by the roofline — i.e. dispatch
     overhead, serial `while` drains, or cost-model-invisible
-    custom-calls (see `hlo_ops`)."""
+    custom-calls (see `hlo_ops`).
+
+    `host_replay_s` (total host-side bookkeeping replay seconds) and
+    `outfeed_bytes` (total scan-output bytes fetched per run) attribute
+    the NON-device side of the rollout: the on-device server phase is
+    justified exactly when these two columns collapse relative to the
+    baseline mode, so benches record them per mode alongside the
+    attainment figure."""
     cost = _cost_dict(compiled)
     flops = float(cost.get("flops", 0.0))
     nbytes = float(cost.get("bytes accessed", 0.0))
@@ -232,6 +241,12 @@ def fleet_step_report(lowered, compiled, *, n_sessions: int, window: int,
         report["wall_time_s"] = wall_time_s
         report["per_session_tick_wall_us"] = wall_time_s / ticks * 1e6
         report["roofline_attainment"] = step_lb / max(wall_time_s, 1e-12)
+    if host_replay_s is not None:
+        report["host_replay_s"] = host_replay_s
+        report["host_replay_per_tick_us"] = host_replay_s / ticks * 1e6
+    if outfeed_bytes is not None:
+        report["outfeed_bytes"] = outfeed_bytes
+        report["outfeed_bytes_per_tick"] = outfeed_bytes / ticks
     return report
 
 

@@ -342,16 +342,24 @@ def decode_delivered_batch(enc: EncodedFrame, qp_shapes: jnp.ndarray,
 
     Sessions whose frame survived intact decode the original coefficients;
     sessions with a partial packet drop re-quantize toward the delivered
-    bits first (same cheap path as the serial `requantize`)."""
-    enc2 = jax.vmap(
-        lambda c, qb, qs, tb: _requantize_core(c, qb, qs, tb, iters,
-                                               probe_stride))(
-            enc.coeffs, enc.qp_blocks, qp_shapes, delivered_bits)
-    m4 = needs_requant[:, None, None, None, None]
-    m2 = needs_requant[:, None, None]
-    sel = EncodedFrame(
-        coeffs=jnp.where(m4, enc2.coeffs, enc.coeffs),
-        qp_blocks=jnp.where(m2, enc2.qp_blocks, enc.qp_blocks),
-        bits=jnp.where(needs_requant, enc2.bits, enc.bits),
-        bits_blocks=jnp.where(m2, enc2.bits_blocks, enc.bits_blocks))
+    bits first (same cheap path as the serial `requantize`).  The whole
+    re-quantize bisection is gated behind a `lax.cond` on whether ANY
+    session needs it — most ticks drop nothing, and the where-select
+    below returns `enc` verbatim then, so skipping the branch is
+    bit-exact while saving the dominant cost of this dispatch."""
+    def _requant(_):
+        enc2 = jax.vmap(
+            lambda c, qb, qs, tb: _requantize_core(c, qb, qs, tb, iters,
+                                                   probe_stride))(
+                enc.coeffs, enc.qp_blocks, qp_shapes, delivered_bits)
+        m4 = needs_requant[:, None, None, None, None]
+        m2 = needs_requant[:, None, None]
+        return EncodedFrame(
+            coeffs=jnp.where(m4, enc2.coeffs, enc.coeffs),
+            qp_blocks=jnp.where(m2, enc2.qp_blocks, enc.qp_blocks),
+            bits=jnp.where(needs_requant, enc2.bits, enc.bits),
+            bits_blocks=jnp.where(m2, enc2.bits_blocks, enc.bits_blocks))
+
+    sel = jax.lax.cond(jnp.any(needs_requant), _requant,
+                       lambda _: enc, None)
     return jax.vmap(decode)(sel)

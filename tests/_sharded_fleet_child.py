@@ -48,12 +48,14 @@ def main() -> None:
     mesh = make_fleet_mesh()
     cases = {}
 
-    def fleet_case(name, n, duration, fused=False, rollout=None):
+    def fleet_case(name, n, duration, fused=False, rollout=None,
+                   on_device=False):
         def members():
             return [B.hetero_fleet_session(k, duration, hw=64)
                     for k in range(n)]
         base = run_fleet(members(), fused_plan=fused)
-        fl = Fleet(members(), fused_plan=fused, mesh=mesh)
+        fl = Fleet(members(), fused_plan=fused, mesh=mesh,
+                   on_device_server=on_device)
         # parity of an unsharded-vs-unsharded run would be vacuous:
         # prove the mesh actually engaged and the padding is as expected
         assert fl.mesh is not None, f"{name}: mesh did not engage"
@@ -78,6 +80,14 @@ def main() -> None:
     # and padded N (12 pads to 16 on 8 devices, dead tail masked)
     fleet_case("rollout_n8", n=8, duration=4.0, fused=True, rollout=3)
     fleet_case("rollout_pad_n12", n=12, duration=3.0, rollout=3)
+    # on-device server phase under shard_map: the scan emits stats-at-
+    # send rows (sharded over the session axis) instead of decoded
+    # frames, and the host replay must still be bit-exact — including
+    # with a padded dead tail
+    fleet_case("rollout_ondev_n8", n=8, duration=4.0, fused=True,
+               rollout=3, on_device=True)
+    fleet_case("rollout_ondev_pad_n12", n=12, duration=3.0, rollout=3,
+               on_device=True)
 
     # mixed cohort grid through run_scenarios(mesh=...): two frame
     # sizes interleaved in input order, cohort sizes 3 and 5 (both pad

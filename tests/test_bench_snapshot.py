@@ -1,8 +1,10 @@
-"""The committed BENCH_fleet.json perf snapshot: schema + gate logic.
+"""The committed BENCH_fleet.json / BENCH_kernels.json perf snapshots:
+schema + gate logic.
 
-The snapshot is a committed artifact (like tests/golden/*) — CI
-re-measures and gates on it, so its structure must stay loadable and
-the regression comparator must actually fire on a regressed ratio.
+The snapshots are committed artifacts (like tests/golden/*) — CI
+re-measures and gates on them, so their structure must stay loadable and
+the regression comparators must actually fire on a regressed ratio /
+a dropped kernel row.
 """
 import copy
 import os
@@ -14,8 +16,11 @@ sys.path.insert(0, os.path.join(os.path.dirname(
     os.path.dirname(os.path.abspath(__file__)))))
 
 from benchmarks.snapshot import (BENCH_SCHEMA, REGRESSION_TOL,  # noqa: E402
-                                 SNAPSHOT_PATH, check_regression,
-                                 load_snapshot, validate_snapshot)
+                                 KERNELS_SNAPSHOT_PATH, SNAPSHOT_PATH,
+                                 check_kernels_coverage, check_regression,
+                                 load_kernels_snapshot, load_snapshot,
+                                 validate_kernels_snapshot,
+                                 validate_snapshot)
 
 
 @pytest.fixture(scope="module")
@@ -26,13 +31,32 @@ def committed():
     return load_snapshot()
 
 
+@pytest.fixture(scope="module")
+def committed_kernels():
+    assert os.path.exists(KERNELS_SNAPSHOT_PATH), (
+        "BENCH_kernels.json must be committed at the repo root "
+        "(python -m benchmarks.bench_kernels --write writes it)")
+    return load_kernels_snapshot()
+
+
 def test_committed_snapshot_validates(committed):
     assert committed["schema"] == BENCH_SCHEMA
-    ns = sorted(int(c["n"]) for c in committed["cells"])
+    ns = sorted({int(c["n"]) for c in committed["cells"]})
     assert ns == [8, 64, 256]
+    # one cell per (n, mode); baseline and on-device cells at every N
+    keys = {(int(c["n"]), c.get("mode", "baseline"))
+            for c in committed["cells"]}
+    assert len(keys) == len(committed["cells"])
+    for n in ns:
+        assert (n, "baseline") in keys
+        assert (n, "on_device_server") in keys
     for c in committed["cells"]:
         assert c["rollout_sessions_per_sec"] > 0
         assert "roofline" in c and "bottleneck" in c["roofline"]
+    # host-side attribution columns ride along with every measured cell
+    for c in committed["cells"]:
+        assert "host_replay_s" in c["roofline"]
+        assert "outfeed_bytes" in c["roofline"]
 
 
 def test_validator_rejects_corruption(committed):
@@ -73,3 +97,62 @@ def test_gate_ignores_machine_dependent_absolutes(committed):
         c["eager_sessions_per_sec"] *= 0.1
         c["rollout_sessions_per_sec"] *= 0.1
     assert check_regression(committed, fresh) == []
+
+
+def test_gate_keys_cells_on_n_and_mode(committed):
+    """A regressed baseline cell must not be masked by a healthy
+    on-device cell at the same N (and pre-mode snapshots read as
+    mode='baseline')."""
+    bad = copy.deepcopy(committed)
+    victim = next(c for c in bad["cells"]
+                  if c.get("mode", "baseline") == "on_device_server")
+    victim["median_ratio"] *= (1.0 - REGRESSION_TOL - 0.05)
+    failures = check_regression(committed, bad)
+    assert len(failures) == 1
+    assert "mode=on_device_server" in failures[0]
+    # old one-cell-per-N snapshots (no mode field) still gate fresh
+    # baseline cells; fresh non-baseline modes are simply unmatched
+    legacy = copy.deepcopy(committed)
+    legacy["cells"] = [c for c in legacy["cells"]
+                       if c.get("mode", "baseline") == "baseline"]
+    for c in legacy["cells"]:
+        c.pop("mode", None)
+    assert check_regression(legacy, committed) == []
+    worse = copy.deepcopy(committed)
+    base_cell = next(c for c in worse["cells"]
+                     if c.get("mode", "baseline") == "baseline")
+    base_cell["median_ratio"] *= (1.0 - REGRESSION_TOL - 0.05)
+    assert len(check_regression(legacy, worse)) == 1
+
+
+def test_committed_kernels_snapshot_validates(committed_kernels):
+    assert committed_kernels["schema"] == BENCH_SCHEMA
+    assert committed_kernels["kind"] == "kernels"
+    names = {r["name"] for r in committed_kernels["rows"]}
+    # the tick megakernel rows must be part of the committed record
+    assert any(n.startswith("kernel.tick_megakernel") for n in names)
+
+
+def test_kernels_validator_rejects_corruption(committed_kernels):
+    for mutate in (
+        lambda d: d.update(kind="fleet"),
+        lambda d: d.update(rows=[]),
+        lambda d: d["rows"][0].pop("name"),
+        lambda d: d["rows"][0].update(us_per_call=-1.0),
+    ):
+        doc = copy.deepcopy(committed_kernels)
+        mutate(doc)
+        with pytest.raises(ValueError):
+            validate_kernels_snapshot(doc)
+
+
+def test_kernels_gate_fires_on_missing_row(committed_kernels):
+    class FakeRow:
+        def __init__(self, name):
+            self.name = name
+
+    fresh = [FakeRow(r["name"]) for r in committed_kernels["rows"]]
+    assert check_kernels_coverage(committed_kernels, fresh) == []
+    failures = check_kernels_coverage(committed_kernels, fresh[1:])
+    assert len(failures) == 1
+    assert committed_kernels["rows"][0]["name"] in failures[0]

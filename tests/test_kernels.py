@@ -10,9 +10,11 @@ from repro.kernels.flash_attention import ops as fa_ops
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.flash_decode import ops as fd_ops
 from repro.kernels.flash_decode.ref import decode_ref
-from repro.kernels.qp_codec.ops import qp_codec_frame, zeco_codec_frames
+from repro.kernels.qp_codec.ops import (qp_codec_frame, tick_codec_frames,
+                                        zeco_codec_frames)
 from repro.kernels.qp_codec.qp_codec import qp_codec_blocks
-from repro.kernels.qp_codec.ref import qp_codec_ref, zeco_codec_ref
+from repro.kernels.qp_codec.ref import (qp_codec_ref, tick_codec_ref,
+                                        zeco_codec_ref)
 from repro.video import codec as codec_ref
 
 TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
@@ -244,6 +246,95 @@ def test_zeco_codec_rejects_nondivisible_patch():
     with pytest.raises(ValueError):
         zeco_codec_frames(frames, boxes, counts, engaged, targets,
                           patch=48, interpret=True)
+
+
+# --------------------------------------------------------------------------
+# tick megakernel: the rollout scan's whole per-tick client phase fused
+# (surface -> strided-probe bisection -> quantize -> packetized rate),
+# emitting codec products instead of a reconstruction
+# --------------------------------------------------------------------------
+def _assert_tick_products_equal(got, want):
+    surf_k, enc_k = got
+    surf_r, enc_r = want
+    np.testing.assert_array_equal(np.asarray(surf_k), np.asarray(surf_r))
+    np.testing.assert_array_equal(np.asarray(enc_k.coeffs),
+                                  np.asarray(enc_r.coeffs))
+    np.testing.assert_array_equal(np.asarray(enc_k.qp_blocks),
+                                  np.asarray(enc_r.qp_blocks))
+    np.testing.assert_array_equal(np.asarray(enc_k.bits_blocks),
+                                  np.asarray(enc_r.bits_blocks))
+    np.testing.assert_array_equal(np.asarray(enc_k.bits),
+                                  np.asarray(enc_r.bits))
+
+
+@pytest.mark.parametrize("hw,patch,stride", [
+    (128, 64, 1),    # divisible grid, exact bisection
+    (128, 64, 2),    # divisible grid, strided probe
+    (96, 64, 2),     # partial trailing patches (one-hot upsample path)
+    (104, 32, 3),    # non-divisible probe grid AND partial patches
+])
+def test_tick_megakernel_matches_oracle_bitwise(hw, patch, stride):
+    """Interpret-mode kernel vs the op-for-op jitted jnp oracle: every
+    product (surface, coeffs, qp, per-block and total bits) bitwise."""
+    frames, boxes, counts, engaged, targets = _zeco_inputs(hw=hw)
+    got = tick_codec_frames(frames, boxes, counts, engaged, targets,
+                            frame_hw=(hw, hw), patch=patch,
+                            probe_stride=stride, interpret=True)
+    want = tick_codec_ref(frames, boxes, counts, engaged, targets,
+                          frame_hw=(hw, hw), patch=patch,
+                          probe_stride=stride)
+    _assert_tick_products_equal(got, want)
+
+
+def test_tick_megakernel_masks_dead_rows():
+    """Disengaged / box-less sessions degenerate to a zero (uniform)
+    surface and still match the oracle bitwise."""
+    frames, boxes, counts, engaged, targets = _zeco_inputs()
+    counts = np.zeros_like(counts)
+    engaged = np.zeros_like(engaged)
+    surf, enc = tick_codec_frames(frames, boxes, counts, engaged, targets,
+                                  frame_hw=frames.shape[1:], patch=32,
+                                  interpret=True)
+    np.testing.assert_array_equal(np.asarray(surf),
+                                  np.zeros_like(np.asarray(surf)))
+    want = tick_codec_ref(frames, boxes, counts, engaged, targets,
+                          frame_hw=frames.shape[1:], patch=32)
+    _assert_tick_products_equal((surf, enc), want)
+
+
+def test_tick_megakernel_fast_math_tier_vs_fused_jnp():
+    """The documented tolerance tier: the megakernel is NOT bit-exact
+    against the eager fused jnp plan+encode (different reduction shapes
+    and fusion), but every product must agree to fast-math tolerance —
+    and the bisection must land on the same QP offsets almost
+    everywhere (a stray coefficient may flip at a round() boundary)."""
+    from repro.core.zecostream import rate_control_batch_fused
+    frames, boxes, counts, engaged, targets = _zeco_inputs(seed=7)
+    hw = frames.shape[1:]
+    surf_k, enc_k = tick_codec_frames(frames, boxes, counts, engaged,
+                                      targets, frame_hw=hw, patch=32,
+                                      probe_stride=2, interpret=True)
+    surf_j, _, enc_j = rate_control_batch_fused(
+        jnp.asarray(frames), jnp.asarray(boxes), jnp.asarray(counts),
+        jnp.asarray(engaged), jnp.asarray(targets), frame_hw=hw,
+        patch=32, probe_stride=2)
+    np.testing.assert_allclose(np.asarray(surf_k), np.asarray(surf_j),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(enc_k.qp_blocks),
+                               np.asarray(enc_j.qp_blocks),
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(enc_k.bits),
+                               np.asarray(enc_j.bits), rtol=1e-3)
+    flipped = np.mean(np.asarray(enc_k.coeffs) != np.asarray(enc_j.coeffs))
+    assert flipped < 1e-3
+
+
+def test_tick_megakernel_hits_rate_target():
+    frames, boxes, counts, engaged, targets = _zeco_inputs(seed=5)
+    _, enc = tick_codec_frames(frames, boxes, counts, engaged, targets,
+                               frame_hw=frames.shape[1:], patch=32,
+                               interpret=True)
+    assert np.all(np.asarray(enc.bits) <= targets * 1.15)
 
 
 @hypothesis.given(qp_lo=st.floats(20, 35), dq=st.floats(3, 16),

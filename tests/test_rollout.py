@@ -18,7 +18,7 @@ import pytest
 import _builders as B
 from _hypothesis_compat import HAVE_HYPOTHESIS, hypothesis, st
 from repro.core.fleet import Fleet, run_fleet
-from repro.core.rollout import FleetRollout, max_window
+from repro.core.rollout import FleetRollout, max_window, slot_depth
 from repro.core.session import finalize
 from repro.net.cc import RATE_MAX, RATE_MIN
 
@@ -40,16 +40,46 @@ def _eager_digest(n=N, duration=DUR, fused=True):
 # --------------------------------------------------------------------------
 # Window-size invariants
 # --------------------------------------------------------------------------
-def test_max_window_honours_turnaround_and_feedback_period():
+def test_max_window_honours_turnaround_only():
+    """The window clamp is the feedback TURNAROUND bound alone — the
+    feedback period no longer caps it (multi-slot carries absorb several
+    in-flight feedbacks per window); `slot_depth` sizes those carries."""
     specs = _members()
     cfg = specs[0].cfg
     dt = 1.0 / cfg.fps
     w = max_window(specs, cfg.fps)
-    for s in specs:
-        turnaround = s.cfg.inference_delay + s.cfg.downlink_delay
-        assert w <= int(turnaround / dt + 1e-9)
-        assert w <= int(s.cfg.feedback_period / dt + 1e-9)
-    assert w >= 1
+    turnarounds = [s.cfg.inference_delay + s.cfg.downlink_delay
+                   for s in specs]
+    assert w == max(1, int(min(turnarounds) / dt + 1e-9))
+    s = slot_depth(specs, cfg.fps, w)
+    assert s >= 1
+    # every spec's worst case number of feedbacks due inside one window
+    # fits in the slots
+    for sp in specs:
+        assert s >= int(np.ceil(w * dt / sp.cfg.feedback_period - 1e-9))
+
+
+def test_short_feedback_period_relaxes_window():
+    """A feedback period SHORTER than the turnaround used to clamp the
+    window to 1 tick; with depth-S slots the window stays at the
+    turnaround bound and parity still holds for every split."""
+    import dataclasses
+
+    def members():
+        ms = _members()
+        return [dataclasses.replace(
+            m, cfg=dataclasses.replace(m.cfg, feedback_period=0.15))
+            for m in ms]
+
+    specs = members()
+    cfg = specs[0].cfg
+    w = max_window(specs, cfg.fps)
+    assert w > int(cfg.feedback_period * cfg.fps + 1e-9)  # old clamp beaten
+    assert slot_depth(specs, cfg.fps, w) >= 2
+    base = B.metrics_digest(run_fleet(members(), fused_plan=True))
+    for window in (1, w):
+        got = Fleet(members(), fused_plan=True).run(rollout=window)
+        assert B.metrics_digest(got) == base
 
 
 def test_rollout_clamps_oversized_window():
@@ -82,6 +112,49 @@ def test_rollout_matches_nonfused_eager_fleet():
     got = Fleet(_members(), fused_plan=False).run(rollout=3)
     for a, b in zip(base, got):
         B.assert_metrics_equal(a, b)
+
+
+@pytest.mark.parametrize("window", [1, 3])
+def test_on_device_server_bit_identical_to_eager(window):
+    """`Fleet(on_device_server=True)`: glyph stats + card-grounding run
+    inside the scan (stats-at-send) and the host only replays heap and
+    metrics bookkeeping — still bit-exact against the eager loop."""
+    got = Fleet(_members(), fused_plan=True,
+                on_device_server=True).run(rollout=window)
+    assert B.metrics_digest(got) == _eager_digest()
+
+
+def test_on_device_server_shrinks_outfeed():
+    """The on-device server phase replaces the (w, N, H, W) decoded-frame
+    outfeed with per-session stats rows — orders of magnitude smaller."""
+    fa = Fleet(_members(), fused_plan=True)
+    fa.run(rollout=3)
+    fb = Fleet(_members(), fused_plan=True, on_device_server=True)
+    fb.run(rollout=3)
+    assert fb._last_rollout._ys_nbytes < fa._last_rollout._ys_nbytes / 10
+
+
+def test_megakernel_rollout_tolerance_tier():
+    """`Fleet(megakernel=True)` is the documented fast-math tier: NOT
+    bit-exact vs eager, but every metric stream must stay within
+    fast-math tolerance and the QA outcomes must be identical."""
+    base = run_fleet(_members(), fused_plan=True)
+    got = Fleet(_members(), fused_plan=True, megakernel=True,
+                on_device_server=True).run(rollout=3)
+    for me, mm in zip(base, got):
+        np.testing.assert_allclose(me.rates, mm.rates, rtol=1e-4)
+        np.testing.assert_allclose(me.confidences, mm.confidences,
+                                   rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(me.latencies, mm.latencies, rtol=1e-4)
+        assert me.qa_results == mm.qa_results
+        assert me.n_qa == mm.n_qa
+
+
+def test_megakernel_rejects_mesh():
+    from repro.launch.mesh import make_fleet_mesh
+    with pytest.raises(NotImplementedError):
+        Fleet(_members(), fused_plan=True, megakernel=True,
+              mesh=make_fleet_mesh(1))
 
 
 def test_rollout_syncs_bank_state_back():

@@ -31,7 +31,8 @@ from repro.launch.mesh import make_fleet_mesh
 
 DEVICES = 8
 CASES = ("variants_n8", "padded_n12", "n64", "fused_n8",
-         "rollout_n8", "rollout_pad_n12", "mixed_grid")
+         "rollout_n8", "rollout_pad_n12", "rollout_ondev_n8",
+         "rollout_ondev_pad_n12", "mixed_grid")
 
 
 # --------------------------------------------------------------------------
