@@ -1,0 +1,129 @@
+"""Serving-bridge benchmark: engine throughput + fleet-served latency.
+
+Two stages, both CPU-runnable on the seeded reduced-config model:
+
+1. **Engine drain** — N plain requests through the continuous-batching
+   engine (the `launch/serve.py` workload): wall-clock tokens/sec plus
+   simulated TTFT percentiles and slot / KV-page utilization from
+   `EngineStats`.
+2. **Fleet(server="engine")** — a tiny engine-served scenario end to
+   end: per-session TTFT/queueing percentiles out of `SessionMetrics`.
+
+Wall-clock absolutes move with the runner; the committed
+BENCH_serving.json is gated on METRIC COVERAGE only (every committed
+metric key must still be produced), mirroring the BENCH_kernels.json
+policy — see `benchmarks.snapshot.check_serving_coverage`.
+
+    PYTHONPATH=src python -m benchmarks.bench_serving          # print
+    PYTHONPATH=src python -m benchmarks.bench_serving --write  # snapshot
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import numpy as np
+
+
+def bench_engine(requests: int = 8, max_new: int = 16,
+                 max_batch: int = 4, prompt_len: int = 16) -> Dict:
+    """Drain N random-prompt requests; wall tok/s + simulated latency."""
+    from repro.configs import registry
+    from repro.models import transformer as tfm
+    from repro.models.config import reduced
+    from repro.serving.engine import Engine, Request
+
+    cfg = reduced(registry.get_config("qwen3-0.6b"),
+                  dtype="float32", param_dtype="float32")
+    params = tfm.init(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, max_batch=max_batch, max_len=256,
+                 step_dt=0.01)
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i,
+                    tokens=rng.integers(0, cfg.vocab, prompt_len,
+                                        dtype=np.int32),
+                    max_new_tokens=max_new)
+            for i in range(requests)]
+    t0 = time.perf_counter()
+    for r in reqs:
+        eng.submit(r, now=0.0)
+    done = eng.run_until_drained()
+    wall = time.perf_counter() - t0
+    ttft = [r.ttft for r in done if r.ttft is not None]
+    st = eng.stats
+    return {
+        "engine.tokens_per_sec": st.tokens_out / wall,
+        "engine.ttft_p50_ms": 1e3 * float(np.percentile(ttft, 50)),
+        "engine.ttft_p95_ms": 1e3 * float(np.percentile(ttft, 95)),
+        "engine.slot_utilization": st.slot_utilization,
+        "engine.kv_peak_utilization": st.kv_peak_utilization,
+        "engine.requests": len(done),
+        "engine.wall_s": wall,
+    }
+
+
+def bench_fleet_served(n_sessions: int = 3, duration: float = 3.0) -> Dict:
+    """A tiny engine-served fleet scenario; per-session serving
+    percentiles aggregated over the fleet."""
+    from repro.core.scenario import ScenarioSpec, grid, run_scenarios
+
+    base = ScenarioSpec(duration=duration, frame_h=64, frame_w=64,
+                        scene="retail", qa="periodic",
+                        qa_kwargs=dict(start=1.0, period=1.0, count=2,
+                                       answer_window=1.0),
+                        server="engine",
+                        engine_kwargs=dict(max_len=128, step_dt=0.004))
+    specs = [base.with_(seed=k, scene_seed=k, trace_seed=k,
+                        tag=f"serve-{k}") for k in range(n_sessions)]
+    t0 = time.perf_counter()
+    result = run_scenarios(specs)
+    wall = time.perf_counter() - t0
+    ttfts = [t for m in result.metrics for t in m.server_ttfts]
+    queues = [q for m in result.metrics for q in m.server_queue_delays]
+    return {
+        "fleet.sessions": len(result),
+        "fleet.queries": len(ttfts),
+        "fleet.ttft_p50_ms": 1e3 * float(np.percentile(ttfts, 50)),
+        "fleet.ttft_p95_ms": 1e3 * float(np.percentile(ttfts, 95)),
+        "fleet.queue_p50_ms": 1e3 * float(np.percentile(queues, 50)),
+        "fleet.queue_p95_ms": 1e3 * float(np.percentile(queues, 95)),
+        "fleet.wall_s": wall,
+    }
+
+
+def run(quick: bool = True) -> Dict[str, float]:
+    """All serving metrics as one flat {name: value} dict (the snapshot
+    `metrics` payload)."""
+    metrics = dict(bench_engine(requests=8 if quick else 32,
+                                max_new=8 if quick else 32))
+    metrics.update(bench_fleet_served(n_sessions=2 if quick else 8))
+    return metrics
+
+
+def _main() -> None:
+    import argparse
+
+    from benchmarks.snapshot import (BENCH_SCHEMA, SERVING_SNAPSHOT_PATH,
+                                     env_knobs, machine_info,
+                                     save_serving_snapshot)
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--write", action="store_true",
+                    help=f"write {SERVING_SNAPSHOT_PATH}")
+    ap.add_argument("--full", action="store_true",
+                    help="larger request counts / fleet")
+    args = ap.parse_args()
+    metrics = run(quick=not args.full)
+    for k in sorted(metrics):
+        print(f"  {k:32s} {metrics[k]:.3f}")
+    if args.write:
+        doc = {"schema": BENCH_SCHEMA, "kind": "serving",
+               "machine": machine_info(), "env": env_knobs(),
+               "metrics": metrics}
+        save_serving_snapshot(doc)
+        print(f"wrote {SERVING_SNAPSHOT_PATH}")
+
+
+if __name__ == "__main__":
+    _main()

@@ -25,6 +25,7 @@ BENCH_SCHEMA = "artic.bench.snapshot/v1"
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SNAPSHOT_PATH = os.path.join(_ROOT, "BENCH_fleet.json")
 KERNELS_SNAPSHOT_PATH = os.path.join(_ROOT, "BENCH_kernels.json")
+SERVING_SNAPSHOT_PATH = os.path.join(_ROOT, "BENCH_serving.json")
 REGRESSION_TOL = 0.10
 
 # sessions/sec of the eager (per-tick) fleet on the SAME workload the
@@ -119,6 +120,34 @@ def validate_kernels_snapshot(doc: Dict) -> None:
         need(isinstance(r.get("derived"), str), f"rows[{i}].derived")
 
 
+def validate_serving_snapshot(doc: Dict) -> None:
+    """Structural validation of a BENCH_serving.json document — the same
+    `artic.bench.snapshot/v1` envelope with a flat `metrics` dict
+    (tokens/sec, TTFT percentiles, slot/KV utilization) from
+    `benchmarks.bench_serving.run`."""
+    def need(cond, path):
+        if not cond:
+            raise ValueError(f"invalid serving snapshot: {path}")
+
+    need(isinstance(doc, dict), "document must be an object")
+    need(doc.get("schema") == BENCH_SCHEMA,
+         f"schema must be {BENCH_SCHEMA!r} (got {doc.get('schema')!r})")
+    need(doc.get("kind") == "serving", "kind must be 'serving'")
+    need(isinstance(doc.get("machine"), dict), "machine")
+    for k in ("platform", "python", "jax", "devices"):
+        need(k in doc["machine"], f"machine.{k}")
+    need(isinstance(doc.get("env"), dict), "env")
+    metrics = doc.get("metrics")
+    need(isinstance(metrics, dict) and metrics, "metrics must be non-empty")
+    for k, v in metrics.items():
+        need(isinstance(k, str) and k, "metrics keys must be strings")
+        need(isinstance(v, (int, float)), f"metrics.{k} must be numeric")
+    for k in ("engine.tokens_per_sec", "engine.ttft_p50_ms",
+              "engine.ttft_p95_ms", "engine.slot_utilization",
+              "fleet.ttft_p50_ms", "fleet.queue_p95_ms"):
+        need(k in metrics, f"metrics.{k}")
+
+
 def load_snapshot(path: str = SNAPSHOT_PATH) -> Dict:
     with open(path) as f:
         doc = json.load(f)
@@ -143,6 +172,21 @@ def load_kernels_snapshot(path: str = KERNELS_SNAPSHOT_PATH) -> Dict:
 def save_kernels_snapshot(doc: Dict,
                           path: str = KERNELS_SNAPSHOT_PATH) -> None:
     validate_kernels_snapshot(doc)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def load_serving_snapshot(path: str = SERVING_SNAPSHOT_PATH) -> Dict:
+    with open(path) as f:
+        doc = json.load(f)
+    validate_serving_snapshot(doc)
+    return doc
+
+
+def save_serving_snapshot(doc: Dict,
+                          path: str = SERVING_SNAPSHOT_PATH) -> None:
+    validate_serving_snapshot(doc)
     with open(path, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True)
         f.write("\n")
@@ -187,6 +231,17 @@ def check_kernels_coverage(committed: Dict, fresh_rows) -> List[str]:
             for r in committed["rows"] if r["name"] not in fresh_names]
 
 
+def check_serving_coverage(committed: Dict,
+                           fresh_metrics: Dict) -> List[str]:
+    """Serving gate: every committed metric key must still be produced
+    by a fresh `bench_serving.run()`.  Wall-clock absolutes (tok/s,
+    TTFT ms) move with the runner, so — like the kernels gate — they are
+    recorded but never compared; the gate catches serving metrics
+    silently dropping out of the bench."""
+    return [f"serving metric {k!r} missing from fresh bench"
+            for k in committed["metrics"] if k not in fresh_metrics]
+
+
 def _main() -> None:
     import argparse
     ap = argparse.ArgumentParser(description=__doc__)
@@ -203,13 +258,18 @@ def _main() -> None:
     kernels = load_kernels_snapshot()
     print(f"[snapshot] {KERNELS_SNAPSHOT_PATH}: schema "
           f"{kernels['schema']} OK, {len(kernels['rows'])} rows")
+    serving = load_serving_snapshot()
+    print(f"[snapshot] {SERVING_SNAPSHOT_PATH}: schema "
+          f"{serving['schema']} OK, {len(serving['metrics'])} metrics")
     if args.validate or not args.check:
         return
     from benchmarks.bench_fleet import run_rollout
     from benchmarks.bench_kernels import run as run_kernels
+    from benchmarks.bench_serving import run as run_serving
     fresh = run_rollout(write=False)
     failures = check_regression(committed, fresh)
     failures += check_kernels_coverage(kernels, run_kernels(quick=True))
+    failures += check_serving_coverage(serving, run_serving(quick=True))
     for f in failures:
         print(f"[snapshot] REGRESSION {f}")
     if failures:

@@ -22,8 +22,8 @@ from __future__ import annotations
 from repro.core.scenario import (DEVIBENCH_RESULT_SCHEMA,
                                  DEVIBENCH_SCALAR_METRICS, PRESETS,
                                  QA_POLICIES, RUN_RESULT_SCHEMA,
-                                 SCALAR_METRICS, SYSTEMS, TRACE_FAMILIES,
-                                 Cohort, DeViBenchCohort,
+                                 SCALAR_METRICS, SERVING_METRICS, SYSTEMS,
+                                 TRACE_FAMILIES, Cohort, DeViBenchCohort,
                                  DeViBenchRunResult, RunResult,
                                  ScenarioSpec, build_fleet, build_session,
                                  cohort_key, compile_cohorts,
@@ -42,7 +42,8 @@ from repro.devibench.pipeline import fit_confidence_calibrator
 __all__ = [
     "ScenarioSpec", "RunResult", "Cohort", "run_scenarios", "grid",
     "preset", "register_preset", "PRESETS", "SYSTEMS", "TRACE_FAMILIES",
-    "QA_POLICIES", "SCALAR_METRICS", "RUN_RESULT_SCHEMA",
+    "QA_POLICIES", "SCALAR_METRICS", "SERVING_METRICS",
+    "RUN_RESULT_SCHEMA",
     "build_session", "build_fleet", "cohort_key", "compile_cohorts",
     "validate_run_result_json",
     "DegradationSpec", "DEGRADATION_KINDS", "GridResult",
@@ -156,6 +157,55 @@ def devibench_smoke(out_path: str = "/tmp/artic_devibench_smoke.json"
     return result
 
 
+def serving_smoke(out_path: str = "/tmp/artic_serving_smoke.json"
+                  ) -> RunResult:
+    """Engine-server smoke: a tiny `Fleet(server="engine")` scenario run
+    end to end on CPU — delivered frames stream into the
+    continuous-batching engine as patch embeddings (chunked prefill),
+    committing QA questions decode as one batch, and per-session
+    TTFT/queueing-delay telemetry lands in the metrics.  Run TWICE and
+    digest-compared: the reduced-config random-weight model plus the
+    simulated engine clock make the whole path deterministic."""
+    import hashlib
+    import json
+
+    base = ScenarioSpec(duration=3.0, frame_h=64, frame_w=64,
+                        scene="retail", qa="periodic",
+                        qa_kwargs=dict(start=1.0, period=1.0, count=2,
+                                       answer_window=1.0),
+                        server="engine",
+                        engine_kwargs=dict(max_len=128, step_dt=0.004))
+    specs = grid(base, system=["webrtc", "artic"],
+                 trace=["fluctuating", "elevator"])
+
+    def digest(result: RunResult) -> str:
+        doc = [[m.server_ttfts, m.server_queue_delays,
+                m.server_confidences, m.qa_results, m.latencies]
+               for m in result.metrics]
+        return hashlib.sha256(
+            json.dumps(doc, default=float).encode()).hexdigest()
+
+    result = run_scenarios(specs)
+    again = run_scenarios(specs)
+    d1, d2 = digest(result), digest(again)
+    if d1 != d2:
+        raise AssertionError(
+            f"engine server run is not deterministic: {d1} != {d2}")
+    doc = result.to_json(out_path)
+    validate_run_result_json(doc)
+    n_q = sum(len(m.server_ttfts) for m in result.metrics)
+    if n_q == 0:
+        raise AssertionError("engine server answered no queries")
+    print(f"[serving-smoke] {len(result)} engine-served sessions, "
+          f"{n_q} queries, digest {d1[:12]} reproduced -> {out_path}")
+    for s, m in zip(result.specs, result.metrics):
+        print(f"[serving-smoke]   {s.system}/{s.trace}: "
+              f"ttft_p50={m.ttft_p50_ms:.1f}ms "
+              f"ttft_p95={m.ttft_p95_ms:.1f}ms "
+              f"queue_p95={m.queue_p95_ms:.1f}ms acc={m.accuracy:.2f}")
+    return result
+
+
 def _main() -> None:
     import argparse
 
@@ -171,8 +221,13 @@ def _main() -> None:
     ap.add_argument("--rollout", action="store_true",
                     help="run the whole-tick rollout parity smoke "
                          "(Fleet.run(rollout=K) vs the eager tick loop)")
+    ap.add_argument("--serving", action="store_true",
+                    help="run the engine-server smoke (Fleet(server="
+                         "'engine') determinism + telemetry)")
     args = ap.parse_args()
-    if args.rollout:
+    if args.serving:
+        serving_smoke(args.out)
+    elif args.rollout:
         rollout_smoke()
     elif args.devibench:
         devibench_smoke(args.out)

@@ -71,8 +71,8 @@ from repro.core.recap_abr import CCOnlyABRBank, ReCapABRBank
 from repro.core.session import (QASample, SessionConfig, SessionMetrics,
                                 SessionState, client_record_send,
                                 deliver_feedback, finalize,
-                                make_session_state, pop_due_arrivals,
-                                push_arrival, server_emit)
+                                make_session_state, peek_commit,
+                                pop_due_arrivals, push_arrival, server_emit)
 from repro.core.zecostream import (ZeCoStreamBank, rate_control_batch_fused,
                                    surfaces_from_boxes)
 from repro.distributed.sharding import (pad_sessions, session_partition,
@@ -274,9 +274,32 @@ class Fleet:
     def __init__(self, sessions: Sequence[FleetSession], *,
                  fused_plan: bool = False, profile: bool = False,
                  mesh=None, megakernel: bool = False,
-                 on_device_server: bool = False):
+                 on_device_server: bool = False,
+                 server: str = "oracle",
+                 engine_cfg: Optional[Dict] = None):
         if not sessions:
             raise ValueError("fleet needs at least one session")
+        if server not in ("oracle", "engine"):
+            raise ValueError(f"server must be 'oracle' or 'engine', "
+                             f"got {server!r}")
+        # server="engine" routes the per-tick server phase through the
+        # continuous-batching Engine (repro.serving.bridge): delivered
+        # frames become patch embeddings via chunked prefill, committing
+        # QA questions become one batched decode drain, and per-session
+        # TTFT/queueing-delay/confidence telemetry lands in
+        # SessionMetrics.  Oracle ingestion still runs (it drives the
+        # feedback/ABR loop, keeping channel dynamics identical across
+        # server modes); only the ANSWER comes from the engine.
+        self.server_mode = server
+        if server == "engine":
+            if mesh is not None:
+                raise NotImplementedError(
+                    "server='engine' does not compose with mesh sharding "
+                    "yet (session axis x engine batch; see ROADMAP)")
+            if megakernel or on_device_server:
+                raise NotImplementedError(
+                    "server='engine' requires the eager host server "
+                    "phase — drop megakernel/on_device_server")
         # rollout-mode switches (repro.core.rollout reads them; the eager
         # tick loop ignores both):
         # * megakernel=True routes the scan's per-tick encode through the
@@ -347,6 +370,15 @@ class Fleet:
             st.client.zeco_row = k
         self.bank = ChannelBank([s.trace for s in self.specs],
                                 pad_to=self.n_pad)
+        self.bridge = None
+        if server == "engine":
+            # imported lazily: the bridge pulls in the model zoo, which
+            # oracle-mode fleets never need
+            from repro.serving.bridge import EngineServerBridge
+
+            self.bridge = EngineServerBridge(self.n, **(engine_cfg or {}))
+            for k, st in enumerate(self.states):
+                self.bridge.open(k, st.scene, cfg0.fps)
         self._disp: Optional[_ShardedDispatch] = None
         if self.mesh is not None:
             self._disp = _sharded_dispatch(
@@ -512,8 +544,29 @@ class Fleet:
                for k, st in enumerate(self.states)
                for t_cap, frame in pop_due_arrivals(st, t)]
         _ingest_batched(self.states, due)
-        for st in self.states:
-            server_emit(st, t)
+        if self.bridge is None:
+            for st in self.states:
+                server_emit(st, t)
+        else:
+            # engine server phase: this tick's delivered frames extend
+            # each session's context (chunked prefill), then every
+            # committing question is submitted before ONE batched decode
+            # drain serves them all together
+            frames_by_k: Dict[int, List[np.ndarray]] = {}
+            for k, _, frame in due:
+                frames_by_k.setdefault(k, []).append(frame)
+            for k in sorted(frames_by_k):
+                self.bridge.extend(k, np.stack(frames_by_k[k]), t)
+            committing = [(k, peek_commit(st, t))
+                          for k, st in enumerate(self.states)]
+            for k, q in committing:
+                if q is not None:
+                    self.bridge.submit(k, q, t)
+            answers = self.bridge.drain(t)
+            for k, st in enumerate(self.states):
+                server_emit(st, t, answer_fn=(
+                    (lambda q, _a=answers[k]: _a) if k in answers
+                    else None))
         self._mark("server", t0)
 
     def run(self, rollout: Optional[int] = None) -> List[SessionMetrics]:
@@ -534,12 +587,33 @@ class Fleet:
                else contextlib.nullcontext())
         with ctx:
             if rollout is not None:
+                if self.bridge is not None:
+                    raise NotImplementedError(
+                        "server='engine' does not compose with the "
+                        "compiled rollout yet — run the eager tick loop")
                 self._run_rollout(int(rollout), n_frames)
             else:
                 for i in range(n_frames):
                     self.tick(i * dt)
-        return [finalize(st, self.bank.reports_for(k))
-                for k, st in enumerate(self.states)]
+        if self.bridge is None:
+            return [finalize(st, self.bank.reports_for(k))
+                    for k, st in enumerate(self.states)]
+        # engine mode: the end-of-run QA flush also answers through the
+        # engine (one query at a time — teardown, not the hot path), and
+        # the bridge's per-session telemetry joins the metrics.  The
+        # telemetry is attached AFTER finalize so flush-answered queries
+        # are included.
+        t_end = cfg0.duration
+        out = []
+        for k, st in enumerate(self.states):
+            m = finalize(
+                st, self.bank.reports_for(k),
+                answer_fn=lambda q, _k=k: self.bridge.answer_now(
+                    _k, q, t_end))
+            for field, vals in self.bridge.metrics_kwargs(k).items():
+                setattr(m, field, vals)
+            out.append(m)
+        return out
 
     def _run_rollout(self, window: int, n_frames: int) -> None:
         # imported lazily: rollout imports this module at load time

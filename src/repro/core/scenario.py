@@ -54,7 +54,7 @@ from repro.video.scenes import Scene, make_scene
 # --------------------------------------------------------------------------
 FrozenKwargs = Tuple[Tuple[str, Any], ...]
 _KWARGS_FIELDS = ("trace_kwargs", "scene_kwargs", "qa_kwargs",
-                  "session_kwargs", "degradation_kwargs")
+                  "session_kwargs", "degradation_kwargs", "engine_kwargs")
 
 
 def _freeze(value, top: bool = True) -> Any:
@@ -121,6 +121,10 @@ class ScenarioSpec:
     # conversational QA policy
     qa: str = "none"                  # key into QA_POLICIES
     qa_kwargs: FrozenKwargs = ()
+    # server peer: "oracle" (bit-exact glyph lookup, the default) or
+    # "engine" (the continuous-batching MLLM engine via serving.bridge)
+    server: str = "oracle"
+    engine_kwargs: FrozenKwargs = ()  # EngineServerBridge knobs
     # DeViBench degradation dimension (run_devibench workloads; must
     # stay "none" on the RTC fleet path)
     degradation: str = "none"         # key into engine.DEGRADATION_KINDS
@@ -135,6 +139,9 @@ class ScenarioSpec:
         if self.degradation not in DEGRADATION_KINDS:
             raise ValueError(f"unknown degradation {self.degradation!r}; "
                              f"one of {DEGRADATION_KINDS}")
+        if self.server not in ("oracle", "engine"):
+            raise ValueError(f"unknown server {self.server!r}; "
+                             "one of ('oracle', 'engine')")
         for f in _KWARGS_FIELDS:
             # accept dicts (or pair lists) and freeze them for hashing
             object.__setattr__(self, f, _freeze(dict(getattr(self, f))))
@@ -347,7 +354,8 @@ def cohort_key(spec: ScenarioSpec) -> Tuple:
     trace_dt = dict(spec.trace_kwargs).get("dt",
                                            trace_lib.DEFAULT_TRACE_DT)
     return (spec.fps, spec.duration, spec.frame_h, spec.frame_w,
-            spec.rc_probe_stride, trace_dt)
+            spec.rc_probe_stride, trace_dt, spec.server,
+            spec.engine_kwargs)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -358,9 +366,10 @@ class Cohort:
     indices: Tuple[int, ...]
 
     def to_dict(self) -> Dict[str, Any]:
-        fps, duration, h, w, stride, dt = self.key
+        fps, duration, h, w, stride, dt, server, engine_kwargs = self.key
         return {"fps": fps, "duration": duration, "frame_h": h,
                 "frame_w": w, "rc_probe_stride": stride, "trace_dt": dt,
+                "server": server, "engine_kwargs": _thaw(engine_kwargs),
                 "sessions": list(self.indices)}
 
 
@@ -398,6 +407,13 @@ RUN_RESULT_SCHEMA = "artic.scenario.run_result/v1"
 SCALAR_METRICS = ("accuracy", "avg_latency_ms", "p95_latency_ms",
                   "avg_bitrate", "bandwidth_used", "n_qa",
                   "dropped_frames", "zeco_engaged_frames")
+
+# server-peer telemetry columns: populated under server="engine"
+# (zeros under the default oracle).  Kept out of SCALAR_METRICS so the
+# committed golden files — exported before the serving bridge existed —
+# stay schema-valid; exports carry both sets.
+SERVING_METRICS = ("ttft_p50_ms", "ttft_p95_ms",
+                   "queue_p50_ms", "queue_p95_ms")
 
 
 @dataclasses.dataclass
@@ -465,7 +481,7 @@ class RunResult:
             rec = {"spec": s.to_dict(),
                    "cohort": cohort_of[i],
                    "metrics": {f: float(getattr(m, f))
-                               for f in SCALAR_METRICS}}
+                               for f in SCALAR_METRICS + SERVING_METRICS}}
             rec["metrics"]["qa_results"] = [bool(b) for b in m.qa_results]
             if include_series:
                 rec["series"] = {
@@ -488,10 +504,11 @@ class RunResult:
                        if f.name not in _KWARGS_FIELDS]
         buf = io.StringIO()
         w = csv.writer(buf)
-        w.writerow(spec_fields + list(SCALAR_METRICS))
+        w.writerow(spec_fields + list(SCALAR_METRICS + SERVING_METRICS))
         for s, m in zip(self.specs, self.metrics):
             w.writerow([getattr(s, f) for f in spec_fields]
-                       + [getattr(m, f) for f in SCALAR_METRICS])
+                       + [getattr(m, f)
+                          for f in SCALAR_METRICS + SERVING_METRICS])
         text = buf.getvalue()
         if path is not None:
             with open(path, "w") as f:
@@ -924,9 +941,14 @@ def run_scenarios(specs: Union[ScenarioSpec, str,
     metrics: List[Optional[SessionMetrics]] = [None] * len(specs)
     phase_times: List[Dict[str, float]] = []
     for cohort in cohorts:
+        # server mode and engine knobs are part of cohort_key, so every
+        # member of a cohort agrees on them
+        spec0 = specs[cohort.indices[0]]
         fleet = Fleet([build_session(specs[i], calibrator)
                        for i in cohort.indices],
-                      fused_plan=fused_plan, profile=profile, mesh=mesh)
+                      fused_plan=fused_plan, profile=profile, mesh=mesh,
+                      server=spec0.server,
+                      engine_cfg=_thaw(spec0.engine_kwargs))
         for i, m in zip(cohort.indices, fleet.run()):
             metrics[i] = m
         if profile:

@@ -25,7 +25,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -189,6 +189,13 @@ class SessionMetrics:
     zeco_engaged_frames: int
     qa_results: List[bool]
     dropped_frames: int = 0
+    # serving telemetry — populated only when the fleet runs with
+    # server="engine" (per answered query / per extend+query op); empty
+    # lists under the default oracle server, so oracle metrics are
+    # byte-identical to pre-engine runs.
+    server_ttfts: List[float] = dataclasses.field(default_factory=list)
+    server_queue_delays: List[float] = dataclasses.field(default_factory=list)
+    server_confidences: List[float] = dataclasses.field(default_factory=list)
 
     @property
     def avg_latency_ms(self) -> float:
@@ -203,6 +210,26 @@ class SessionMetrics:
     def frac_below(self, ms: float) -> float:
         lat = np.asarray(self.latencies) * 1e3
         return float(np.mean(lat < ms)) if len(lat) else 0.0
+
+    @property
+    def ttft_p50_ms(self) -> float:
+        t = self.server_ttfts
+        return 1e3 * float(np.percentile(t, 50)) if t else 0.0
+
+    @property
+    def ttft_p95_ms(self) -> float:
+        t = self.server_ttfts
+        return 1e3 * float(np.percentile(t, 95)) if t else 0.0
+
+    @property
+    def queue_p50_ms(self) -> float:
+        q = self.server_queue_delays
+        return 1e3 * float(np.percentile(q, 50)) if q else 0.0
+
+    @property
+    def queue_p95_ms(self) -> float:
+        q = self.server_queue_delays
+        return 1e3 * float(np.percentile(q, 95)) if q else 0.0
 
 
 # ==========================================================================
@@ -374,8 +401,29 @@ def pop_due_arrivals(state: SessionState, t: float
     return due
 
 
-def server_emit(state: SessionState, t: float) -> None:
-    """Post-ingestion server phase: emit feedback, progress QA."""
+def peek_commit(state: SessionState, t: float) -> Optional[QASample]:
+    """Non-mutating mirror of `server_emit`'s QA open/commit logic:
+    the QASample that `server_emit(state, t)` would commit this tick, or
+    None.  The fleet's engine server mode uses this to submit all
+    committing questions into the engine BEFORE one batched decode drain,
+    then hands the results back through `server_emit(..., answer_fn=...)`."""
+    sv = state.server
+    q = sv.server.active_question
+    if (q is None and sv.qa_i < len(sv.qa_sorted)
+            and sv.qa_sorted[sv.qa_i].t_ask <= t):
+        q = sv.qa_sorted[sv.qa_i]
+    if q is not None and t >= q.t_ask + q.answer_window:
+        return q
+    return None
+
+
+def server_emit(state: SessionState, t: float,
+                answer_fn: Optional[Callable[[QASample], bool]] = None
+                ) -> None:
+    """Post-ingestion server phase: emit feedback, progress QA.
+
+    `answer_fn` overrides how a committing question is answered (the
+    engine server path); None keeps the oracle's lookup answer."""
     cfg, sv, c = state.cfg, state.server, state.client
     # 7. server emits feedback at its cadence
     if t >= sv.next_feedback_t and sv.server.frames_seen:
@@ -392,7 +440,9 @@ def server_emit(state: SessionState, t: float) -> None:
         sv.qa_i += 1
     q = sv.server.active_question
     if q is not None and t >= q.t_ask + q.answer_window:
-        sv.qa_results.append(sv.server.answer(q))
+        answer = (answer_fn(q) if answer_fn is not None
+                  else sv.server.answer(q))
+        sv.qa_results.append(answer)
         sv.server.active_question = None
     c.confs.append(c.confidence)
 
@@ -438,17 +488,26 @@ def step(state: SessionState, t: float) -> SessionState:
     return state
 
 
-def finalize(state: SessionState, reports) -> SessionMetrics:
-    """Flush open QA and assemble SessionMetrics from the final state."""
+def finalize(state: SessionState, reports,
+             answer_fn: Optional[Callable[[QASample], bool]] = None,
+             server_telemetry: Optional[Dict[str, List[float]]] = None
+             ) -> SessionMetrics:
+    """Flush open QA and assemble SessionMetrics from the final state.
+
+    `answer_fn` replaces the oracle answer for the end-of-run flush (the
+    engine server path); `server_telemetry` carries the bridge's
+    per-session ttft/queue/confidence lists into the metrics."""
     cfg, sv, c = state.cfg, state.server, state.client
+    _answer = answer_fn if answer_fn is not None else sv.server.answer
     # flush: commit any open question and ask the rest at session end
     if sv.server.active_question is not None:
-        sv.qa_results.append(sv.server.answer(sv.server.active_question))
+        sv.qa_results.append(_answer(sv.server.active_question))
         sv.server.active_question = None
     while sv.qa_i < len(sv.qa_sorted):
-        sv.qa_results.append(sv.server.answer(sv.qa_sorted[sv.qa_i]))
+        sv.qa_results.append(_answer(sv.qa_sorted[sv.qa_i]))
         sv.qa_i += 1
     return SessionMetrics(
+        **(server_telemetry or {}),
         latencies=c.latencies,
         accuracy=(float(np.mean(sv.qa_results)) if sv.qa_results else 1.0),
         n_qa=len(sv.qa_results),

@@ -1,0 +1,248 @@
+"""Serving bridge: the continuous-batching engine as the fleet's cloud peer.
+
+The fleet's default server is a glyph-decoding oracle — accuracy and
+response latency are *looked up*.  This module closes the paper's loop:
+`Fleet(server="engine")` routes the per-tick server phase through a real
+`serving.Engine`, so the visual quality the channel actually delivered
+is what a model conditions on, and response timing comes from the
+engine's slot/queue discipline instead of a constant:
+
+  delivered frame --frames_to_patches--> (P, d_model) embeddings
+        --Engine.extend_session--> chunked prefill into the session slot
+  QA commit --Engine.submit_query/drain_queries--> batched decode
+        --> answer tokens scored by the SAME QA policy, plus TTFT /
+            queueing-delay / confidence telemetry per query.
+
+Determinism contract: the model is a seeded reduced-config backbone
+(random weights, greedy sampling, float32 on CPU) and the engine clock
+is simulated (`step_dt` per engine step), so two runs of the same
+scenario are digest-identical.  Random weights answer at chance level —
+the engine path measures *system* behavior (latency, queueing, context
+growth, batching) end to end; the oracle stays the accuracy-calibrated
+default and is untouched by this module.
+
+Context growth: every delivered frame appends `patch_grid**2` tokens.
+When the slot would overflow (`max_len`), the bridge rolls the session
+over — closes and reopens the slot, dropping the old context — which
+models a crude streaming-context truncation.  Rollovers are counted in
+the telemetry; smarter eviction (StreamingLLM-style sinks) is a ROADMAP
+item.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.models import transformer as tfm
+from repro.models.config import reduced
+from repro.serving.engine import Engine, Request
+from repro.serving.sampler import SamplerConfig
+from repro.video.scenes import GLYPH_BITS
+
+_POOL = 8  # each patch is average-pooled to a POOL x POOL feature grid
+
+
+def frames_to_patches(frames: np.ndarray, d_model: int,
+                      patch_grid: int = 2, seed: int = 0) -> np.ndarray:
+    """Deterministic patch embedder: (B, H, W) frames (or one (H, W)
+    frame) -> (B, patch_grid**2, d_model) float32 embeddings.
+
+    Each frame splits into a patch_grid x patch_grid grid; every patch is
+    average-pooled to an 8x8 feature tile, zero-centered (frames live in
+    [0, 1]) and projected by a FIXED seeded Gaussian matrix — pure NumPy,
+    no learned state, bit-stable across runs and batch sizes.  The
+    embeddings preserve exactly the degradation the channel inflicted:
+    a re-quantized or downscaled frame produces different tokens than a
+    clean one, which is the whole point of conditioning the model on
+    *delivered* pixels."""
+    frames = np.asarray(frames, np.float32)
+    if frames.ndim == 2:
+        frames = frames[None]
+    if frames.ndim != 3:
+        raise ValueError(f"frames must be (B, H, W) or (H, W); "
+                         f"got shape {frames.shape}")
+    B, H, W = frames.shape
+    g = int(patch_grid)
+    ph, pw = H // g, W // g
+    if ph < _POOL or pw < _POOL:
+        raise ValueError(
+            f"frame {H}x{W} too small for patch_grid={g}: each patch "
+            f"must be at least {_POOL}x{_POOL}")
+    bh, bw = ph // _POOL, pw // _POOL
+    # crop to pool-aligned patch tiles (top-left anchored, deterministic)
+    x = frames[:, :g * bh * _POOL, :g * bw * _POOL]
+    x = x.reshape(B, g, bh * _POOL, g, bw * _POOL)
+    x = x.transpose(0, 1, 3, 2, 4).reshape(B, g * g, bh * _POOL, bw * _POOL)
+    x = x.reshape(B, g * g, _POOL, bh, _POOL, bw).mean(axis=(3, 5))
+    feats = x.reshape(B, g * g, _POOL * _POOL) - 0.5
+    proj = _projection(d_model, seed)
+    return (feats @ proj).astype(np.float32)
+
+
+_PROJ_CACHE: Dict[Tuple[int, int], np.ndarray] = {}
+
+
+def _projection(d_model: int, seed: int) -> np.ndarray:
+    key = (d_model, seed)
+    if key not in _PROJ_CACHE:
+        rng = np.random.default_rng(seed)
+        _PROJ_CACHE[key] = (rng.standard_normal((_POOL * _POOL, d_model))
+                            / np.sqrt(_POOL * _POOL)).astype(np.float32)
+    return _PROJ_CACHE[key]
+
+
+@dataclasses.dataclass
+class SessionTelemetry:
+    """Per-session serving telemetry the bridge accumulates; lands in
+    `SessionMetrics.server_ttfts` / `server_queue_delays` /
+    `server_confidences` at finalize."""
+    ttfts: List[float] = dataclasses.field(default_factory=list)
+    queue_delays: List[float] = dataclasses.field(default_factory=list)
+    confidences: List[float] = dataclasses.field(default_factory=list)
+    extends: int = 0
+    rollovers: int = 0
+
+    def as_metrics_kwargs(self) -> Dict[str, List[float]]:
+        return dict(server_ttfts=list(self.ttfts),
+                    server_queue_delays=list(self.queue_delays),
+                    server_confidences=list(self.confidences))
+
+
+class EngineServerBridge:
+    """Owns one `Engine` whose slots are the fleet's sessions.
+
+    The fleet tick drives three entry points in order: `extend(k, ...)`
+    for every session with frames delivered this tick, `submit(k, qa,
+    t)` for every session whose question commits this tick, then one
+    `drain(t)` that batch-decodes ALL open queries together — that last
+    call is the continuous-batching payoff: one decode step per engine
+    tick serves every querying session."""
+
+    #: engine_cfg keys accepted by Fleet(engine_cfg=...) / ScenarioSpec
+    KNOBS = ("arch", "reduced_model", "max_len", "step_dt", "patch_grid",
+             "max_new", "query_len", "seed", "chunk_max", "temperature")
+
+    def __init__(self, n_sessions: int, *, arch: str = "qwen3-0.6b",
+                 reduced_model: bool = True, max_len: int = 192,
+                 step_dt: float = 0.004, patch_grid: int = 2,
+                 max_new: int = 4, query_len: int = 3, seed: int = 0,
+                 chunk_max: int = 32, temperature: float = 0.0):
+        cfg = registry.get_config(arch)
+        if reduced_model:
+            cfg = reduced(cfg, dtype="float32", param_dtype="float32")
+        if cfg.family == "hybrid" or cfg.kv_cache_dtype == "int8":
+            raise NotImplementedError(
+                f"{cfg.name}: the serving bridge needs prefill_extend "
+                "(dense/moe/ssm, full-precision KV)")
+        self.cfg = cfg
+        self.patch_grid = int(patch_grid)
+        self.max_new = int(max_new)
+        self.query_len = int(query_len)
+        self.seed = int(seed)
+        params = tfm.init(jax.random.PRNGKey(seed), cfg)
+        self.engine = Engine(
+            cfg, params, max_batch=n_sessions, max_len=max_len,
+            sampler=SamplerConfig(temperature=temperature), seed=seed,
+            step_dt=step_dt, chunk_max=chunk_max)
+        # headroom a query needs on top of the streamed context
+        self._reserve = self.query_len + self.max_new
+        self._scenes: Dict[int, object] = {}
+        self._fps: Dict[int, float] = {}
+        self.telemetry: Dict[int, SessionTelemetry] = {}
+        self._pending: Dict[int, Tuple[object, Request]] = {}
+
+    # -- session lifecycle ---------------------------------------------
+    def open(self, k: int, scene, fps: float, now: float = 0.0) -> None:
+        self.engine.open_session(k, now=now)
+        self._scenes[k] = scene
+        self._fps[k] = float(fps)
+        self.telemetry[k] = SessionTelemetry()
+
+    def _ensure_capacity(self, k: int, n_new: int) -> None:
+        """Roll the session context over (close + reopen the slot) when
+        the next op would overflow `max_len` — crude but deterministic
+        streaming-context truncation."""
+        if (self.engine.session_length(k) + n_new + self._reserve
+                > self.engine.max_len):
+            self.engine.close_session(k)
+            self.engine.open_session(k)
+            self.telemetry[k].rollovers += 1
+
+    # -- the per-tick server phase -------------------------------------
+    def extend(self, k: int, frames: np.ndarray, now: float) -> None:
+        """Prefill this tick's delivered frames ((B, H, W) or (H, W))
+        into session k's context."""
+        embeds = frames_to_patches(frames, self.cfg.d_model,
+                                   self.patch_grid, self.seed)
+        flat = embeds.reshape(-1, self.cfg.d_model)
+        self._ensure_capacity(k, flat.shape[0])
+        delay = self.engine.extend_session(k, flat, now=now)
+        tel = self.telemetry[k]
+        tel.queue_delays.append(delay)
+        tel.extends += 1
+
+    def query_tokens(self, qa) -> np.ndarray:
+        """Deterministic token encoding of a QASample (kind + object)."""
+        V = self.cfg.vocab
+        kind_id = 1 if qa.kind == "count_objects" else 0
+        toks = [kind_id, 2 + (qa.obj_idx % (V - 2)),
+                2 + (int(round(qa.t_ask * 10)) % (V - 2))]
+        return np.asarray(toks[:self.query_len], np.int32)
+
+    def submit(self, k: int, qa, now: float) -> None:
+        toks = self.query_tokens(qa)
+        self._ensure_capacity(k, len(toks))
+        req = self.engine.submit_query(k, toks, now=now,
+                                       max_new=self.max_new)
+        self._pending[k] = (qa, req)
+
+    def drain(self, now: float) -> Dict[int, bool]:
+        """Batch-decode all open queries; returns {k: correct} and
+        records TTFT / queueing delay / confidence telemetry."""
+        if not self._pending:
+            return {}
+        self.engine.drain_queries(now=now)
+        results: Dict[int, bool] = {}
+        for k, (qa, req) in sorted(self._pending.items()):
+            tel = self.telemetry[k]
+            tel.ttfts.append(req.ttft if req.ttft is not None else 0.0)
+            tel.queue_delays.append(req.queue_delay)
+            tel.confidences.append(req.confidence)
+            results[k] = self._score(k, qa, req)
+        self._pending.clear()
+        return results
+
+    def answer_now(self, k: int, qa, now: float) -> bool:
+        """Submit + drain one question synchronously (the end-of-run QA
+        flush in `session.finalize`)."""
+        self.submit(k, qa, now)
+        return self.drain(now)[k]
+
+    # -- scoring: the same QA policy the oracle answers against --------
+    def _score(self, k: int, qa, req: Request) -> bool:
+        scene = self._scenes[k]
+        frame_idx = int(round(qa.t_ask * self._fps[k]))
+        if qa.kind == "count_objects":
+            if not req.output:
+                return False
+            # first answer token folds to a count guess
+            return (req.output[0] % 9) == len(scene.objects)
+        epoch = scene.epoch(frame_idx)
+        truth = scene.objects[qa.obj_idx].code_at(epoch)
+        if len(req.output) < 2:
+            return False
+        code = ((req.output[0] * self.cfg.vocab + req.output[1])
+                % (1 << GLYPH_BITS))
+        return code == truth
+
+    # -- introspection --------------------------------------------------
+    @property
+    def stats(self):
+        return self.engine.stats
+
+    def metrics_kwargs(self, k: int) -> Dict[str, List[float]]:
+        return self.telemetry[k].as_metrics_kwargs()

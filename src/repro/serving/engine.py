@@ -7,16 +7,32 @@ cache region.  One jitted decode step serves all active slots per tick
 with per-slot lengths, so heterogeneous sequences never block each other.
 
 The engine also exposes *streaming sessions* for the Artic video loop:
-`extend_session` appends frame-patch embeddings to a session's context
-(chunked prefill), `query_session` decodes a response and returns the
-confidence/grounding telemetry the Artic feedback channel ships back to
-the client.
+`open_session` pins a slot for a long-lived video context,
+`extend_session` appends frame-patch embeddings to it (Sarathi-style
+chunked prefill into the slot's cache region), and `submit_query` /
+`drain_queries` decode a response over ALL querying sessions in one
+batched decode loop, returning the confidence/logprob telemetry the
+Artic feedback channel ships back to the client
+(`repro.serving.bridge` wires this into the fleet tick).
+
+Time is simulated when the caller passes `now` (the fleet clock): every
+engine step — a prefill chunk or one batched decode — advances
+`self.clock` by `step_dt`, so server-side queueing delay
+(`max(clock, now) - now`) and TTFT (`first_token_time - arrival`) are
+deterministic functions of the workload, not of the host's wall clock.
+Without `now`, `step()` still self-advances the simulated clock, so
+`run_until_drained` timings are reproducible too.
+
+KV accounting rides a `kv_cache.PageAllocator` over a virtual page pool
+sized to the contiguous cache (the device cache itself stays contiguous;
+pages are the *accounting* quantum): slots allocate pages as their
+lengths grow and release them on retirement, and `EngineStats` surfaces
+current/peak pool utilization.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -25,6 +41,7 @@ import numpy as np
 
 from repro.models import transformer as tfm
 from repro.models.config import ModelConfig
+from repro.serving.kv_cache import PageAllocator
 from repro.serving.sampler import SamplerConfig, sample
 
 
@@ -41,6 +58,24 @@ class Request:
     entropies: List[float] = dataclasses.field(default_factory=list)
     first_token_time: Optional[float] = None
     done_time: Optional[float] = None
+    queue_delay: float = 0.0             # arrival -> first engine service
+
+    @property
+    def ttft(self) -> Optional[float]:
+        """Time to first token on the engine's (simulated) clock."""
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival
+
+    @property
+    def mean_logprob(self) -> float:
+        return float(np.mean(self.logprobs)) if self.logprobs else 0.0
+
+    @property
+    def confidence(self) -> float:
+        """exp(mean token logprob) — the telemetry the Artic feedback
+        channel ships back as the server's answer confidence."""
+        return float(np.exp(self.mean_logprob))
 
 
 @dataclasses.dataclass
@@ -49,18 +84,69 @@ class EngineStats:
     tokens_out: int = 0
     admitted: int = 0
     finished: int = 0
+    # slot occupancy: busy slot-steps over total slot-steps
+    slot_busy_steps: int = 0
+    slot_total_steps: int = 0
+    # KV page-pool accounting (PageAllocator over the contiguous cache)
+    kv_pages_total: int = 0
+    kv_pages_used: int = 0
+    kv_pages_peak: int = 0
+
+    @property
+    def slot_utilization(self) -> float:
+        return self.slot_busy_steps / max(self.slot_total_steps, 1)
+
+    @property
+    def kv_utilization(self) -> float:
+        return self.kv_pages_used / max(self.kv_pages_total, 1)
+
+    @property
+    def kv_peak_utilization(self) -> float:
+        return self.kv_pages_peak / max(self.kv_pages_total, 1)
+
+
+class SessionOverflowError(RuntimeError):
+    """A streaming session tried to grow past the slot's max_len."""
+
+
+@dataclasses.dataclass
+class _StreamSession:
+    """Host-side record of one pinned streaming-session slot."""
+    sid: int
+    slot: int
+    length: int = 0                  # tokens in the slot cache (host mirror)
+    opened: float = 0.0
+    extends: int = 0
+    active: Optional[Request] = None  # in-flight query, if any
+    pending_token: int = 0            # next token to feed the batched decode
+    unflushed: Optional[int] = None   # final answer token awaiting its KV
+    #   write (decode writes token i-1's KV while producing token i, so
+    #   the last sampled token joins the cache with the NEXT prefill)
+
+
+def _chunk_pad(n: int, chunk_max: int) -> int:
+    """Pad a chunk length to the next power of two (bounded by
+    `chunk_max`) so the jitted extend retraces O(log) shapes, not one
+    per frame geometry."""
+    p = 1
+    while p < n:
+        p *= 2
+    return min(p, max(chunk_max, n))
 
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params, max_batch: int = 4,
                  max_len: int = 512,
-                 sampler: SamplerConfig = SamplerConfig(),
-                 seed: int = 0):
+                 sampler: Optional[SamplerConfig] = None,
+                 seed: int = 0, step_dt: float = 0.0,
+                 kv_page: int = 16, chunk_max: int = 64):
         self.cfg = cfg
         self.params = params
         self.B = max_batch
         self.max_len = max_len
-        self.sampler = sampler
+        # None -> a fresh default per engine (a dataclass default of
+        # SamplerConfig() would be one shared instance across engines)
+        self.sampler = SamplerConfig() if sampler is None else sampler
         self.cache = tfm.init_cache(cfg, max_batch, max_len)
         # per-slot lengths (vector mode)
         self.cache["length"] = jnp.zeros((max_batch,), jnp.int32)
@@ -69,14 +155,67 @@ class Engine:
         self.key = jax.random.PRNGKey(seed)
         self.stats = EngineStats()
         self._pending_tokens = [0] * max_batch
+        # simulated clock: each engine step (prefill chunk or batched
+        # decode) consumes step_dt of simulated server time
+        self.clock = 0.0
+        self.step_dt = float(step_dt)
+        self.chunk_max = int(chunk_max)
+        # KV page-pool accounting over the contiguous cache
+        self.kv_page = int(kv_page)
+        pages_per_slot = -(-max_len // self.kv_page)
+        self.allocator = PageAllocator(max_batch * pages_per_slot)
+        self.stats.kv_pages_total = self.allocator.n_pages
+        # streaming sessions pin slots; _admit must not hand those out
+        self._sessions: Dict[int, _StreamSession] = {}
+        self._slot_sids: Dict[int, int] = {}
 
         self._decode = jax.jit(
             lambda p, c, b: tfm.decode_step(p, c, b, cfg))
         self._prefill_one = jax.jit(
             lambda p, b: tfm.prefill(p, b, cfg, max_len=max_len))
+        self._extend_one = jax.jit(
+            lambda p, c, b: tfm.prefill_extend(p, c, b, cfg))
+
+    # -- simulated time ------------------------------------------------
+    def _begin_service(self, now: Optional[float]) -> float:
+        """Advance the clock to service an op submitted at `now`;
+        returns the op's queueing delay (how long the engine was busy
+        with earlier work)."""
+        if now is None:
+            return 0.0
+        if now >= self.clock:
+            self.clock = now
+            return 0.0
+        return self.clock - now
+
+    def _spend_step(self) -> None:
+        self.clock += self.step_dt
+        self.stats.steps += 1
+        self._count_busy()
+
+    # -- KV page accounting --------------------------------------------
+    def _kv_sync(self, seq_key, length: int) -> None:
+        """Grow `seq_key`'s page allocation to cover `length` tokens."""
+        need = -(-max(length, 1) // self.kv_page)
+        have = len(self.allocator.owned.get(seq_key, []))
+        if need > have:
+            self.allocator.alloc(seq_key, need - have)
+        self.stats.kv_pages_used = (self.allocator.n_pages
+                                    - len(self.allocator.free))
+        self.stats.kv_pages_peak = max(self.stats.kv_pages_peak,
+                                       self.stats.kv_pages_used)
+
+    def _kv_release(self, seq_key) -> None:
+        self.allocator.release(seq_key)
+        self.stats.kv_pages_used = (self.allocator.n_pages
+                                    - len(self.allocator.free))
 
     # ------------------------------------------------------------------
-    def submit(self, req: Request):
+    def submit(self, req: Request, now: Optional[float] = None):
+        """Queue a request; `now` stamps its arrival on the simulated
+        clock (the bridge passes fleet time here)."""
+        if now is not None:
+            req.arrival = now
         self.queue.append(req)
 
     def _write_slot(self, slot: int, cache_one, length: int):
@@ -94,21 +233,46 @@ class Engine:
             self.cache[k] = jax.tree.map(write, self.cache[k], cache_one[k])
         self.cache["length"] = self.cache["length"].at[slot].set(length)
 
-    def _admit(self, now: float):
+    def _slot_cache(self, slot: int, length: int) -> Dict[str, Any]:
+        """A single-sequence view of batch slot `slot` (scalar length,
+        as `prefill_extend` requires)."""
+        one = {}
+        for k, v in self.cache.items():
+            if k == "length":
+                continue
+            one[k] = jax.tree.map(lambda a: a[:, slot:slot + 1], v)
+        one["length"] = jnp.asarray(length, jnp.int32)
+        return one
+
+    def _free_slot(self) -> Optional[int]:
         for slot in range(self.B):
-            if self.slots[slot] is not None or not self.queue:
+            if self.slots[slot] is None and slot not in self._slot_sids:
+                return slot
+        return None
+
+    def _admit(self, now: float) -> List[int]:
+        newly: List[int] = []
+        for slot in range(self.B):
+            if (self.slots[slot] is not None or slot in self._slot_sids
+                    or not self.queue or self.queue[0].arrival > now):
+                # FIFO: a head that hasn't arrived yet blocks the queue
+                # (no reordering around it)
                 continue
             req = self.queue.popleft()
+            req.queue_delay = max(now - req.arrival, 0.0)
             toks = jnp.asarray(req.tokens, jnp.int32)[None, :]
             logits, cache_one = self._prefill_one(self.params, {"tokens": toks})
             self._write_slot(slot, cache_one, int(req.tokens.shape[0]))
             self.slots[slot] = req
             self.stats.admitted += 1
+            self._kv_sync(("req", req.uid), int(req.tokens.shape[0]))
             # sample the first token from the prefill logits
             self.key, sub = jax.random.split(self.key)
             out = sample(sub, logits[:, 0, :], self.sampler)
             self._record(req, out, 0, now)
             self._pending_tokens[slot] = int(out.token[0])
+            newly.append(slot)
+        return newly
 
     def _record(self, req: Request, out, i: int, now: float):
         tok = int(out.token[i])
@@ -132,26 +296,56 @@ class Engine:
                 done.append(req)
                 self.slots[slot] = None
                 self.stats.finished += 1
+                self._kv_release(("req", req.uid))
         return done
+
+    def _count_busy(self) -> None:
+        busy = sum(r is not None for r in self.slots) + len(self._sessions)
+        self.stats.slot_busy_steps += busy
+        self.stats.slot_total_steps += self.B
 
     def step(self, now: Optional[float] = None) -> List[Request]:
         """One engine tick: admit -> batched decode -> retire.
 
-        Returns requests finished this tick."""
-        now = time.monotonic() if now is None else now
-        self._admit(now)
-        active = [s for s, r in enumerate(self.slots) if r is not None]
+        `now` defaults to the engine's own simulated clock advanced by
+        `step_dt` — not the host wall clock — so request timings are
+        deterministic.  Returns requests finished this tick."""
+        if now is None:
+            now = self.clock + self.step_dt
+            if (self.queue and all(r is None for r in self.slots)
+                    and self.queue[0].arrival + self.step_dt > now):
+                # discrete-event idle skip: nothing in flight, so sleep
+                # until the next queued arrival instead of spinning ticks
+                now = self.queue[0].arrival + self.step_dt
+        self.clock = max(self.clock, now)
+        now = self.clock
+        newly = self._admit(now)
+        self._count_busy()
+        # Orca iteration semantics: an admission tick yields only the
+        # prefill-sampled first token; decode starts on the next tick
+        active = [s for s, r in enumerate(self.slots)
+                  if r is not None and s not in newly]
         if active:
             toks = np.zeros((self.B, 1), np.int32)
             for s in active:
                 toks[s, 0] = self._pending_tokens[s]
+            lengths = self.cache["length"]
             logits, self.cache = self._decode(
                 self.params, self.cache, {"tokens": jnp.asarray(toks)})
+            # decode_step advances EVERY slot's length; restore idle
+            # slots (free or pinned by a non-decoding session) so their
+            # cache positions stay put
+            mask = np.zeros(self.B, bool)
+            mask[active] = True
+            self.cache["length"] = jnp.where(
+                jnp.asarray(mask), self.cache["length"], lengths)
             self.key, sub = jax.random.split(self.key)
             out = sample(sub, logits[:, 0, :], self.sampler)
             for s in active:
                 self._record(self.slots[s], out, s, now)
                 self._pending_tokens[s] = int(out.token[s])
+                self._kv_sync(("req", self.slots[s].uid),
+                              int(self.cache["length"][s]))
         self.stats.steps += 1
         return self._retire(now)
 
@@ -162,3 +356,195 @@ class Engine:
             if not self.queue and all(r is None for r in self.slots):
                 break
         return finished
+
+    # ==================================================================
+    # Streaming sessions (the Artic video loop)
+    # ==================================================================
+    def open_session(self, sid: int, now: Optional[float] = None) -> int:
+        """Pin a slot for a streaming video session; returns the slot.
+
+        Unlike queued requests, a streaming context cannot be evicted
+        and re-prefilled (its source frames are gone), so admission is
+        slot-or-error: size `max_batch` to the expected session count."""
+        if sid in self._sessions:
+            raise ValueError(f"session {sid} already open")
+        if self.cfg.family == "hybrid" or self.cfg.kv_cache_dtype == "int8":
+            raise NotImplementedError(
+                "streaming sessions need prefill_extend, which supports "
+                "dense/moe/ssm backbones with full-precision KV caches")
+        self._begin_service(now)
+        slot = self._free_slot()
+        if slot is None:
+            raise RuntimeError(
+                f"no free slot for streaming session {sid}: all "
+                f"{self.B} slots busy (streaming sessions pin their "
+                "slot; raise max_batch)")
+        sess = _StreamSession(sid=sid, slot=slot, opened=self.clock)
+        self._sessions[sid] = sess
+        self._slot_sids[slot] = sid
+        self.cache["length"] = self.cache["length"].at[slot].set(0)
+        self._kv_sync(("sid", sid), 0)
+        return slot
+
+    def close_session(self, sid: int) -> None:
+        sess = self._sessions.pop(sid)
+        del self._slot_sids[sess.slot]
+        self._kv_release(("sid", sid))
+
+    def session_length(self, sid: int) -> int:
+        """Context length including a finished query's final answer
+        token, which is committed to the KV cache lazily (on the next
+        extend/query prefill)."""
+        sess = self._sessions[sid]
+        return sess.length + (sess.unflushed is not None)
+
+    def _take_unflushed(self, sess: _StreamSession) -> Optional[np.ndarray]:
+        """Pop the pending final answer token as a (1, D) embedding to
+        prepend to the next prefill, materializing its KV row."""
+        if sess.unflushed is None:
+            return None
+        tok = sess.unflushed
+        sess.unflushed = None
+        return np.asarray(
+            tfm.layers.embed(self.params["embed"],
+                             jnp.asarray([[tok]], jnp.int32),
+                             self.cfg)[0], np.float32)
+
+    def _check_capacity(self, sess: _StreamSession, n_new: int,
+                        what: str) -> None:
+        if sess.length + n_new > self.max_len:
+            raise SessionOverflowError(
+                f"session {sess.sid}: {what} of {n_new} tokens would "
+                f"grow the context to {sess.length + n_new} > "
+                f"max_len={self.max_len}")
+
+    def _extend_chunks(self, sess: _StreamSession, embeds: np.ndarray
+                       ) -> jnp.ndarray:
+        """Chunked prefill of (S, D) embeddings into the session slot.
+
+        Chunks are padded to power-of-two lengths (bounded retrace set);
+        the causal mask makes pad rows invisible to real positions and
+        the host-side length mirror excludes them, so the next write
+        overwrites their cache rows.  Returns the logits row of the last
+        REAL position (1, V)."""
+        S = embeds.shape[0]
+        last = None
+        done = 0
+        while done < S:
+            n = min(S - done, self.chunk_max)
+            n_pad = _chunk_pad(n, self.chunk_max)
+            chunk = np.zeros((1, n_pad, embeds.shape[1]), np.float32)
+            chunk[0, :n] = embeds[done:done + n]
+            cache_one = self._slot_cache(sess.slot, sess.length)
+            logits, cache_one = self._extend_one(
+                self.params, cache_one, {"embeds": jnp.asarray(chunk)})
+            sess.length += n
+            self._write_slot(sess.slot, cache_one, sess.length)
+            last = logits[:, n - 1, :]
+            done += n
+            self._spend_step()
+        self._kv_sync(("sid", sess.sid), sess.length)
+        return last
+
+    def extend_session(self, sid: int, patch_embeds: np.ndarray,
+                       now: Optional[float] = None) -> float:
+        """Append frame-patch embeddings (S, D) to the session context
+        via chunked prefill; returns the op's queueing delay (simulated
+        seconds the engine was busy before serving it)."""
+        sess = self._sessions[sid]
+        embeds = np.asarray(patch_embeds, np.float32)
+        if embeds.ndim != 2 or embeds.shape[1] != self.cfg.d_model:
+            raise ValueError(
+                f"patch_embeds must be (S, d_model={self.cfg.d_model}); "
+                f"got {embeds.shape}")
+        pre = self._take_unflushed(sess)
+        if pre is not None:
+            embeds = np.concatenate([pre, embeds], axis=0)
+        self._check_capacity(sess, embeds.shape[0], "extend")
+        delay = self._begin_service(now)
+        self._extend_chunks(sess, embeds)
+        sess.extends += 1
+        return delay
+
+    def submit_query(self, sid: int, query_tokens: np.ndarray,
+                     now: Optional[float] = None, max_new: int = 8,
+                     uid: Optional[int] = None,
+                     eos_id: Optional[int] = None) -> Request:
+        """Prefill a query into the session context and sample its first
+        answer token; the remaining tokens decode in `drain_queries`
+        batched across all querying sessions.
+
+        The query tokens AND the answer tokens join the session context
+        (interleaved chat a la VideoLLM-online), so capacity is checked
+        for query + max_new."""
+        sess = self._sessions[sid]
+        if sess.active is not None:
+            raise RuntimeError(f"session {sid} already has an open query")
+        toks = np.asarray(query_tokens, np.int32).reshape(-1)
+        self._check_capacity(
+            sess, toks.shape[0] + max_new + (sess.unflushed is not None),
+            "query")
+        req = Request(uid=(sid if uid is None else uid), tokens=toks,
+                      max_new_tokens=max_new, eos_id=eos_id,
+                      arrival=self.clock if now is None else now)
+        req.queue_delay = self._begin_service(now)
+        # chunked prefill of the query tokens through the embeds path
+        embeds = np.asarray(
+            tfm.layers.embed(self.params["embed"], jnp.asarray(toks)[None],
+                             self.cfg)[0], np.float32)
+        pre = self._take_unflushed(sess)
+        if pre is not None:
+            embeds = np.concatenate([pre, embeds], axis=0)
+        last = self._extend_chunks(sess, embeds)
+        self.key, sub = jax.random.split(self.key)
+        out = sample(sub, last, self.sampler)
+        self._record(req, out, 0, self.clock)
+        sess.pending_token = int(out.token[0])
+        sess.active = req
+        self.stats.admitted += 1
+        return req
+
+    def drain_queries(self, now: Optional[float] = None,
+                      max_steps: int = 10_000) -> Dict[int, Request]:
+        """Decode every open session query to completion: ONE batched
+        decode step per engine tick serves all querying sessions (plus
+        nothing else — plain requests keep draining via `step`).
+
+        Returns {sid: finished Request}."""
+        self._begin_service(now)
+        done: Dict[int, Request] = {}
+        for _ in range(max_steps):
+            live = [s for s in self._sessions.values()
+                    if s.active is not None]
+            if not live:
+                break
+            toks = np.zeros((self.B, 1), np.int32)
+            mask = np.zeros(self.B, bool)
+            for s in live:
+                toks[s.slot, 0] = s.pending_token
+                mask[s.slot] = True
+            lengths = self.cache["length"]
+            logits, self.cache = self._decode(
+                self.params, self.cache, {"tokens": jnp.asarray(toks)})
+            # answer tokens join the session context: only querying
+            # slots keep the +1 length
+            self.cache["length"] = jnp.where(
+                jnp.asarray(mask), self.cache["length"], lengths)
+            self._spend_step()
+            self.key, sub = jax.random.split(self.key)
+            out = sample(sub, logits[:, 0, :], self.sampler)
+            for s in live:
+                req = s.active
+                self._record(req, out, s.slot, self.clock)
+                s.pending_token = int(out.token[s.slot])
+                s.length += 1
+                hit_eos = (req.eos_id is not None
+                           and req.output[-1] == req.eos_id)
+                if len(req.output) >= req.max_new_tokens or hit_eos:
+                    req.done_time = self.clock
+                    s.active = None
+                    s.unflushed = s.pending_token
+                    done[s.sid] = req
+                    self.stats.finished += 1
+                self._kv_sync(("sid", s.sid), s.length)
+        return done

@@ -1,0 +1,481 @@
+"""Serving-bridge tests: engine streaming sessions, slot lifecycle, KV
+page accounting, the deterministic patch embedder, and the
+Fleet(server="engine") end-to-end path."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import transformer as tfm
+from repro.models.config import reduced
+from repro.serving import kv_cache
+from repro.serving.bridge import (EngineServerBridge, SessionTelemetry,
+                                  frames_to_patches)
+from repro.serving.engine import Engine, Request, SessionOverflowError
+from repro.serving.sampler import SamplerConfig
+
+TINY = reduced(registry.get_config("qwen3-0.6b"),
+               dtype="float32", param_dtype="float32", vocab=128)
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return tfm.init(jax.random.PRNGKey(0), TINY)
+
+
+def _engine(tiny_params, **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_len", 64)
+    return Engine(TINY, tiny_params, **kw)
+
+
+def _req(uid, n=4, max_new=3, **kw):
+    rng = np.random.default_rng(uid)
+    return Request(uid=uid,
+                   tokens=rng.integers(0, TINY.vocab, n, dtype=np.int32),
+                   max_new_tokens=max_new, **kw)
+
+
+# --------------------------------------------------------------------------
+# Satellite: shared-mutable-default + simulated-time fixes
+# --------------------------------------------------------------------------
+def test_engine_default_sampler_is_per_instance(tiny_params):
+    a = _engine(tiny_params)
+    b = _engine(tiny_params)
+    assert a.sampler is not b.sampler
+    assert a.sampler == SamplerConfig()
+
+
+def test_engine_times_are_simulated_not_wall_clock(tiny_params):
+    eng = _engine(tiny_params, step_dt=0.5)
+    eng.submit(_req(0, max_new=2), now=3.0)
+    done = eng.run_until_drained()
+    assert len(done) == 1
+    r = done[0]
+    # arrival stamped from the caller's clock; service times are exact
+    # multiples of step_dt past it — impossible under time.time()
+    assert r.arrival == 3.0
+    assert r.first_token_time == 3.5
+    assert r.ttft == 0.5
+    assert r.done_time == 4.0
+    assert r.queue_delay == 0.5  # clock had self-advanced to 3.5 on tick 1
+
+
+def test_engine_queue_delay_reflects_busy_clock(tiny_params):
+    eng = _engine(tiny_params, step_dt=0.01, max_len=64)
+    eng.open_session(7)
+    d0 = eng.extend_session(7, np.zeros((8, TINY.d_model), np.float32),
+                            now=0.0)
+    # the engine clock is now past 0.0; a second op submitted at the
+    # same fleet time queues behind the first
+    d1 = eng.extend_session(7, np.zeros((8, TINY.d_model), np.float32),
+                            now=0.0)
+    assert d0 == 0.0
+    assert d1 == pytest.approx(eng.step_dt)
+
+
+# --------------------------------------------------------------------------
+# Satellite: engine slot lifecycle
+# --------------------------------------------------------------------------
+def test_queue_admission_and_slot_reuse(tiny_params):
+    """5 requests through 2 slots: all served, slots freed on finish and
+    reused immediately, queue drains in order."""
+    eng = _engine(tiny_params)
+    for i in range(5):
+        eng.submit(_req(i, max_new=3))
+    done = eng.run_until_drained()
+    assert sorted(r.uid for r in done) == [0, 1, 2, 3, 4]
+    assert eng.stats.admitted == 5
+    assert eng.stats.finished == 5
+    assert all(len(r.output) == 3 for r in done)
+    assert all(r is None for r in eng.slots)
+    # later arrivals waited for a slot: queue delays are monotone in uid
+    delays = [r.queue_delay for r in sorted(done, key=lambda r: r.uid)]
+    assert delays[0] == 0.0 and delays[-1] >= delays[0]
+
+
+def test_heterogeneous_lengths_do_not_block(tiny_params):
+    """A short request sharing the batch with a long one finishes first
+    and frees its slot while the long one keeps decoding."""
+    eng = _engine(tiny_params)
+    eng.submit(_req(0, n=3, max_new=2))
+    eng.submit(_req(1, n=9, max_new=12))
+    finished_at = {}
+    for tick in range(30):
+        for r in eng.step():
+            finished_at[r.uid] = tick
+        if len(finished_at) == 2:
+            break
+    assert finished_at[0] < finished_at[1]
+    # the freed slot is immediately reusable mid-flight
+    eng.submit(_req(2, max_new=2))
+    done = eng.run_until_drained()
+    assert {r.uid for r in done} == {2}
+
+
+def test_session_pins_slot_against_admission(tiny_params):
+    """A streaming session's slot must never be handed to queued
+    requests; with 1 of 2 slots pinned, plain requests still drain
+    through the remaining slot."""
+    eng = _engine(tiny_params)
+    slot = eng.open_session(42)
+    eng.extend_session(42, np.ones((4, TINY.d_model), np.float32))
+    before = eng.session_length(42)
+    for i in range(3):
+        eng.submit(_req(i, max_new=2))
+    done = eng.run_until_drained()
+    assert len(done) == 3
+    assert all(r is None for r in eng.slots)
+    assert eng._slot_sids[slot] == 42          # still pinned
+    assert eng.session_length(42) == before    # context untouched
+    # closing the session frees the slot for admission again
+    eng.close_session(42)
+    eng.submit(_req(9, max_new=2))
+    eng.submit(_req(10, max_new=2))
+    eng.step()
+    assert sum(r is not None for r in eng.slots) == 2
+
+
+def test_open_session_slot_or_error(tiny_params):
+    eng = _engine(tiny_params)
+    eng.open_session(0)
+    eng.open_session(1)
+    with pytest.raises(RuntimeError, match="no free slot"):
+        eng.open_session(2)
+    with pytest.raises(ValueError, match="already open"):
+        eng.open_session(0)
+
+
+def test_extend_session_overflow_raises(tiny_params):
+    eng = _engine(tiny_params, max_len=32)
+    eng.open_session(0)
+    eng.extend_session(0, np.zeros((30, TINY.d_model), np.float32))
+    with pytest.raises(SessionOverflowError):
+        eng.extend_session(0, np.zeros((3, TINY.d_model), np.float32))
+    # the failed op must not have grown the context
+    assert eng.session_length(0) == 30
+    # a query that would overflow (query + max_new) is refused too
+    with pytest.raises(SessionOverflowError):
+        eng.submit_query(0, np.asarray([1, 2], np.int32), max_new=4)
+
+
+def test_extend_then_query_matches_monolithic_prefill(tiny_params):
+    """Chunked extend + query prefill must reproduce one monolithic
+    prefill over the same embedding sequence: the first sampled answer
+    token (greedy) is identical."""
+    rng = np.random.default_rng(0)
+    emb_a = rng.standard_normal((5, TINY.d_model)).astype(np.float32)
+    emb_b = rng.standard_normal((7, TINY.d_model)).astype(np.float32)
+    toks = np.asarray([3, 1, 4], np.int32)
+
+    eng = _engine(tiny_params, max_len=64, chunk_max=4)  # forces chunking
+    eng.open_session(0)
+    eng.extend_session(0, emb_a)
+    eng.extend_session(0, emb_b)
+    req = eng.submit_query(0, toks, max_new=1)
+    eng.drain_queries()
+
+    tok_emb = np.asarray(tfm.layers.embed(
+        tiny_params["embed"], jax.numpy.asarray(toks)[None], TINY)[0])
+    full = np.concatenate([emb_a, emb_b, tok_emb], axis=0)
+    logits, _ = tfm.prefill(tiny_params, {"embeds": full[None]}, TINY,
+                            max_len=64)
+    want = int(np.argmax(np.asarray(logits[0, 0])))
+    assert req.output[0] == want
+
+
+def test_drain_queries_is_batched_across_sessions(tiny_params):
+    """Two querying sessions decode together: the whole drain spends one
+    engine step per answer token, not one per (session, token)."""
+    eng = _engine(tiny_params, step_dt=1.0)
+    for sid in (0, 1):
+        eng.open_session(sid)
+        eng.extend_session(sid, np.ones((4, TINY.d_model), np.float32) * sid)
+    steps0 = eng.stats.steps
+    for sid in (0, 1):
+        eng.submit_query(sid, np.asarray([1, 2], np.int32), max_new=4)
+    steps_prefill = eng.stats.steps - steps0
+    done = eng.drain_queries()
+    assert set(done) == {0, 1}
+    # 3 more tokens after the prefill-sampled first -> 3 decode steps
+    assert eng.stats.steps - steps0 - steps_prefill == 3
+    assert all(len(r.output) == 4 for r in done.values())
+    # answer tokens joined each session's context
+    assert eng.session_length(0) == 4 + 2 + 4
+
+
+# --------------------------------------------------------------------------
+# Satellite: KV page accounting + kv_cache unit tests
+# --------------------------------------------------------------------------
+def test_page_allocator_round_trip():
+    al = kv_cache.PageAllocator(4)
+    got = al.alloc("a", 3)
+    assert len(got) == 3 and len(set(got)) == 3
+    assert al.utilization == 0.75
+    with pytest.raises(MemoryError):
+        al.alloc("b", 2)
+    al.release("a")
+    assert al.utilization == 0.0
+    # released pages are reusable and release of unknown keys is a no-op
+    assert len(al.alloc("c", 4)) == 4
+    al.release("nope")
+    assert al.utilization == 1.0
+
+
+def test_init_paged_shapes_and_append_gather():
+    st = kv_cache.init_paged(TINY, n_pages=8, page=4, batch=2, max_blocks=3)
+    L, Hk, hd = TINY.n_layers, TINY.n_kv_heads, TINY.head_dim_
+    assert st.pages_k.shape == (L, 8, 4, Hk, hd)
+    assert st.tables.shape == (2, 3)
+    assert int(st.lengths.sum()) == 0
+    # give each sequence a distinct physical page and append two tokens
+    st = st._replace(tables=st.tables.at[0, 0].set(5).at[1, 0].set(2))
+    rng = np.random.default_rng(0)
+    ks = rng.standard_normal((2, L, 2, Hk, hd)).astype(np.float32)
+    vs = rng.standard_normal((2, L, 2, Hk, hd)).astype(np.float32)
+    for t in range(2):
+        st = kv_cache.append_token(st, ks[:, :, t].transpose(1, 0, 2, 3),
+                                   vs[:, :, t].transpose(1, 0, 2, 3))
+    assert list(np.asarray(st.lengths)) == [2, 2]
+    k_all, v_all = kv_cache.gather_kv(st)
+    assert k_all.shape == (L, 2, 3 * 4, Hk, hd)
+    for b in range(2):
+        np.testing.assert_allclose(np.asarray(k_all[:, b, :2]), ks[b],
+                                   rtol=0, atol=0)
+        np.testing.assert_allclose(np.asarray(v_all[:, b, :2]), vs[b],
+                                   rtol=0, atol=0)
+    # single-layer view agrees with the stacked gather
+    k0, v0 = kv_cache.gather_kv(st, layer=0)
+    np.testing.assert_array_equal(np.asarray(k0), np.asarray(k_all[0]))
+
+
+def test_engine_stats_surface_kv_pages(tiny_params):
+    eng = _engine(tiny_params, max_len=64, kv_page=16)
+    assert eng.stats.kv_pages_total == 2 * (64 // 16)
+    eng.submit(_req(0, n=20, max_new=2))
+    eng.run_until_drained()
+    # pages grew with the context, peaked, and were released on retire
+    assert eng.stats.kv_pages_peak >= 2
+    assert eng.stats.kv_pages_used == 0
+    assert eng.stats.kv_utilization == 0.0
+    assert 0.0 < eng.stats.kv_peak_utilization <= 1.0
+    assert 0.0 < eng.stats.slot_utilization <= 1.0
+    # session pages are held until close
+    eng.open_session(0)
+    eng.extend_session(0, np.zeros((17, TINY.d_model), np.float32))
+    assert eng.stats.kv_pages_used == 2
+    eng.close_session(0)
+    assert eng.stats.kv_pages_used == 0
+
+
+# --------------------------------------------------------------------------
+# The patch embedder
+# --------------------------------------------------------------------------
+def test_frames_to_patches_shape_and_determinism():
+    rng = np.random.default_rng(0)
+    frames = rng.random((3, 64, 48)).astype(np.float32)
+    a = frames_to_patches(frames, d_model=32, patch_grid=2, seed=1)
+    b = frames_to_patches(frames.copy(), d_model=32, patch_grid=2, seed=1)
+    assert a.shape == (3, 4, 32)
+    np.testing.assert_array_equal(a, b)
+    # a single (H, W) frame batches to B=1
+    one = frames_to_patches(frames[0], d_model=32, patch_grid=2, seed=1)
+    np.testing.assert_array_equal(one[0], a[0])
+
+
+def test_frames_to_patches_sees_degradation():
+    """The embedder must distinguish a clean frame from a degraded one —
+    conditioning on delivered quality is the whole point."""
+    rng = np.random.default_rng(0)
+    clean = rng.random((64, 64)).astype(np.float32)
+    degraded = np.round(clean * 4) / 4  # crude re-quantization
+    a = frames_to_patches(clean, 32)
+    b = frames_to_patches(degraded, 32)
+    assert np.abs(a - b).max() > 0
+    with pytest.raises(ValueError, match="too small"):
+        frames_to_patches(np.zeros((8, 8)), 32, patch_grid=2)
+
+
+# --------------------------------------------------------------------------
+# Bridge behavior
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def scene64():
+    from repro.video.scenes import make_scene
+    return make_scene("office", False, 0, h=64, w=64)
+
+
+def _bridge(n=1, **kw):
+    kw.setdefault("max_len", 96)
+    kw.setdefault("step_dt", 0.004)
+    return EngineServerBridge(n, **kw)
+
+
+def test_bridge_rolls_context_over_at_capacity(scene64):
+    br = _bridge()
+    br.open(0, scene64, fps=10.0)
+    for tick in range(40):  # 160 patch tokens vs max_len 96
+        br.extend(0, scene64.render(tick % 8), tick * 0.1)
+    tel = br.telemetry[0]
+    assert tel.rollovers >= 1
+    assert br.engine.session_length(0) + 4 + br._reserve <= 96 + 4
+    # a query still fits after heavy streaming
+    class _QA:
+        kind, obj_idx, t_ask = "read_code", 0, 1.0
+    assert br.answer_now(0, _QA(), 5.0) in (True, False)
+    assert len(tel.ttfts) == 1 and len(tel.confidences) == 1
+
+
+def test_bridge_is_deterministic(scene64):
+    def run_once():
+        br = _bridge(n=2)
+        for k in (0, 1):
+            br.open(k, scene64, fps=10.0)
+        for tick in range(4):
+            for k in (0, 1):
+                br.extend(k, scene64.render(tick), tick * 0.1)
+        class _QA:
+            kind, obj_idx, t_ask = "read_code", 0, 0.2
+        for k in (0, 1):
+            br.submit(k, _QA(), 0.5)
+        res = br.drain(0.5)
+        return res, {k: (tuple(t.ttfts), tuple(t.queue_delays),
+                         tuple(t.confidences))
+                     for k, t in br.telemetry.items()}
+
+    r1, t1 = run_once()
+    r2, t2 = run_once()
+    assert r1 == r2 and t1 == t2
+
+
+def test_bridge_rejects_unsupported_backbones():
+    archs = registry.list_archs(include_extra=True)
+    hybrid = [a for a in archs
+              if registry.get_config(a).family == "hybrid"]
+    if not hybrid:
+        pytest.skip("no hybrid arch registered")
+    with pytest.raises(NotImplementedError):
+        EngineServerBridge(1, arch=hybrid[0])
+
+
+# --------------------------------------------------------------------------
+# Fleet / scenario integration
+# --------------------------------------------------------------------------
+def _fleet_members(n=2, duration=2.0):
+    from _builders import hetero_fleet_session
+    return [hetero_fleet_session(k, duration=duration, hw=64)
+            for k in range(n)]
+
+
+ENGINE_CFG = dict(max_len=128, step_dt=0.004)
+
+
+def test_fleet_engine_server_end_to_end_deterministic():
+    from _builders import metrics_digest
+    from repro.core.fleet import Fleet
+
+    def run_once():
+        fl = Fleet(_fleet_members(), server="engine",
+                   engine_cfg=dict(ENGINE_CFG))
+        return fl, fl.run()
+
+    fl, ms = run_once()
+    _, ms2 = run_once()
+    assert metrics_digest(ms) == metrics_digest(ms2)
+    for m, m2 in zip(ms, ms2):
+        assert m.server_ttfts == m2.server_ttfts
+        assert m.server_queue_delays == m2.server_queue_delays
+        assert m.server_confidences == m2.server_confidences
+        # every answered question carries TTFT + confidence telemetry
+        assert len(m.server_ttfts) == m.n_qa == len(m.qa_results)
+        assert all(t > 0 for t in m.server_ttfts)
+        assert m.ttft_p95_ms >= m.ttft_p50_ms > 0
+    assert fl.bridge.stats.tokens_out > 0
+
+
+def test_fleet_engine_mode_leaves_channel_dynamics_unchanged():
+    """Engine mode swaps the ANSWER source, not the feedback loop: rate,
+    latency and confidence series must match the oracle run exactly."""
+    from repro.core.fleet import Fleet
+
+    oracle = Fleet(_fleet_members()).run()
+    engine = Fleet(_fleet_members(), server="engine",
+                   engine_cfg=dict(ENGINE_CFG)).run()
+    for mo, me in zip(oracle, engine):
+        assert mo.latencies == me.latencies
+        assert mo.rates == me.rates
+        assert mo.confidences == me.confidences
+        assert mo.avg_bitrate == me.avg_bitrate
+        assert mo.n_qa == me.n_qa
+        assert mo.server_ttfts == []  # oracle: no serving telemetry
+
+
+def test_fleet_engine_gates():
+    from repro.core.fleet import Fleet
+    members = _fleet_members()
+    with pytest.raises(ValueError, match="server must be"):
+        Fleet(members, server="llm")
+    with pytest.raises(NotImplementedError, match="megakernel"):
+        Fleet(members, server="engine", megakernel=True)
+    with pytest.raises(NotImplementedError):
+        Fleet(members, server="engine", on_device_server=True)
+    fl = Fleet(members, server="engine", engine_cfg=dict(ENGINE_CFG))
+    with pytest.raises(NotImplementedError, match="rollout"):
+        fl.run(rollout=3)
+
+
+def test_scenario_spec_server_field_round_trip():
+    from repro.core.scenario import ScenarioSpec, cohort_key
+
+    spec = ScenarioSpec(server="engine",
+                        engine_kwargs=dict(max_len=128, step_dt=0.004))
+    back = ScenarioSpec.from_dict(spec.to_dict())
+    assert back == spec
+    # old exports (no server fields) still round-trip to the oracle
+    d = spec.to_dict()
+    del d["server"], d["engine_kwargs"]
+    assert ScenarioSpec.from_dict(d).server == "oracle"
+    with pytest.raises(ValueError, match="unknown server"):
+        ScenarioSpec(server="llm")
+    # server mode splits cohorts: oracle and engine specs never share a
+    # fleet
+    assert cohort_key(spec) != cohort_key(spec.with_(server="oracle"))
+
+
+def test_run_scenarios_engine_cohort(tmp_path):
+    from repro.core.scenario import (ScenarioSpec, run_scenarios,
+                                     validate_run_result_json)
+
+    base = ScenarioSpec(duration=2.0, frame_h=64, frame_w=64,
+                        qa="periodic",
+                        qa_kwargs=dict(start=0.5, period=0.7, count=2,
+                                       answer_window=0.5))
+    specs = [base.with_(tag="oracle"),
+             base.with_(server="engine", engine_kwargs=ENGINE_CFG,
+                        tag="engine")]
+    r = run_scenarios(specs)
+    assert len(r.cohorts) == 2
+    doc = r.to_json(str(tmp_path / "r.json"))
+    validate_run_result_json(doc)
+    by_tag = {rec["spec"]["tag"]: rec["metrics"]
+              for rec in doc["scenarios"]}
+    assert by_tag["oracle"]["ttft_p50_ms"] == 0.0
+    assert by_tag["engine"]["ttft_p50_ms"] > 0.0
+    servers = {c["server"] for c in doc["cohorts"]}
+    assert servers == {"oracle", "engine"}
+
+
+def test_serving_snapshot_schema():
+    from benchmarks.snapshot import (check_serving_coverage,
+                                     load_serving_snapshot,
+                                     validate_serving_snapshot)
+
+    doc = load_serving_snapshot()  # the committed BENCH_serving.json
+    validate_serving_snapshot(doc)
+    assert check_serving_coverage(doc, dict(doc["metrics"])) == []
+    missing = check_serving_coverage(doc, {})
+    assert len(missing) == len(doc["metrics"])
+    bad = dict(doc)
+    bad["metrics"] = {}
+    with pytest.raises(ValueError):
+        validate_serving_snapshot(bad)
