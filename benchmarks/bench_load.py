@@ -1,0 +1,75 @@
+"""Capacity-knee sweep: open-loop churn at increasing offered load.
+
+Sweeps the Poisson arrival rate over multiples of a base rate against a
+fixed slot count (the oracle server, so the sweep measures the
+admission/fleet layer, not model decode speed).  With `slots` concurrent
+sessions of mean lifetime L, theoretical capacity is slots/L
+sessions/sec; below it, served tracks offered, and past it the admission
+queue grows and served throughput flattens — the knee.  The sweep
+reports per-point steady-state metrics plus the detected knee, and rides
+in BENCH_serving.json as the `load.*` stage (coverage-gated like every
+other serving metric: absolutes move with the runner, key coverage must
+not).
+
+    PYTHONPATH=src python -m benchmarks.bench_load
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Sequence
+
+MULTIPLIERS: Sequence[float] = (0.5, 1.0, 2.0)
+BASE_RATE = 1.0        # arrivals/sec at x1
+SLOTS = 2
+MEAN_LIFETIME = 2.0    # -> capacity ~ SLOTS / MEAN_LIFETIME = 1.0 /s
+DURATION = 12.0   # long enough that end-of-run truncation does not
+#   read as saturation at the under-loaded sweep points
+SERVED_FRACTION_KNEE = 0.9   # knee: served drops below 90% of offered
+
+
+def bench_load(multipliers: Sequence[float] = MULTIPLIERS,
+               base_rate: float = BASE_RATE, slots: int = SLOTS,
+               duration: float = DURATION) -> Dict[str, float]:
+    """Run the churn sweep; flat `load.*` metrics for the snapshot."""
+    from repro.core.churn import run_churn
+    from repro.core.scenario import ScenarioSpec
+
+    t0 = time.perf_counter()
+    metrics: Dict[str, float] = {}
+    knee_offered = float("nan")
+    peak_served = 0.0
+    for m in multipliers:
+        spec = ScenarioSpec(
+            scene="retail", frame_h=64, frame_w=64, duration=duration,
+            qa="none", workload="churn",
+            churn_kwargs=dict(rate=base_rate * m, slots=slots,
+                              mean_lifetime=MEAN_LIFETIME, seed=17),
+            tag=f"load-x{m:g}")
+        s = run_churn(spec).summary()
+        key = f"load.x{m:g}"
+        metrics[f"{key}.offered_per_sec"] = s["offered_per_sec"]
+        metrics[f"{key}.served_per_sec"] = s["sessions_per_sec"]
+        metrics[f"{key}.admission_p95_ms"] = s["admission_p95_ms"]
+        metrics[f"{key}.queue_depth_peak"] = s["queue_depth_peak"]
+        peak_served = max(peak_served, s["sessions_per_sec"])
+        saturated = (s["offered_per_sec"] > 0
+                     and s["sessions_per_sec"]
+                     < SERVED_FRACTION_KNEE * s["offered_per_sec"])
+        if saturated and knee_offered != knee_offered:  # first saturated pt
+            knee_offered = s["offered_per_sec"]
+    if knee_offered != knee_offered:  # never saturated: knee beyond sweep
+        knee_offered = metrics[f"load.x{multipliers[-1]:g}.offered_per_sec"]
+    metrics["load.peak_sessions_per_sec"] = peak_served
+    metrics["load.knee_offered_per_sec"] = knee_offered
+    metrics["load.wall_s"] = time.perf_counter() - t0
+    return metrics
+
+
+def _main() -> None:
+    metrics = bench_load()
+    for k in sorted(metrics):
+        print(f"  {k:36s} {metrics[k]:.3f}")
+
+
+if __name__ == "__main__":
+    _main()

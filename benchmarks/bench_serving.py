@@ -95,9 +95,14 @@ def bench_fleet_served(n_sessions: int = 3, duration: float = 3.0) -> Dict:
 def run(quick: bool = True) -> Dict[str, float]:
     """All serving metrics as one flat {name: value} dict (the snapshot
     `metrics` payload)."""
+    from benchmarks.bench_load import bench_load
+
     metrics = dict(bench_engine(requests=8 if quick else 32,
                                 max_new=8 if quick else 32))
     metrics.update(bench_fleet_served(n_sessions=2 if quick else 8))
+    # the open-loop capacity-knee sweep keeps one shape regardless of
+    # `quick` so the coverage gate sees a stable load.* key set
+    metrics.update(bench_load())
     return metrics
 
 

@@ -144,7 +144,10 @@ def validate_serving_snapshot(doc: Dict) -> None:
         need(isinstance(v, (int, float)), f"metrics.{k} must be numeric")
     for k in ("engine.tokens_per_sec", "engine.ttft_p50_ms",
               "engine.ttft_p95_ms", "engine.slot_utilization",
-              "fleet.ttft_p50_ms", "fleet.queue_p95_ms"):
+              "fleet.ttft_p50_ms", "fleet.queue_p95_ms",
+              # the open-loop capacity sweep (benchmarks.bench_load) is a
+              # required stage, not an optional extra
+              "load.peak_sessions_per_sec", "load.knee_offered_per_sec"):
         need(k in metrics, f"metrics.{k}")
 
 

@@ -206,6 +206,67 @@ def serving_smoke(out_path: str = "/tmp/artic_serving_smoke.json"
     return result
 
 
+def churn_smoke(out_path: str = "/tmp/artic_churn_smoke.json") -> None:
+    """Open-loop churn smoke: a sustained arrival stream through a fleet
+    with fewer slots than arrivals, on the oracle AND engine server
+    paths.  Each run goes TWICE and must reproduce its telemetry digest
+    exactly — seeded arrival/lifetime processes plus per-lane bank
+    resets at every slot revival make the whole open loop
+    deterministic."""
+    import json
+
+    from repro.core.churn import (ChurnConfig,
+                                  validate_churn_result_json)
+
+    base = ScenarioSpec(scene="retail", frame_h=64, frame_w=64,
+                        duration=6.0, qa="periodic",
+                        qa_kwargs=dict(start=0.5, period=1.0,
+                                       answer_window=0.7, count=5),
+                        workload="churn",
+                        churn_kwargs=dict(rate=1.0, slots=2,
+                                          mean_lifetime=2.0, seed=7),
+                        tag="churn-oracle")
+    specs = [base,
+             base.with_(duration=4.0, server="engine",
+                        qa_kwargs=dict(start=0.5, period=1.0,
+                                       answer_window=0.7, count=3),
+                        churn_kwargs=dict(rate=1.5, slots=2,
+                                          mean_lifetime=1.5, seed=3),
+                        tag="churn-engine")]
+    result = run_scenarios(specs)
+    again = run_scenarios(specs)
+    for r, r2 in zip(result.results, again.results):
+        slots = ChurnConfig.from_spec(r.spec).slots
+        if r.offered <= slots:
+            raise AssertionError(
+                f"{r.spec.tag}: churn smoke must offer more sessions "
+                f"({r.offered}) than slots ({slots})")
+        if r.served < 1:
+            raise AssertionError(f"{r.spec.tag}: no session was served")
+        d1, d2 = r.digest(), r2.digest()
+        if d1 != d2:
+            raise AssertionError(
+                f"{r.spec.tag}: churn run is not deterministic: "
+                f"{d1} != {d2}")
+        s = r.summary()
+        print(f"[churn-smoke]   {r.spec.tag}: offered={r.offered} "
+              f"served={r.served} unserved={r.unserved} "
+              f"rate={s['sessions_per_sec']:.2f}/s "
+              f"adm_p95={s['admission_p95_ms']:.0f}ms "
+              f"depth_peak={s['queue_depth_peak']:.0f} "
+              f"digest {d1[:12]} reproduced")
+    engine = result.results[1]
+    if not any(rec.metrics.server_ttfts for rec in engine.records):
+        raise AssertionError(
+            "engine churn run produced no TTFT telemetry")
+    doc = result.to_json(out_path)
+    validate_churn_result_json(doc)
+    with open(out_path) as f:
+        validate_churn_result_json(json.load(f))  # survives the round trip
+    print(f"[churn-smoke] {len(result)} open-loop scenarios -> {out_path} "
+          "(schema OK)")
+
+
 def _main() -> None:
     import argparse
 
@@ -224,8 +285,14 @@ def _main() -> None:
     ap.add_argument("--serving", action="store_true",
                     help="run the engine-server smoke (Fleet(server="
                          "'engine') determinism + telemetry)")
+    ap.add_argument("--churn", action="store_true",
+                    help="run the open-loop churn smoke (arrivals > "
+                         "slots on oracle + engine paths, digest-"
+                         "reproducible)")
     args = ap.parse_args()
-    if args.serving:
+    if args.churn:
+        churn_smoke(args.out)
+    elif args.serving:
         serving_smoke(args.out)
     elif args.rollout:
         rollout_smoke()

@@ -1,0 +1,405 @@
+"""Open-loop session churn: arrivals and departures over a slotted fleet.
+
+Every fixed-N scenario runs its sessions to completion; production
+traffic is an *arrival process*.  This module adds the open-loop
+workload layer the ROADMAP names: seeded Poisson or diurnal
+(sinusoidally-modulated, thinned) arrivals, seeded session-lifetime
+distributions, and an admission queue that places arriving sessions into
+free fleet slots by reusing the masked-dead-session machinery — a
+departed session's slot goes dead (`Fleet.deactivate`), an arrival
+revives it with fresh scene/trace/CC state (`Fleet.activate`).  Under
+`server="engine"` the revival opens a fresh engine session in
+queue-or-wait mode, so a full engine delays admission (stamped into
+telemetry) instead of crashing.
+
+Entry points:
+
+    ScenarioSpec(workload="churn", churn_kwargs=dict(rate=..., slots=...))
+        routed here by `run_scenarios` -> `ChurnRunResult`.
+    run_churn(spec)      one open-loop run -> `ChurnResult` with
+                         per-session records and steady-state metrics
+                         (sustained sessions/sec, p50/p95/p99 latency
+                         and TTFT, admission delay, queue depth).
+
+Determinism contract: arrivals/lifetimes come from seeded NumPy
+generators, admission is FIFO into the lowest free slot at tick
+boundaries, and every per-lane bank state is reset at revival — two runs
+of the same spec are digest-identical (`ChurnResult.digest`), and a
+slot's successive tenants never observe each other
+(tests/test_churn.py).
+
+Every arrival derives from the base spec with per-arrival seed offsets
+(scene/trace/session seeds shift by the arrival index); the structural
+knobs — fps, duration, frame size, probe stride, cc_kind, system — stay
+fixed, because CC/ABR bank *membership* inside the fleet is fixed at
+construction (only per-lane state resets).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import hashlib
+import json
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+ARRIVAL_KINDS = ("poisson", "diurnal")
+LIFETIME_KINDS = ("exponential", "fixed", "uniform")
+
+CHURN_RESULT_SCHEMA = "artic.churn.run_result/v1"
+
+
+@dataclasses.dataclass(frozen=True)
+class ChurnConfig:
+    """Arrival/lifetime/slot knobs of one open-loop run (the thawed
+    `ScenarioSpec.churn_kwargs`)."""
+    arrival: str = "poisson"       # ARRIVAL_KINDS
+    rate: float = 1.0              # mean arrivals per second
+    lifetime: str = "exponential"  # LIFETIME_KINDS
+    mean_lifetime: float = 4.0     # seconds
+    min_lifetime: float = 1.0      # floor: shorter than a feedback round
+    #   a session measures nothing
+    slots: int = 4                 # concurrent fleet slots
+    seed: int = 0
+    # diurnal shape: rate(t) = rate * (1 + depth * sin(2*pi*t / period))
+    period: float = 20.0
+    depth: float = 0.8
+    max_arrivals: int = 512        # hard cap (runaway-rate backstop)
+
+    def __post_init__(self):
+        if self.arrival not in ARRIVAL_KINDS:
+            raise ValueError(f"unknown arrival process {self.arrival!r}; "
+                             f"one of {ARRIVAL_KINDS}")
+        if self.lifetime not in LIFETIME_KINDS:
+            raise ValueError(f"unknown lifetime kind {self.lifetime!r}; "
+                             f"one of {LIFETIME_KINDS}")
+        if self.rate <= 0:
+            raise ValueError(f"arrival rate must be positive, got {self.rate}")
+        if self.slots < 1:
+            raise ValueError(f"slots must be >= 1, got {self.slots}")
+        if not (0.0 < self.min_lifetime <= self.mean_lifetime):
+            raise ValueError("need 0 < min_lifetime <= mean_lifetime; got "
+                             f"{self.min_lifetime} / {self.mean_lifetime}")
+        if not (0.0 <= self.depth <= 1.0):
+            raise ValueError(f"diurnal depth must be in [0, 1], "
+                             f"got {self.depth}")
+        if self.period <= 0:
+            raise ValueError(f"diurnal period must be positive, "
+                             f"got {self.period}")
+        if self.max_arrivals < 1:
+            raise ValueError("max_arrivals must be >= 1")
+
+    @classmethod
+    def from_spec(cls, spec) -> "ChurnConfig":
+        from repro.core.scenario import _thaw
+        return cls(**_thaw(spec.churn_kwargs))
+
+
+def arrival_times(cfg: ChurnConfig, duration: float) -> np.ndarray:
+    """Seeded arrival timestamps in [0, duration), sorted ascending.
+
+    Poisson: homogeneous exponential gaps at `cfg.rate`.  Diurnal:
+    non-homogeneous Poisson with intensity
+    rate * (1 + depth * sin(2*pi*t / period)) via thinning against the
+    peak rate — both deterministic functions of `cfg.seed`."""
+    rng = np.random.default_rng(cfg.seed)
+    out: List[float] = []
+    if cfg.arrival == "poisson":
+        t = rng.exponential(1.0 / cfg.rate)
+        while t < duration and len(out) < cfg.max_arrivals:
+            out.append(t)
+            t += rng.exponential(1.0 / cfg.rate)
+        return np.asarray(out)
+    peak = cfg.rate * (1.0 + cfg.depth)
+    t = 0.0
+    while len(out) < cfg.max_arrivals:
+        t += rng.exponential(1.0 / peak)
+        if t >= duration:
+            break
+        lam = cfg.rate * (1.0 + cfg.depth * np.sin(2 * np.pi * t
+                                                   / cfg.period))
+        if rng.random() * peak <= lam:
+            out.append(t)
+    return np.asarray(out)
+
+
+def sample_lifetimes(cfg: ChurnConfig, n: int) -> np.ndarray:
+    """Seeded session lifetimes (seconds), floored at `min_lifetime`.
+    A separate stream from the arrivals (seed + 1), so changing the
+    arrival count does not reshuffle lifetimes."""
+    rng = np.random.default_rng(cfg.seed + 1)
+    if cfg.lifetime == "exponential":
+        life = rng.exponential(cfg.mean_lifetime, n)
+    elif cfg.lifetime == "fixed":
+        life = np.full(n, cfg.mean_lifetime)
+    else:  # uniform, symmetric about the mean
+        life = rng.uniform(cfg.min_lifetime,
+                           2.0 * cfg.mean_lifetime - cfg.min_lifetime, n)
+    return np.maximum(life, cfg.min_lifetime)
+
+
+# --------------------------------------------------------------------------
+# Results
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class ChurnSessionRecord:
+    """One served session's lifecycle + its finalized SessionMetrics."""
+    index: int          # arrival index
+    slot: int
+    arrival: float      # offered time
+    admitted: float     # tick the session got a slot
+    lifetime: float     # sampled lifetime (seconds)
+    departed: float = float("nan")   # actual close time (clipped to run end)
+    metrics: Any = None              # SessionMetrics once departed
+
+    @property
+    def admission_delay(self) -> float:
+        return self.admitted - self.arrival
+
+
+def _pct(vals: List[float], p: float) -> float:
+    return 1e3 * float(np.percentile(vals, p)) if vals else float("nan")
+
+
+@dataclasses.dataclass
+class ChurnResult:
+    """One open-loop run: per-session records + steady-state metrics."""
+    spec: Any                       # the churn ScenarioSpec
+    config: ChurnConfig
+    records: List[ChurnSessionRecord]   # served sessions, arrival order
+    offered: int                    # arrivals generated
+    unserved: int                   # still queued when the run ended
+    queue_depth: List[int]          # admission-queue depth per tick
+    duration: float
+
+    # -- steady-state aggregates ---------------------------------------
+    @property
+    def served(self) -> int:
+        return len(self.records)
+
+    @property
+    def sessions_per_sec(self) -> float:
+        return self.served / self.duration
+
+    def _latencies(self) -> List[float]:
+        return [l for r in self.records for l in r.metrics.latencies
+                if np.isfinite(l)]
+
+    def _ttfts(self) -> List[float]:
+        return [v for r in self.records for v in r.metrics.server_ttfts]
+
+    def _admissions(self) -> List[float]:
+        return [r.admission_delay for r in self.records]
+
+    def summary(self) -> Dict[str, float]:
+        lat, ttft, adm = self._latencies(), self._ttfts(), self._admissions()
+        depth = np.asarray(self.queue_depth) if self.queue_depth else \
+            np.zeros(1)
+        return {
+            "offered_sessions": float(self.offered),
+            "served_sessions": float(self.served),
+            "unserved_sessions": float(self.unserved),
+            "offered_per_sec": self.offered / self.duration,
+            "sessions_per_sec": self.sessions_per_sec,
+            "latency_p50_ms": _pct(lat, 50),
+            "latency_p95_ms": _pct(lat, 95),
+            "latency_p99_ms": _pct(lat, 99),
+            "ttft_p50_ms": _pct(ttft, 50),
+            "ttft_p95_ms": _pct(ttft, 95),
+            "ttft_p99_ms": _pct(ttft, 99),
+            "admission_p50_ms": _pct(adm, 50),
+            "admission_p95_ms": _pct(adm, 95),
+            "admission_p99_ms": _pct(adm, 99),
+            "queue_depth_peak": float(depth.max()),
+            "queue_depth_mean": float(depth.mean()),
+            "accuracy_mean": (float(np.mean([r.metrics.accuracy
+                                             for r in self.records]))
+                              if self.records else float("nan")),
+        }
+
+    def digest(self) -> str:
+        """Content digest over every served session's full telemetry —
+        two runs of the same spec must match."""
+        payload = [[r.index, r.slot,
+                    float(r.arrival).hex(), float(r.admitted).hex(),
+                    float(r.departed).hex(),
+                    [float(v).hex() for v in r.metrics.latencies],
+                    [bool(b) for b in r.metrics.qa_results],
+                    [float(v).hex() for v in r.metrics.server_ttfts],
+                    [float(v).hex() for v in r.metrics.server_queue_delays]]
+                   for r in self.records]
+        payload.append([int(d) for d in self.queue_depth])
+        return hashlib.sha256(
+            json.dumps(payload).encode()).hexdigest()
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"spec": self.spec.to_dict(),
+                "config": dataclasses.asdict(self.config),
+                "offered": self.offered,
+                "served": self.served,
+                "unserved": self.unserved,
+                "duration": self.duration,
+                "queue_depth": [int(d) for d in self.queue_depth],
+                "summary": self.summary(),
+                "digest": self.digest(),
+                "sessions": [{"index": r.index, "slot": r.slot,
+                              "arrival": r.arrival,
+                              "admitted": r.admitted,
+                              "departed": r.departed,
+                              "lifetime": r.lifetime,
+                              "accuracy": float(r.metrics.accuracy),
+                              "n_qa": int(r.metrics.n_qa)}
+                             for r in self.records]}
+
+
+@dataclasses.dataclass
+class ChurnRunResult:
+    """`run_scenarios` output for workload='churn' specs (one
+    ChurnResult per spec, input order)."""
+    results: List[ChurnResult]
+
+    def __len__(self) -> int:
+        return len(self.results)
+
+    def summaries(self) -> List[Dict[str, float]]:
+        return [r.summary() for r in self.results]
+
+    def digest(self) -> str:
+        return hashlib.sha256(
+            "".join(r.digest() for r in self.results).encode()).hexdigest()
+
+    def to_json(self, path: Optional[str] = None) -> Dict[str, Any]:
+        doc = {"schema": CHURN_RESULT_SCHEMA,
+               "n_scenarios": len(self.results),
+               "scenarios": [r.to_dict() for r in self.results]}
+        if path is not None:
+            with open(path, "w") as f:
+                json.dump(doc, f, indent=1)
+        return doc
+
+
+def validate_churn_result_json(doc: Dict[str, Any]) -> None:
+    """Raise ValueError unless `doc` matches CHURN_RESULT_SCHEMA."""
+    def need(cond, msg):
+        if not cond:
+            raise ValueError(f"churn result schema violation: {msg}")
+
+    need(doc.get("schema") == CHURN_RESULT_SCHEMA,
+         f"schema tag {doc.get('schema')!r} != {CHURN_RESULT_SCHEMA!r}")
+    scen = doc.get("scenarios")
+    need(isinstance(scen, list) and len(scen) == doc.get("n_scenarios"),
+         "scenarios list missing or length != n_scenarios")
+    for i, rec in enumerate(scen):
+        for key in ("spec", "config", "offered", "served", "unserved",
+                    "summary", "digest", "sessions"):
+            need(key in rec, f"scenario {i}: missing key {key!r}")
+        need(rec["served"] == len(rec["sessions"]),
+             f"scenario {i}: served != len(sessions)")
+        for key in ("sessions_per_sec", "latency_p50_ms", "latency_p95_ms",
+                    "latency_p99_ms", "ttft_p99_ms", "admission_p95_ms",
+                    "queue_depth_peak"):
+            need(isinstance(rec["summary"].get(key), (int, float)),
+                 f"scenario {i}: summary {key!r} missing or non-numeric")
+
+
+# --------------------------------------------------------------------------
+# The open-loop driver
+# --------------------------------------------------------------------------
+def _arrival_member(spec, idx: int, calibrator, t_admit: float,
+                    t_depart: float):
+    """Materialize arrival `idx` as a FleetSession: per-arrival seed
+    offsets over the base spec, with its QA restricted to the window the
+    session is actually live for (global-time QA policies generate over
+    the whole run)."""
+    from repro.core.scenario import build_session
+
+    variant = spec.with_(workload="fixed", churn_kwargs=(),
+                         seed=spec.seed + idx,
+                         scene_seed=spec.scene_seed + idx,
+                         trace_seed=spec.trace_seed + idx,
+                         tag=f"{spec.tag or 'churn'}-a{idx}")
+    member = build_session(variant, calibrator)
+    qa = [q for q in member.qa_samples
+          if t_admit <= q.t_ask and q.t_ask + q.answer_window <= t_depart]
+    return dataclasses.replace(member, qa_samples=qa)
+
+
+def run_churn(spec, *, calibrator=None, fused_plan: bool = False
+              ) -> ChurnResult:
+    """Run one open-loop churn scenario to completion.
+
+    Per tick, in order: departures free their slots, new arrivals join
+    the FIFO admission queue, queued arrivals admit into free slots
+    (lowest slot first), then the fleet ticks.  Sessions still live at
+    the run end are closed at `spec.duration`; arrivals still queued
+    count as `unserved`."""
+    from repro.core.fleet import Fleet
+    from repro.core.scenario import _thaw, build_session
+
+    if spec.workload != "churn":
+        raise ValueError("run_churn needs a workload='churn' spec")
+    cfg = ChurnConfig.from_spec(spec)
+    duration = float(spec.duration)
+    n_frames = int(duration * spec.fps)
+    dt = 1.0 / spec.fps
+    arrivals = arrival_times(cfg, duration)
+    lifetimes = sample_lifetimes(cfg, len(arrivals))
+
+    # the fleet starts as `slots` placeholder members (no QA) that are
+    # closed before tick 0 — every slot begins dead, every real session
+    # enters through the same activate() admission path
+    placeholder = build_session(
+        spec.with_(workload="fixed", churn_kwargs=(), qa="none",
+                   qa_kwargs=(), tag="placeholder"), calibrator)
+    fleet = Fleet([placeholder] * cfg.slots, server=spec.server,
+                  engine_cfg=_thaw(spec.engine_kwargs),
+                  fused_plan=fused_plan)
+    for k in range(cfg.slots):
+        fleet.deactivate(k, 0.0)
+
+    records: List[Optional[ChurnSessionRecord]] = [None] * len(arrivals)
+    active: Dict[int, int] = {}       # slot -> arrival index
+    depart_at: Dict[int, float] = {}
+    queue: "collections.deque[int]" = collections.deque()
+    depth: List[int] = []
+    ai = 0
+    for i in range(n_frames):
+        t = i * dt
+        for k in sorted(active):
+            if depart_at[k] <= t:
+                idx = active.pop(k)
+                del depart_at[k]
+                m = fleet.deactivate(k, t)
+                records[idx].departed = t
+                records[idx].metrics = m
+        while ai < len(arrivals) and arrivals[ai] <= t:
+            queue.append(ai)
+            ai += 1
+        for k in range(cfg.slots):
+            if not queue:
+                break
+            if fleet.alive[k]:
+                continue
+            idx = queue.popleft()
+            t_dep = min(t + float(lifetimes[idx]), duration)
+            member = _arrival_member(spec, idx, calibrator, t, t_dep)
+            fleet.activate(k, member, t)
+            active[k] = idx
+            depart_at[k] = t_dep
+            records[idx] = ChurnSessionRecord(
+                index=idx, slot=k, arrival=float(arrivals[idx]),
+                admitted=t, lifetime=float(lifetimes[idx]))
+        depth.append(len(queue))
+        fleet.tick(t)
+    for k in sorted(active):
+        idx = active.pop(k)
+        m = fleet.deactivate(k, duration)
+        records[idx].departed = duration
+        records[idx].metrics = m
+
+    served = [r for r in records if r is not None and r.metrics is not None]
+    return ChurnResult(spec=spec, config=cfg, records=served,
+                       offered=len(arrivals),
+                       unserved=len(arrivals) - len(served),
+                       queue_depth=depth, duration=duration)

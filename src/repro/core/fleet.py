@@ -370,6 +370,16 @@ class Fleet:
             st.client.zeco_row = k
         self.bank = ChannelBank([s.trace for s in self.specs],
                                 pad_to=self.n_pad)
+        # churn support: a LIVE row can go dead mid-run (session departed,
+        # `deactivate`) and be revived with a fresh member (`activate`).
+        # Dead live-rows are masked exactly like the pad rows — blank
+        # frames, DEAD_SESSION_RATE, no metric accumulation — and every
+        # lane of bank state is reset at revival, so tenants of the same
+        # slot never observe each other (tests/test_churn.py pins this).
+        self.alive = np.ones(self.n, bool)
+        self._open_tick = [0] * self.n     # bank tick of each admission
+        self._open_t = [0.0] * self.n      # admission timestamp
+        self._blank = np.zeros(hw0, np.float32)
         self.bridge = None
         if server == "engine":
             # imported lazily: the bridge pulls in the model zoo, which
@@ -443,11 +453,14 @@ class Fleet:
         # QP surfaces for every session come from ONE bank dispatch, with
         # no per-session Python loop
         t0 = time.perf_counter()
+        alive = self.alive
         acks = self.bank.ack_stats_arrays()
-        for st in self.states:
-            deliver_feedback(st, t)
+        for k, st in enumerate(self.states):
+            if alive[k]:
+                deliver_feedback(st, t)
         conf = np.full(self.n_pad, 0.5)
         conf[:self.n] = [st.client.confidence for st in self.states]
+        conf[:self.n][~alive] = 0.5
         b_hat = np.full(self.n_pad, DEAD_SESSION_RATE)
         for idx, cc_bank in self._cc_groups:
             b_hat[idx] = cc_bank.estimate(
@@ -455,11 +468,14 @@ class Fleet:
         rate = np.full(self.n_pad, DEAD_SESSION_RATE)
         for idx, abr_bank in self._abr_groups:
             rate[idx] = abr_bank.update(conf[idx], b_hat[idx])
+        rate[:self.n][~alive] = DEAD_SESSION_RATE
         for k, st in enumerate(self.states):
-            st.client.rates.append(float(rate[k]))
+            if alive[k]:
+                st.client.rates.append(float(rate[k]))
         t0 = self._mark("client", t0)
         i = int(round(t * self.specs[0].cfg.fps))
-        rendered = [st.scene.render(i) for st in self.states]
+        rendered = [st.scene.render(i) if alive[k] else self._blank
+                    for k, st in enumerate(self.states)]
         if self.pad:
             rendered.extend([np.zeros_like(rendered[0])] * self.pad)
         frames = np.stack(rendered)
@@ -504,7 +520,8 @@ class Fleet:
         # vectorized channel: N queues advance together
         rep = self.bank.send_frames(t, bits)
         for k, st in enumerate(self.states):
-            client_record_send(st, float(bits[k]), float(rep.latency[k]))
+            if alive[k]:
+                client_record_send(st, float(bits[k]), float(rep.latency[k]))
         t0 = self._mark("channel", t0)
 
         # one dispatch: decode what each uplink delivered (partial drops
@@ -534,19 +551,21 @@ class Fleet:
             # skip arrivals landing after the final tick: the serial path
             # queues (and never reads) them; queuing their getters here
             # would pin the tick's whole decoded batch until teardown
-            if finite[k] and t + float(rep.latency[k]) <= self._t_last:
+            if (alive[k] and finite[k]
+                    and t + float(rep.latency[k]) <= self._t_last):
                 push_arrival(st, t, float(rep.latency[k]), rx.getter(k))
         t0 = self._mark("decode", t0, rx.dev)
 
         # server phase: ingestion batched across all sessions, then the
         # per-session feedback/QA emission
         due = [(k, t_cap, frame)
-               for k, st in enumerate(self.states)
+               for k, st in enumerate(self.states) if alive[k]
                for t_cap, frame in pop_due_arrivals(st, t)]
         _ingest_batched(self.states, due)
         if self.bridge is None:
-            for st in self.states:
-                server_emit(st, t)
+            for k, st in enumerate(self.states):
+                if alive[k]:
+                    server_emit(st, t)
         else:
             # engine server phase: this tick's delivered frames extend
             # each session's context (chunked prefill), then every
@@ -558,16 +577,92 @@ class Fleet:
             for k in sorted(frames_by_k):
                 self.bridge.extend(k, np.stack(frames_by_k[k]), t)
             committing = [(k, peek_commit(st, t))
-                          for k, st in enumerate(self.states)]
+                          for k, st in enumerate(self.states) if alive[k]]
             for k, q in committing:
                 if q is not None:
                     self.bridge.submit(k, q, t)
             answers = self.bridge.drain(t)
             for k, st in enumerate(self.states):
+                if not alive[k]:
+                    continue
                 server_emit(st, t, answer_fn=(
                     (lambda q, _a=answers[k]: _a) if k in answers
                     else None))
         self._mark("server", t0)
+
+    # -- churn slot lifecycle (repro.core.churn drives these) -----------
+    def deactivate(self, k: int, t: float) -> SessionMetrics:
+        """Close slot k mid-run (session departure): finalize its metrics
+        over ITS OWN ticks/reports and mark the row dead.  The row keeps
+        flowing through the tick's elementwise dispatches exactly like a
+        pad row (blank frame, DEAD_SESSION_RATE, no metric accumulation)
+        until `activate` revives it."""
+        if not self.alive[k]:
+            raise ValueError(f"slot {k} is already dead")
+        st = self.states[k]
+        reports = self.bank.reports_for(k, since=self._open_tick[k])
+        span = t - self._open_t[k]
+        if self.bridge is None:
+            m = finalize(st, reports, span=span)
+        else:
+            m = finalize(st, reports, span=span,
+                         answer_fn=lambda q: self.bridge.answer_now(k, q, t))
+            for field, vals in self.bridge.metrics_kwargs(k).items():
+                setattr(m, field, vals)
+            self.bridge.close(k)
+        # a dead row must not engage ZeCo while it idles between tenants
+        self.zeco.enabled[k] = False
+        self.zeco.active[k] = False
+        self.alive[k] = False
+        return m
+
+    def activate(self, k: int, member: FleetSession, t: float) -> None:
+        """Revive dead slot k with a fresh member (churn admission): new
+        scene/QA/trace plus a cold restart of every per-lane bank state
+        (channel history + backlog, CC, ABR, ZeCoStream) — and, under
+        server="engine", a fresh engine session (queue-or-wait).
+
+        The member must match the fleet's structural knobs: the cohort
+        shape (fps/duration/frame size/probe stride) AND the slot's
+        cc_kind / use_recap, because CC/ABR bank *membership* is fixed at
+        construction — churn derives every arrival from one base spec, so
+        this holds by construction there."""
+        if self.alive[k]:
+            raise ValueError(f"slot {k} is still live")
+        cfg0, old = self.specs[0].cfg, self.specs[k].cfg
+        if (member.cfg.fps, member.cfg.duration) != (cfg0.fps,
+                                                     cfg0.duration):
+            raise ValueError("revived member must share fleet fps/duration")
+        if (member.scene.h, member.scene.w) != (self.specs[0].scene.h,
+                                                self.specs[0].scene.w):
+            raise ValueError("revived member must share fleet frame size")
+        if member.cfg.rc_probe_stride != cfg0.rc_probe_stride:
+            raise ValueError("revived member must share rc_probe_stride")
+        if (member.cfg.cc_kind, member.cfg.use_recap) != (old.cc_kind,
+                                                          old.use_recap):
+            raise ValueError(
+                "revived member must keep the slot's cc_kind/use_recap "
+                "(CC/ABR bank membership is fixed at construction)")
+        self.specs[k] = member
+        st = make_session_state(member.scene, member.qa_samples,
+                                member.cfg, member.calibrator)
+        st.client.cc = None
+        st.client.abr = None
+        st.client.zeco = self.zeco
+        st.client.zeco_row = k
+        self.states[k] = st
+        self.bank.reset_row(k, member.trace)
+        for idx, bank in self._cc_groups + self._abr_groups:
+            pos = np.nonzero(idx == k)[0]
+            if len(pos):
+                bank.reset_lane(int(pos[0]))
+        self.zeco.reset_row(k, tau=member.cfg.tau,
+                            enabled=member.cfg.use_zeco)
+        if self.bridge is not None:
+            self.bridge.open(k, member.scene, cfg0.fps, now=t, wait=True)
+        self.alive[k] = True
+        self._open_tick[k] = self.bank.n_ticks
+        self._open_t[k] = t
 
     def run(self, rollout: Optional[int] = None) -> List[SessionMetrics]:
         """Run every session to completion.

@@ -72,7 +72,12 @@ class ReCapABRBank:
         self.tau = np.asarray(taus, np.float64)
         self.gamma = np.asarray(gammas, np.float64)
         self.min_rate = min_rate
+        self.init_rate = init_rate
         self.rate = np.full(len(self.tau), init_rate)
+
+    def reset_lane(self, i: int) -> None:
+        """Restart lane i from the cold-start rate (churn slot revival)."""
+        self.rate[i] = self.init_rate
 
     def update(self, confidence: np.ndarray, bw_estimate: np.ndarray
                ) -> np.ndarray:
@@ -88,7 +93,12 @@ class CCOnlyABRBank:
     def __init__(self, m: int, min_rate: float = 150e3,
                  init_rate: float = 1e6):
         self.min_rate = min_rate
+        self.init_rate = init_rate
         self.rate = np.full(m, init_rate)
+
+    def reset_lane(self, i: int) -> None:
+        """Restart lane i from the cold-start rate (churn slot revival)."""
+        self.rate[i] = self.init_rate
 
     def update(self, confidence: np.ndarray, bw_estimate: np.ndarray
                ) -> np.ndarray:

@@ -54,7 +54,8 @@ from repro.video.scenes import Scene, make_scene
 # --------------------------------------------------------------------------
 FrozenKwargs = Tuple[Tuple[str, Any], ...]
 _KWARGS_FIELDS = ("trace_kwargs", "scene_kwargs", "qa_kwargs",
-                  "session_kwargs", "degradation_kwargs", "engine_kwargs")
+                  "session_kwargs", "degradation_kwargs", "engine_kwargs",
+                  "churn_kwargs")
 
 
 def _freeze(value, top: bool = True) -> Any:
@@ -129,6 +130,11 @@ class ScenarioSpec:
     # stay "none" on the RTC fleet path)
     degradation: str = "none"         # key into engine.DEGRADATION_KINDS
     degradation_kwargs: FrozenKwargs = ()  # kbps / loss / stall_frames…
+    # workload shape: "fixed" runs the spec as one session to
+    # completion; "churn" treats it as the base population of an
+    # open-loop arrival/departure process (repro.core.churn)
+    workload: str = "fixed"
+    churn_kwargs: FrozenKwargs = ()   # ChurnConfig knobs (rate, slots…)
     # free-form label carried through to RunResult tags
     tag: str = ""
 
@@ -142,6 +148,11 @@ class ScenarioSpec:
         if self.server not in ("oracle", "engine"):
             raise ValueError(f"unknown server {self.server!r}; "
                              "one of ('oracle', 'engine')")
+        if self.workload not in ("fixed", "churn"):
+            raise ValueError(f"unknown workload {self.workload!r}; "
+                             "one of ('fixed', 'churn')")
+        if self.churn_kwargs and self.workload != "churn":
+            raise ValueError("churn_kwargs requires workload='churn'")
         for f in _KWARGS_FIELDS:
             # accept dicts (or pair lists) and freeze them for hashing
             object.__setattr__(self, f, _freeze(dict(getattr(self, f))))
@@ -408,12 +419,14 @@ SCALAR_METRICS = ("accuracy", "avg_latency_ms", "p95_latency_ms",
                   "avg_bitrate", "bandwidth_used", "n_qa",
                   "dropped_frames", "zeco_engaged_frames")
 
-# server-peer telemetry columns: populated under server="engine"
-# (zeros under the default oracle).  Kept out of SCALAR_METRICS so the
-# committed golden files — exported before the serving bridge existed —
-# stay schema-valid; exports carry both sets.
-SERVING_METRICS = ("ttft_p50_ms", "ttft_p95_ms",
-                   "queue_p50_ms", "queue_p95_ms")
+# server-peer telemetry columns: populated under server="engine" (NaN
+# under the default oracle — an oracle row has no engine telemetry, and
+# NaN keeps it distinguishable from a real zero-latency measurement).
+# Kept out of SCALAR_METRICS so the committed golden files — exported
+# before the serving bridge existed — stay schema-valid; exports carry
+# both sets.
+SERVING_METRICS = ("ttft_p50_ms", "ttft_p95_ms", "ttft_p99_ms",
+                   "queue_p50_ms", "queue_p95_ms", "queue_p99_ms")
 
 
 @dataclasses.dataclass
@@ -931,6 +944,19 @@ def run_scenarios(specs: Union[ScenarioSpec, str,
     specs = [preset(s) if isinstance(s, str) else s for s in specs]
     if not specs:
         raise ValueError("run_scenarios needs at least one spec")
+    churny = [s.workload == "churn" for s in specs]
+    if any(churny):
+        if not all(churny):
+            raise ValueError(
+                "churn and fixed workload specs cannot mix in one run; "
+                "split them into separate run_scenarios calls")
+        if mesh is not None:
+            raise NotImplementedError(
+                "workload='churn' does not compose with mesh sharding yet")
+        from repro.core.churn import ChurnRunResult, run_churn
+        return ChurnRunResult([run_churn(s, calibrator=calibrator,
+                                         fused_plan=fused_plan)
+                               for s in specs])
     for i, s in enumerate(specs):
         if s.degradation != "none":
             raise ValueError(

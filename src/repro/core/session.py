@@ -211,25 +211,47 @@ class SessionMetrics:
         lat = np.asarray(self.latencies) * 1e3
         return float(np.mean(lat < ms)) if len(lat) else 0.0
 
+    def _latency_pct(self, p: float) -> float:
+        lat = [l for l in self.latencies if np.isfinite(l)]
+        return 1e3 * float(np.percentile(lat, p)) if lat else float("inf")
+
+    @property
+    def p50_latency_ms(self) -> float:
+        return self._latency_pct(50)
+
+    @property
+    def p99_latency_ms(self) -> float:
+        return self._latency_pct(99)
+
+    # serving percentiles export NaN when empty (oracle rows have no
+    # engine telemetry; NaN keeps them distinguishable from a real
+    # zero-latency measurement in the CSV/JSON exports)
+    def _serving_pct(self, vals: List[float], p: float) -> float:
+        return 1e3 * float(np.percentile(vals, p)) if vals else float("nan")
+
     @property
     def ttft_p50_ms(self) -> float:
-        t = self.server_ttfts
-        return 1e3 * float(np.percentile(t, 50)) if t else 0.0
+        return self._serving_pct(self.server_ttfts, 50)
 
     @property
     def ttft_p95_ms(self) -> float:
-        t = self.server_ttfts
-        return 1e3 * float(np.percentile(t, 95)) if t else 0.0
+        return self._serving_pct(self.server_ttfts, 95)
+
+    @property
+    def ttft_p99_ms(self) -> float:
+        return self._serving_pct(self.server_ttfts, 99)
 
     @property
     def queue_p50_ms(self) -> float:
-        q = self.server_queue_delays
-        return 1e3 * float(np.percentile(q, 50)) if q else 0.0
+        return self._serving_pct(self.server_queue_delays, 50)
 
     @property
     def queue_p95_ms(self) -> float:
-        q = self.server_queue_delays
-        return 1e3 * float(np.percentile(q, 95)) if q else 0.0
+        return self._serving_pct(self.server_queue_delays, 95)
+
+    @property
+    def queue_p99_ms(self) -> float:
+        return self._serving_pct(self.server_queue_delays, 99)
 
 
 # ==========================================================================
@@ -490,13 +512,15 @@ def step(state: SessionState, t: float) -> SessionState:
 
 def finalize(state: SessionState, reports,
              answer_fn: Optional[Callable[[QASample], bool]] = None,
-             server_telemetry: Optional[Dict[str, List[float]]] = None
-             ) -> SessionMetrics:
+             server_telemetry: Optional[Dict[str, List[float]]] = None,
+             span: Optional[float] = None) -> SessionMetrics:
     """Flush open QA and assemble SessionMetrics from the final state.
 
     `answer_fn` replaces the oracle answer for the end-of-run flush (the
     engine server path); `server_telemetry` carries the bridge's
-    per-session ttft/queue/confidence lists into the metrics."""
+    per-session ttft/queue/confidence lists into the metrics; `span`
+    overrides the bitrate-normalization window (churn sessions live
+    shorter than `cfg.duration`)."""
     cfg, sv, c = state.cfg, state.server, state.client
     _answer = answer_fn if answer_fn is not None else sv.server.answer
     # flush: commit any open question and ask the rest at session end
@@ -506,13 +530,14 @@ def finalize(state: SessionState, reports,
     while sv.qa_i < len(sv.qa_sorted):
         sv.qa_results.append(_answer(sv.qa_sorted[sv.qa_i]))
         sv.qa_i += 1
+    dur = cfg.duration if span is None else max(span, 1.0 / cfg.fps)
     return SessionMetrics(
         **(server_telemetry or {}),
         latencies=c.latencies,
         accuracy=(float(np.mean(sv.qa_results)) if sv.qa_results else 1.0),
         n_qa=len(sv.qa_results),
-        avg_bitrate=c.bits_total / cfg.duration,
-        bandwidth_used=sum(r.bits_sent for r in reports) / cfg.duration,
+        avg_bitrate=c.bits_total / dur,
+        bandwidth_used=sum(r.bits_sent for r in reports) / dur,
         confidences=c.confs,
         rates=c.rates,
         zeco_engaged_frames=c.zeco_engaged,

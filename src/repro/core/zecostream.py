@@ -416,6 +416,24 @@ class ZeCoStreamBank:
         self.fb_counts[:, :kcap] = old[2]
         self.fb_len = old[3]
 
+    def reset_row(self, row: int, tau: Optional[float] = None,
+                  enabled: Optional[bool] = None) -> None:
+        """Restart row's trigger/hysteresis/feedback state (churn slot
+        revival); `tau`/`enabled` re-key the row to the new tenant's
+        session config.  Snapshot `engaged_total[row]` (the departing
+        tenant's metric) BEFORE calling this."""
+        self.active[row] = False
+        self.has_fb[row] = False
+        self.engaged_total[row] = 0
+        self.fb_times[row] = np.inf
+        self.fb_boxes[row] = 0.0
+        self.fb_counts[row] = 0
+        self.fb_len[row] = 0
+        if tau is not None:
+            self.tau[row] = float(tau)
+        if enabled is not None:
+            self.enabled[row] = bool(enabled)
+
     # -- feedback ingestion --------------------------------------------
     def on_feedback(self, row: int, fb: TimedBoxes):
         """Store one session's latest feedback packet into the bank."""

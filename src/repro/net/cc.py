@@ -120,9 +120,17 @@ class GCCBank:
     def __init__(self, m: int, init_rate: float = 1e6, beta: float = 0.85,
                  eta: float = 1.05, overuse_thresh: float = 0.010):
         self.beta, self.eta, self.overuse_thresh = beta, eta, overuse_thresh
+        self.init_rate = init_rate
         self.rate = np.full(m, init_rate)
         self._prev_delay = np.full(m, np.nan)   # nan == "no sample yet"
         self._capacity = np.full(m, init_rate)
+
+    def reset_lane(self, i: int) -> None:
+        """Forget lane i's state (churn slot revival): the new tenant
+        starts from the same cold start a fresh bank would give it."""
+        self.rate[i] = self.init_rate
+        self._prev_delay[i] = np.nan
+        self._capacity[i] = self.init_rate
 
     def estimate(self, ack: Dict) -> np.ndarray:
         delay = ack["avg_latency"] - ack["min_latency"]
@@ -156,10 +164,19 @@ class BBRBank:
 
     def __init__(self, m: int, init_rate: float = 1e6, window: int = 10):
         self.window = window
+        self.init_rate = init_rate
         self._samples = np.full((window, m), -np.inf)
         self._samples[0] = init_rate
         self._count = 1
         self._phase = 0
+
+    def reset_lane(self, i: int) -> None:
+        """Forget lane i's bandwidth samples (churn slot revival).  The
+        gain-cycle phase and sample counter are bank-global scalars by
+        construction, so a revived lane rejoins the cycle mid-phase —
+        only its btlbw window restarts cold."""
+        self._samples[:, i] = -np.inf
+        self._samples[(self._count - 1) % self.window, i] = self.init_rate
 
     def estimate(self, ack: Dict) -> np.ndarray:
         measured = np.maximum(ack["delivery_rate"], 1e4)

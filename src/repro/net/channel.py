@@ -306,6 +306,11 @@ class ChannelBank:
     def queue_bits(self) -> np.ndarray:
         return self._queue_bits
 
+    @property
+    def n_ticks(self) -> int:
+        """Frames sent so far (the `since` index space of `reports_for`)."""
+        return len(self._send_times)
+
     def ack_stats_arrays(self, window: int = 20) -> Dict[str, np.ndarray]:
         """CC feedback for all N sessions as (N,) arrays, computed with
         one set of array ops over the rolling (window, N) history —
@@ -349,12 +354,33 @@ class ChannelBank:
         return [{key: float(val[k]) for key, val in arr.items()}
                 for k in range(self.n)]
 
-    def reports_for(self, k: int) -> List[FrameReport]:
-        """Materialize session k's history as serial-style FrameReports."""
+    def reports_for(self, k: int, since: int = 0) -> List[FrameReport]:
+        """Materialize session k's history as serial-style FrameReports.
+        `since` skips ticks before the session's slot was (re)opened —
+        churn tenants must not inherit the previous tenant's reports."""
         return [FrameReport(send_time=self._send_times[i],
                             latency=float(self._latency[i][k]),
                             bits_sent=int(self._bits_sent[i][k]),
                             bits_delivered=int(self._bits_delivered[i][k]),
                             dropped=bool(self._dropped[i][k]),
                             queue_delay=float(self._queue_delay[i][k]))
-                for i in range(len(self._send_times))]
+                for i in range(since, len(self._send_times))]
+
+    def reset_row(self, k: int, trace: Optional[Trace] = None) -> None:
+        """Recycle lane k for a new tenant (churn slot revival): zero the
+        backlog, optionally swap in the tenant's trace, and blank the
+        lane's trailing ACK window so the CC warmup never sees the
+        previous tenant's traffic.  Rows older than the ACK window are
+        left in place — `ack_stats_arrays` only reads the trailing
+        window and `reports_for(k, since=...)` slices per tenant."""
+        self._queue_bits[k] = 0.0
+        self._queue_pkts[k] = 0
+        if trace is not None:
+            self.bank.set_row(k, trace)
+        for rows, fill in ((self._latency, np.inf),
+                           (self._bits_sent, 0),
+                           (self._bits_delivered, 0),
+                           (self._dropped, False),
+                           (self._queue_delay, 0.0)):
+            for row in rows[-ACK_WINDOW:]:
+                row[k] = fill

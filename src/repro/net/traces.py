@@ -77,6 +77,19 @@ class TraceBank:
         k = int(t / self.dt)
         return self.concat[self.offsets + (k % self.lengths)]
 
+    def set_row(self, k: int, trace: "Trace") -> None:
+        """Replace trace k in place (slot revival under session churn).
+        The replacement is tiled/truncated to the incumbent's length so
+        the packed `concat` layout never moves."""
+        if trace.dt != self.dt:
+            raise ValueError(f"trace dt {trace.dt} != bank dt {self.dt}")
+        L = int(self.lengths[k])
+        bw = np.asarray(trace.bw, np.float64)
+        if len(bw) != L:
+            reps = -(-L // len(bw))
+            bw = np.tile(bw, reps)[:L]
+        self.concat[self.offsets[k]:self.offsets[k] + L] = bw
+
 
 def static_trace(duration: float = 60.0, dt: float = DEFAULT_TRACE_DT,
                  mbps: float = 5.0, jitter: float = 0.03,

@@ -156,11 +156,28 @@ class EngineServerBridge:
         self._pending: Dict[int, Tuple[object, Request]] = {}
 
     # -- session lifecycle ---------------------------------------------
-    def open(self, k: int, scene, fps: float, now: float = 0.0) -> None:
-        self.engine.open_session(k, now=now)
+    def open(self, k: int, scene, fps: float, now: float = 0.0,
+             wait: bool = False) -> None:
+        """Open fleet session k on the engine.  With `wait=True` (the
+        churn admission path) a full engine waits for a slot instead of
+        raising; the arrival-stamped admission delay joins the session's
+        queueing-delay telemetry."""
+        self.engine.open_session(k, now=now, wait=wait)
         self._scenes[k] = scene
         self._fps[k] = float(fps)
         self.telemetry[k] = SessionTelemetry()
+        delay = self.engine.session_admission_delay(k)
+        if delay > 0.0:
+            self.telemetry[k].queue_delays.append(delay)
+
+    def close(self, k: int) -> None:
+        """Release fleet session k's engine slot (churn departure).
+        Telemetry for the departed session survives until the slot is
+        reopened; read it via `metrics_kwargs` before the next `open`."""
+        self.engine.close_session(k)
+        del self._scenes[k]
+        del self._fps[k]
+        self._pending.pop(k, None)
 
     def _ensure_capacity(self, k: int, n_new: int) -> None:
         """Roll the session context over (close + reopen the slot) when
@@ -209,7 +226,10 @@ class EngineServerBridge:
         results: Dict[int, bool] = {}
         for k, (qa, req) in sorted(self._pending.items()):
             tel = self.telemetry[k]
-            tel.ttfts.append(req.ttft if req.ttft is not None else 0.0)
+            if req.ttft is not None:
+                # a request that never produced a token has no TTFT;
+                # recording 0.0 here would drag the percentiles down
+                tel.ttfts.append(req.ttft)
             tel.queue_delays.append(req.queue_delay)
             tel.confidences.append(req.confidence)
             results[k] = self._score(k, qa, req)
@@ -229,8 +249,11 @@ class EngineServerBridge:
         if qa.kind == "count_objects":
             if not req.output:
                 return False
-            # first answer token folds to a count guess
-            return (req.output[0] % 9) == len(scene.objects)
+            # first answer token folds to a count guess over the scene's
+            # actual answer space [0, n_objects] — a fixed modulus would
+            # make counts >= that modulus unreachable
+            mod = len(scene.objects) + 1
+            return (req.output[0] % mod) == len(scene.objects)
         epoch = scene.epoch(frame_idx)
         truth = scene.objects[qa.obj_idx].code_at(epoch)
         if len(req.output) < 2:

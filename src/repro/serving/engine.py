@@ -116,6 +116,7 @@ class _StreamSession:
     slot: int
     length: int = 0                  # tokens in the slot cache (host mirror)
     opened: float = 0.0
+    admission_delay: float = 0.0     # sim seconds spent waiting for a slot
     extends: int = 0
     active: Optional[Request] = None  # in-flight query, if any
     pending_token: int = 0            # next token to feed the batched decode
@@ -309,7 +310,11 @@ class Engine:
 
         `now` defaults to the engine's own simulated clock advanced by
         `step_dt` — not the host wall clock — so request timings are
-        deterministic.  Returns requests finished this tick."""
+        deterministic.  With an explicit `now`, service begins at
+        max(clock, now) and the tick still consumes `step_dt`, matching
+        `_spend_step` on the streaming path — so repeated `step(now=t)`
+        calls are never free and queueing delay accumulates behind the
+        advancing clock.  Returns requests finished this tick."""
         if now is None:
             now = self.clock + self.step_dt
             if (self.queue and all(r is None for r in self.slots)
@@ -317,7 +322,10 @@ class Engine:
                 # discrete-event idle skip: nothing in flight, so sleep
                 # until the next queued arrival instead of spinning ticks
                 now = self.queue[0].arrival + self.step_dt
-        self.clock = max(self.clock, now)
+            self.clock = max(self.clock, now)
+        else:
+            self._begin_service(now)
+            self.clock += self.step_dt
         now = self.clock
         newly = self._admit(now)
         self._count_busy()
@@ -360,12 +368,19 @@ class Engine:
     # ==================================================================
     # Streaming sessions (the Artic video loop)
     # ==================================================================
-    def open_session(self, sid: int, now: Optional[float] = None) -> int:
+    def open_session(self, sid: int, now: Optional[float] = None,
+                     wait: bool = False,
+                     max_wait_steps: int = 100_000) -> int:
         """Pin a slot for a streaming video session; returns the slot.
 
         Unlike queued requests, a streaming context cannot be evicted
         and re-prefilled (its source frames are gone), so admission is
-        slot-or-error: size `max_batch` to the expected session count."""
+        slot-or-error by default: size `max_batch` to the expected
+        session count.  With `wait=True` (the churn admission path) the
+        engine instead runs plain-request ticks forward on the simulated
+        clock until a retirement frees a slot; the time spent waiting is
+        recorded as the session's `admission_delay` (read it back via
+        `session_admission_delay`)."""
         if sid in self._sessions:
             raise ValueError(f"session {sid} already open")
         if self.cfg.family == "hybrid" or self.cfg.kv_cache_dtype == "int8":
@@ -374,12 +389,29 @@ class Engine:
                 "dense/moe/ssm backbones with full-precision KV caches")
         self._begin_service(now)
         slot = self._free_slot()
+        if slot is None and wait:
+            if len(self._sessions) >= self.B:
+                raise RuntimeError(
+                    f"no free slot for streaming session {sid}: all "
+                    f"{self.B} slots pinned by other sessions, so waiting "
+                    "cannot free one (raise max_batch)")
+            # every slot not pinned by a session holds a plain request;
+            # tick the engine until one retires (each tick costs step_dt
+            # on the simulated clock, so the wait is a real, arrival-
+            # stamped queueing delay rather than free spinning)
+            for _ in range(max_wait_steps):
+                self.step(now=self.clock)
+                slot = self._free_slot()
+                if slot is not None:
+                    break
         if slot is None:
             raise RuntimeError(
                 f"no free slot for streaming session {sid}: all "
                 f"{self.B} slots busy (streaming sessions pin their "
                 "slot; raise max_batch)")
         sess = _StreamSession(sid=sid, slot=slot, opened=self.clock)
+        if now is not None:
+            sess.admission_delay = max(self.clock - now, 0.0)
         self._sessions[sid] = sess
         self._slot_sids[slot] = sid
         self.cache["length"] = self.cache["length"].at[slot].set(0)
@@ -397,6 +429,12 @@ class Engine:
         extend/query prefill)."""
         sess = self._sessions[sid]
         return sess.length + (sess.unflushed is not None)
+
+    def session_admission_delay(self, sid: int) -> float:
+        """Simulated seconds session `sid` waited for a free slot at
+        `open_session` (nonzero only under `wait=True` contention or a
+        busy clock)."""
+        return self._sessions[sid].admission_delay
 
     def _take_unflushed(self, sess: _StreamSession) -> Optional[np.ndarray]:
         """Pop the pending final answer token as a (1, D) embedding to
@@ -428,6 +466,12 @@ class Engine:
         overwrites their cache rows.  Returns the logits row of the last
         REAL position (1, V)."""
         S = embeds.shape[0]
+        if S == 0:
+            # returning None here would crash the caller's sample();
+            # zero-length extends must be skipped (extend_session) or
+            # rejected (submit_query) before reaching the chunk loop
+            raise ValueError(
+                f"session {sess.sid}: cannot prefill a zero-length extend")
         last = None
         done = 0
         while done < S:
@@ -457,6 +501,9 @@ class Engine:
             raise ValueError(
                 f"patch_embeds must be (S, d_model={self.cfg.d_model}); "
                 f"got {embeds.shape}")
+        if embeds.shape[0] == 0 and sess.unflushed is None:
+            # nothing to prefill and no lazy answer token to flush
+            return 0.0
         pre = self._take_unflushed(sess)
         if pre is not None:
             embeds = np.concatenate([pre, embeds], axis=0)
@@ -481,6 +528,9 @@ class Engine:
         if sess.active is not None:
             raise RuntimeError(f"session {sid} already has an open query")
         toks = np.asarray(query_tokens, np.int32).reshape(-1)
+        if toks.shape[0] == 0:
+            raise ValueError(
+                f"session {sid}: a query needs at least one token")
         self._check_capacity(
             sess, toks.shape[0] + max_new + (sess.unflushed is not None),
             "query")

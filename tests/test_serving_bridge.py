@@ -1,6 +1,8 @@
 """Serving-bridge tests: engine streaming sessions, slot lifecycle, KV
 page accounting, the deterministic patch embedder, and the
 Fleet(server="engine") end-to-end path."""
+import math
+
 import jax
 import numpy as np
 import pytest
@@ -72,6 +74,124 @@ def test_engine_queue_delay_reflects_busy_clock(tiny_params):
                             now=0.0)
     assert d0 == 0.0
     assert d1 == pytest.approx(eng.step_dt)
+
+
+def test_engine_step_explicit_now_advances_simulated_clock(tiny_params):
+    """Regression: step(now=...) used to leave the clock where
+    _begin_service put it — every externally-driven tick was free, so
+    queue delays and TTFTs under a fleet driver were understated.  An
+    explicit-now step must cost step_dt exactly like the self-advancing
+    path."""
+    eng = _engine(tiny_params, step_dt=0.5)
+    eng.submit(_req(0, max_new=2), now=3.0)
+    done = []
+    while not done:
+        done = eng.step(now=3.0)  # external driver stuck at t=3.0
+    r = done[0]
+    # identical timeline to the now=None path pinned above: the clock
+    # self-advances past the stale driver time, never backwards
+    assert r.arrival == 3.0
+    assert r.first_token_time == 3.5
+    assert r.ttft == 0.5
+    assert r.done_time == 4.0
+    assert eng.clock == r.done_time
+
+
+def test_open_session_wait_mode(tiny_params):
+    """With every slot busy serving plain requests, wait=True spins the
+    engine until one frees, and the time spent waiting is stamped as
+    the session's admission delay."""
+    eng = _engine(tiny_params, step_dt=0.5)
+    eng.submit(_req(0, max_new=2), now=0.0)
+    eng.submit(_req(1, max_new=2), now=0.0)
+    eng.step()  # both admitted: all 2 slots busy
+    with pytest.raises(RuntimeError, match="no free slot"):
+        eng.open_session(5)  # slot-or-error default unchanged
+    slot = eng.open_session(5, now=0.0, wait=True)
+    assert eng.slots[slot] is None and eng._slot_sids[slot] == 5
+    assert eng.stats.finished == 2  # the wait drove both to completion
+    delay = eng.session_admission_delay(5)
+    assert delay > 0.0
+    assert delay == pytest.approx(eng.clock)  # opened at now=0.0
+
+
+def test_open_session_wait_all_pinned_fails_fast(tiny_params):
+    """wait=True must not spin forever when every slot is pinned by
+    another session — no amount of stepping frees one."""
+    eng = _engine(tiny_params)
+    eng.open_session(0)
+    eng.open_session(1)
+    with pytest.raises(RuntimeError, match="pinned"):
+        eng.open_session(2, wait=True)
+
+
+def test_extend_session_empty_embeds_is_noop(tiny_params):
+    """Regression: a tick that delivered zero frames produced a
+    zero-length extend, and _extend_chunks returned None instead of the
+    updated KV state — the next sample() crashed.  Empty extends are
+    now an explicit no-op (nothing buffered) and never reach prefill."""
+    eng = _engine(tiny_params)
+    eng.open_session(0)
+    assert eng.extend_session(0, np.zeros((0, TINY.d_model),
+                                          np.float32)) == 0.0
+    assert eng.session_length(0) == 0
+    # with context already buffered, an empty extend still flushes it
+    eng.extend_session(0, np.ones((4, TINY.d_model), np.float32))
+    eng.extend_session(0, np.zeros((0, TINY.d_model), np.float32))
+    assert eng.session_length(0) == 4
+    # a question, unlike a frame batch, can never be empty
+    with pytest.raises(ValueError, match="at least one token"):
+        eng.submit_query(0, np.asarray([], np.int32))
+
+
+def test_score_count_modulus_tracks_scene_answer_space():
+    """Regression: the count-question fold was hardcoded `% 9`, so any
+    scene with >= 9 objects could never score a correct count.  The
+    modulus must be the scene's actual answer space, [0, n_objects]."""
+    from types import SimpleNamespace
+    stub = SimpleNamespace(_scenes={0: SimpleNamespace(objects=[None] * 10)},
+                           _fps={0: 10.0})
+    qa = SimpleNamespace(kind="count_objects", t_ask=0.0, obj_idx=0)
+    score = EngineServerBridge._score
+    # correct count == n_objects == 10: unreachable under the old % 9
+    assert score(stub, 0, qa, SimpleNamespace(output=[10]))
+    assert score(stub, 0, qa, SimpleNamespace(output=[21]))  # 21 % 11 == 10
+    assert not score(stub, 0, qa, SimpleNamespace(output=[9]))
+    assert not score(stub, 0, qa, SimpleNamespace(output=[]))
+
+
+def test_drain_skips_requests_without_ttft():
+    """Regression: a drained request that never produced a token
+    (ttft=None) used to record a 0.0 TTFT sentinel, dragging the
+    percentiles toward zero.  It must be skipped entirely."""
+    from types import SimpleNamespace
+    tel = SessionTelemetry()
+    qa = SimpleNamespace(kind="count_objects", t_ask=0.0, obj_idx=0)
+    req = SimpleNamespace(ttft=None, queue_delay=0.25, confidence=0.5,
+                          output=[])
+    stub = SimpleNamespace(
+        engine=SimpleNamespace(drain_queries=lambda now: None),
+        telemetry={0: tel}, _pending={0: (qa, req)},
+        _scenes={0: SimpleNamespace(objects=[None] * 3)}, _fps={0: 10.0})
+    stub._score = lambda k, q, r: EngineServerBridge._score(stub, k, q, r)
+    results = EngineServerBridge.drain(stub, now=1.0)
+    assert results == {0: False}
+    assert tel.ttfts == []                 # no 0.0 sentinel
+    assert tel.queue_delays == [0.25]      # real telemetry still lands
+
+
+def test_empty_serving_percentiles_export_nan():
+    """Oracle sessions have no engine telemetry; their serving
+    percentiles must export NaN, not a fake 0.0 measurement."""
+    from repro.core.session import SessionMetrics
+    m = SessionMetrics(latencies=[], accuracy=1.0, n_qa=0, avg_bitrate=0.0,
+                       bandwidth_used=0.0, confidences=[], rates=[],
+                       zeco_engaged_frames=0, qa_results=[])
+    for name in ("ttft_p50_ms", "ttft_p95_ms", "ttft_p99_ms",
+                 "queue_p50_ms", "queue_p95_ms", "queue_p99_ms"):
+        assert math.isnan(getattr(m, name))
+    # frame-latency percentiles keep their inf-when-empty convention
+    assert math.isinf(m.p50_latency_ms) and math.isinf(m.p99_latency_ms)
 
 
 # --------------------------------------------------------------------------
@@ -459,7 +579,10 @@ def test_run_scenarios_engine_cohort(tmp_path):
     validate_run_result_json(doc)
     by_tag = {rec["spec"]["tag"]: rec["metrics"]
               for rec in doc["scenarios"]}
-    assert by_tag["oracle"]["ttft_p50_ms"] == 0.0
+    # the oracle answers without an engine: no TTFT samples exist, and
+    # the percentiles export as NaN (not a fake 0.0) — NaN round-trips
+    # through json.dump/load in non-strict mode
+    assert math.isnan(by_tag["oracle"]["ttft_p50_ms"])
     assert by_tag["engine"]["ttft_p50_ms"] > 0.0
     servers = {c["server"] for c in doc["cohorts"]}
     assert servers == {"oracle", "engine"}
