@@ -1,6 +1,6 @@
 """Serving-bridge benchmark: engine throughput + fleet-served latency.
 
-Two stages, both CPU-runnable on the seeded reduced-config model:
+Stages, all CPU-runnable on the seeded reduced-config model:
 
 1. **Engine drain** — N plain requests through the continuous-batching
    engine (the `launch/serve.py` workload): wall-clock tokens/sec plus
@@ -8,6 +8,10 @@ Two stages, both CPU-runnable on the seeded reduced-config model:
    `EngineStats`.
 2. **Fleet(server="engine")** — a tiny engine-served scenario end to
    end: per-session TTFT/queueing percentiles out of `SessionMetrics`.
+3. **Eviction** (`eviction.*`) — one long streaming session (≫ max_len
+   tokens of frame context) run twice, sink+recent eviction vs legacy
+   rollover: context-retention counters, accuracy, and TTFT for both
+   overflow policies side by side.
 
 Wall-clock absolutes move with the runner; the committed
 BENCH_serving.json is gated on METRIC COVERAGE only (every committed
@@ -92,6 +96,37 @@ def bench_fleet_served(n_sessions: int = 3, duration: float = 3.0) -> Dict:
     }
 
 
+def bench_eviction(duration: float = 8.0, max_len: int = 64) -> Dict:
+    """One long streaming session (frame tokens ≫ max_len), engine-served
+    under both overflow policies: sink+recent eviction (default) vs
+    legacy close+reopen rollover.  At fps=10 / patch_grid=2 the session
+    streams `40 * duration` tokens — 5x max_len at the defaults — so
+    both policies trigger many times."""
+    from repro.core.scenario import ScenarioSpec, run_scenarios
+
+    base = ScenarioSpec(duration=duration, frame_h=64, frame_w=64,
+                        scene="retail", qa="periodic",
+                        qa_kwargs=dict(start=1.0, period=1.0,
+                                       count=int(duration) - 1,
+                                       answer_window=1.0),
+                        server="engine")
+    out: Dict[str, float] = {}
+    t0 = time.perf_counter()
+    for label, evict in (("", True), ("rollover_", False)):
+        spec = base.with_(engine_kwargs=dict(
+            max_len=max_len, step_dt=0.004, eviction=evict))
+        m = run_scenarios([spec]).metrics[0]
+        out[f"eviction.{label}evictions"] = float(m.server_evictions)
+        out[f"eviction.{label}evicted_tokens"] = float(
+            m.server_evicted_tokens)
+        out[f"eviction.{label}rollovers"] = float(m.server_rollovers)
+        out[f"eviction.{label}accuracy"] = float(m.accuracy)
+        out[f"eviction.{label}ttft_p50_ms"] = float(m.ttft_p50_ms)
+    out["eviction.streamed_tokens"] = 4.0 * base.fps * duration
+    out["eviction.wall_s"] = time.perf_counter() - t0
+    return out
+
+
 def run(quick: bool = True) -> Dict[str, float]:
     """All serving metrics as one flat {name: value} dict (the snapshot
     `metrics` payload)."""
@@ -100,6 +135,9 @@ def run(quick: bool = True) -> Dict[str, float]:
     metrics = dict(bench_engine(requests=8 if quick else 32,
                                 max_new=8 if quick else 32))
     metrics.update(bench_fleet_served(n_sessions=2 if quick else 8))
+    # eviction vs rollover keeps one shape too: the A/B needs both
+    # policies to trigger, which `quick` sizing would not guarantee
+    metrics.update(bench_eviction(duration=6.0 if quick else 12.0))
     # the open-loop capacity-knee sweep keeps one shape regardless of
     # `quick` so the coverage gate sees a stable load.* key set
     metrics.update(bench_load())

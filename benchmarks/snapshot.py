@@ -147,7 +147,12 @@ def validate_serving_snapshot(doc: Dict) -> None:
               "fleet.ttft_p50_ms", "fleet.queue_p95_ms",
               # the open-loop capacity sweep (benchmarks.bench_load) is a
               # required stage, not an optional extra
-              "load.peak_sessions_per_sec", "load.knee_offered_per_sec"):
+              "load.peak_sessions_per_sec", "load.knee_offered_per_sec",
+              # the long-session overflow A/B (sink+recent eviction vs
+              # legacy rollover) is required too
+              "eviction.evictions", "eviction.evicted_tokens",
+              "eviction.rollovers", "eviction.ttft_p50_ms",
+              "eviction.rollover_rollovers"):
         need(k in metrics, f"metrics.{k}")
 
 
@@ -240,9 +245,17 @@ def check_serving_coverage(committed: Dict,
     by a fresh `bench_serving.run()`.  Wall-clock absolutes (tok/s,
     TTFT ms) move with the runner, so — like the kernels gate — they are
     recorded but never compared; the gate catches serving metrics
-    silently dropping out of the bench."""
-    return [f"serving metric {k!r} missing from fresh bench"
-            for k in committed["metrics"] if k not in fresh_metrics]
+    silently dropping out of the bench.  The eviction stage is required
+    on BOTH sides (not just inherited from the committed key set), so a
+    bench edit that drops the overflow A/B cannot slip through against
+    an old snapshot."""
+    missing = [f"serving metric {k!r} missing from fresh bench"
+               for k in committed["metrics"] if k not in fresh_metrics]
+    if not any(k.startswith("eviction.") for k in fresh_metrics):
+        missing.append(
+            "fresh serving bench produced no eviction.* stage "
+            "(bench_serving.bench_eviction)")
+    return missing
 
 
 def _main() -> None:

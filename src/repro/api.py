@@ -198,6 +198,26 @@ def serving_smoke(out_path: str = "/tmp/artic_serving_smoke.json"
         raise AssertionError("engine server answered no queries")
     print(f"[serving-smoke] {len(result)} engine-served sessions, "
           f"{n_q} queries, digest {d1[:12]} reproduced -> {out_path}")
+
+    # long-session eviction scenario: one session streams > 4x max_len
+    # frame tokens; sink+recent eviction must keep it running with ZERO
+    # rollovers, deterministically (digest compared across two runs)
+    long_spec = base.with_(duration=8.0,
+                           qa_kwargs=dict(start=1.0, period=2.0, count=3,
+                                          answer_window=1.0),
+                           engine_kwargs=dict(max_len=64, step_dt=0.004))
+    r1, r2 = run_scenarios([long_spec]), run_scenarios([long_spec])
+    if digest(r1) != digest(r2):
+        raise AssertionError("eviction run is not deterministic")
+    m = r1.metrics[0]
+    if m.server_rollovers != 0 or m.server_evictions == 0:
+        raise AssertionError(
+            f"long session expected eviction-only overflow handling; got "
+            f"{m.server_evictions} evictions, {m.server_rollovers} "
+            "rollovers")
+    print(f"[serving-smoke] long session: {m.server_evictions} evictions "
+          f"({m.server_evicted_tokens} tokens), 0 rollovers, digest "
+          "reproduced")
     for s, m in zip(result.specs, result.metrics):
         print(f"[serving-smoke]   {s.system}/{s.trace}: "
               f"ttft_p50={m.ttft_p50_ms:.1f}ms "

@@ -227,7 +227,10 @@ class ChurnResult:
                     [float(v).hex() for v in r.metrics.latencies],
                     [bool(b) for b in r.metrics.qa_results],
                     [float(v).hex() for v in r.metrics.server_ttfts],
-                    [float(v).hex() for v in r.metrics.server_queue_delays]]
+                    [float(v).hex() for v in r.metrics.server_queue_delays],
+                    [int(r.metrics.server_evictions),
+                     int(r.metrics.server_evicted_tokens),
+                     int(r.metrics.server_rollovers)]]
                    for r in self.records]
         payload.append([int(d) for d in self.queue_depth])
         return hashlib.sha256(

@@ -426,7 +426,13 @@ SCALAR_METRICS = ("accuracy", "avg_latency_ms", "p95_latency_ms",
 # before the serving bridge existed — stay schema-valid; exports carry
 # both sets.
 SERVING_METRICS = ("ttft_p50_ms", "ttft_p95_ms", "ttft_p99_ms",
-                   "queue_p50_ms", "queue_p95_ms", "queue_p99_ms")
+                   "queue_p50_ms", "queue_p95_ms", "queue_p99_ms",
+                   # context-overflow counters: sink+recent evictions vs
+                   # legacy rollovers (0/0/0 on oracle rows).  Also
+                   # outside SCALAR_METRICS, so pre-eviction goldens and
+                   # validate_run_result_json stay untouched.
+                   "server_evictions", "server_evicted_tokens",
+                   "server_rollovers")
 
 
 @dataclasses.dataclass

@@ -196,6 +196,12 @@ class SessionMetrics:
     server_ttfts: List[float] = dataclasses.field(default_factory=list)
     server_queue_delays: List[float] = dataclasses.field(default_factory=list)
     server_confidences: List[float] = dataclasses.field(default_factory=list)
+    # context-overflow handling counters (engine server only): sink+recent
+    # evictions keep the session warm; rollovers are the legacy full
+    # context drop (eviction=False)
+    server_evictions: int = 0
+    server_evicted_tokens: int = 0
+    server_rollovers: int = 0
 
     @property
     def avg_latency_ms(self) -> float:

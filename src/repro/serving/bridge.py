@@ -22,11 +22,14 @@ growth, batching) end to end; the oracle stays the accuracy-calibrated
 default and is untouched by this module.
 
 Context growth: every delivered frame appends `patch_grid**2` tokens.
-When the slot would overflow (`max_len`), the bridge rolls the session
-over — closes and reopens the slot, dropping the old context — which
-models a crude streaming-context truncation.  Rollovers are counted in
-the telemetry; smarter eviction (StreamingLLM-style sinks) is a ROADMAP
-item.
+When the slot would overflow (`max_len`), the engine evicts middle
+context StreamingLLM-style (sink+recent: the first `n_sink` tokens plus
+the most recent window survive, RoPE positions re-rotated exactly), so
+streaming sessions never hard-reset — evictions and evicted tokens are
+counted in the telemetry.  Passing `eviction=False` opts back into the
+legacy rollover (close + reopen, full context drop), kept for A/B
+comparison (`bench_serving.py`'s eviction stage) and for ssm backbones,
+whose constant-size state has no per-position KV to evict.
 """
 from __future__ import annotations
 
@@ -105,11 +108,16 @@ class SessionTelemetry:
     confidences: List[float] = dataclasses.field(default_factory=list)
     extends: int = 0
     rollovers: int = 0
+    evictions: int = 0
+    evicted_tokens: int = 0
 
-    def as_metrics_kwargs(self) -> Dict[str, List[float]]:
+    def as_metrics_kwargs(self) -> Dict[str, object]:
         return dict(server_ttfts=list(self.ttfts),
                     server_queue_delays=list(self.queue_delays),
-                    server_confidences=list(self.confidences))
+                    server_confidences=list(self.confidences),
+                    server_evictions=self.evictions,
+                    server_evicted_tokens=self.evicted_tokens,
+                    server_rollovers=self.rollovers)
 
 
 class EngineServerBridge:
@@ -124,13 +132,16 @@ class EngineServerBridge:
 
     #: engine_cfg keys accepted by Fleet(engine_cfg=...) / ScenarioSpec
     KNOBS = ("arch", "reduced_model", "max_len", "step_dt", "patch_grid",
-             "max_new", "query_len", "seed", "chunk_max", "temperature")
+             "max_new", "query_len", "seed", "chunk_max", "temperature",
+             "eviction", "n_sink", "evict_target")
 
     def __init__(self, n_sessions: int, *, arch: str = "qwen3-0.6b",
                  reduced_model: bool = True, max_len: int = 192,
                  step_dt: float = 0.004, patch_grid: int = 2,
                  max_new: int = 4, query_len: int = 3, seed: int = 0,
-                 chunk_max: int = 32, temperature: float = 0.0):
+                 chunk_max: int = 32, temperature: float = 0.0,
+                 eviction: Optional[bool] = None, n_sink: int = 4,
+                 evict_target: Optional[int] = None):
         cfg = registry.get_config(arch)
         if reduced_model:
             cfg = reduced(cfg, dtype="float32", param_dtype="float32")
@@ -143,11 +154,18 @@ class EngineServerBridge:
         self.max_new = int(max_new)
         self.query_len = int(query_len)
         self.seed = int(seed)
+        # eviction=None -> auto: sink+recent wherever the backbone has a
+        # per-position KV cache; ssm (constant-size state) keeps rollover
+        if eviction is None:
+            eviction = cfg.family in ("dense", "moe")
+        self.eviction = bool(eviction)
         params = tfm.init(jax.random.PRNGKey(seed), cfg)
         self.engine = Engine(
             cfg, params, max_batch=n_sessions, max_len=max_len,
             sampler=SamplerConfig(temperature=temperature), seed=seed,
-            step_dt=step_dt, chunk_max=chunk_max)
+            step_dt=step_dt, chunk_max=chunk_max,
+            eviction=("sink" if self.eviction else None),
+            n_sink=n_sink, evict_target=evict_target)
         # headroom a query needs on top of the streamed context
         self._reserve = self.query_len + self.max_new
         self._scenes: Dict[int, object] = {}
@@ -174,20 +192,43 @@ class EngineServerBridge:
         """Release fleet session k's engine slot (churn departure).
         Telemetry for the departed session survives until the slot is
         reopened; read it via `metrics_kwargs` before the next `open`."""
-        self.engine.close_session(k)
+        if k in self._pending:
+            raise RuntimeError(
+                f"session {k}: close with an in-flight query — drain "
+                "first (the departure path answers via answer_now)")
+        # departure is a deliberate context drop: the unflushed final
+        # answer token dies with the session it belonged to
+        self.engine.close_session(k, discard=True)
         del self._scenes[k]
         del self._fps[k]
-        self._pending.pop(k, None)
 
-    def _ensure_capacity(self, k: int, n_new: int) -> None:
-        """Roll the session context over (close + reopen the slot) when
-        the next op would overflow `max_len` — crude but deterministic
-        streaming-context truncation."""
+    def _ensure_capacity(self, k: int, n_new: int, now: float) -> None:
+        """Legacy rollover (eviction=False only): close + reopen the
+        slot when the next op would overflow `max_len`, dropping the
+        whole context.  Under eviction (the default) this is a no-op —
+        the engine compacts the context inside extend/submit instead."""
+        if self.eviction:
+            return
         if (self.engine.session_length(k) + n_new + self._reserve
                 > self.engine.max_len):
-            self.engine.close_session(k)
-            self.engine.open_session(k)
-            self.telemetry[k].rollovers += 1
+            if k in self._pending:
+                raise RuntimeError(
+                    f"session {k}: rollover with an in-flight query "
+                    "would drop its decode state — drain first")
+            self.engine.close_session(k, discard=True)
+            self.engine.open_session(k, now=now)
+            tel = self.telemetry[k]
+            tel.rollovers += 1
+            # the reopen is arrival-stamped like every other open path:
+            # a busy engine clock shows up as admission delay
+            delay = self.engine.session_admission_delay(k)
+            if delay > 0.0:
+                tel.queue_delays.append(delay)
+
+    def _sync_evictions(self, k: int) -> None:
+        ev, toks = self.engine.session_eviction_stats(k)
+        tel = self.telemetry[k]
+        tel.evictions, tel.evicted_tokens = ev, toks
 
     # -- the per-tick server phase -------------------------------------
     def extend(self, k: int, frames: np.ndarray, now: float) -> None:
@@ -196,8 +237,9 @@ class EngineServerBridge:
         embeds = frames_to_patches(frames, self.cfg.d_model,
                                    self.patch_grid, self.seed)
         flat = embeds.reshape(-1, self.cfg.d_model)
-        self._ensure_capacity(k, flat.shape[0])
+        self._ensure_capacity(k, flat.shape[0], now)
         delay = self.engine.extend_session(k, flat, now=now)
+        self._sync_evictions(k)
         tel = self.telemetry[k]
         tel.queue_delays.append(delay)
         tel.extends += 1
@@ -212,9 +254,10 @@ class EngineServerBridge:
 
     def submit(self, k: int, qa, now: float) -> None:
         toks = self.query_tokens(qa)
-        self._ensure_capacity(k, len(toks))
+        self._ensure_capacity(k, len(toks), now)
         req = self.engine.submit_query(k, toks, now=now,
                                        max_new=self.max_new)
+        self._sync_evictions(k)
         self._pending[k] = (qa, req)
 
     def drain(self, now: float) -> Dict[int, bool]:

@@ -28,6 +28,16 @@ sized to the contiguous cache (the device cache itself stays contiguous;
 pages are the *accounting* quantum): slots allocate pages as their
 lengths grow and release them on retirement, and `EngineStats` surfaces
 current/peak pool utilization.
+
+Streaming sessions that outgrow `max_len` are handled by the eviction
+policy: with `eviction="sink"` (StreamingLLM, arXiv:2309.17453) an
+overflowing extend/query first compacts the session context to the
+first `n_sink` attention-sink tokens plus the most recent window
+(`kv_cache.compact_slot_kv` gathers the survivors and re-rotates their
+RoPE positions exactly), so long sessions never hard-reset; with
+`eviction=None` (the default) overflow raises `SessionOverflowError`
+and the caller decides (the bridge's legacy answer was close+reopen
+rollover).
 """
 from __future__ import annotations
 
@@ -41,6 +51,7 @@ import numpy as np
 
 from repro.models import transformer as tfm
 from repro.models.config import ModelConfig
+from repro.serving import kv_cache
 from repro.serving.kv_cache import PageAllocator
 from repro.serving.sampler import SamplerConfig, sample
 
@@ -91,6 +102,9 @@ class EngineStats:
     kv_pages_total: int = 0
     kv_pages_used: int = 0
     kv_pages_peak: int = 0
+    # sink+recent context evictions across all streaming sessions
+    evictions: int = 0
+    tokens_evicted: int = 0
 
     @property
     def slot_utilization(self) -> float:
@@ -123,6 +137,8 @@ class _StreamSession:
     unflushed: Optional[int] = None   # final answer token awaiting its KV
     #   write (decode writes token i-1's KV while producing token i, so
     #   the last sampled token joins the cache with the NEXT prefill)
+    evictions: int = 0                # sink+recent evictions this tenancy
+    evicted_tokens: int = 0
 
 
 def _chunk_pad(n: int, chunk_max: int) -> int:
@@ -140,11 +156,35 @@ class Engine:
                  max_len: int = 512,
                  sampler: Optional[SamplerConfig] = None,
                  seed: int = 0, step_dt: float = 0.0,
-                 kv_page: int = 16, chunk_max: int = 64):
+                 kv_page: int = 16, chunk_max: int = 64,
+                 eviction: Optional[str] = None, n_sink: int = 4,
+                 evict_target: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.B = max_batch
         self.max_len = max_len
+        # streaming-session overflow policy: None (legacy) raises
+        # SessionOverflowError; "sink" evicts middle context StreamingLLM-
+        # style, keeping the first n_sink tokens plus the most recent
+        # window, compacted down to evict_target tokens so successive
+        # evictions are amortized rather than per-token
+        if eviction not in (None, "sink"):
+            raise ValueError(f"eviction must be None or 'sink'; "
+                             f"got {eviction!r}")
+        if eviction == "sink" and cfg.family not in ("dense", "moe"):
+            raise NotImplementedError(
+                f"{cfg.name}: sink+recent eviction needs a per-position "
+                "KV cache (dense/moe); ssm state is constant-size and "
+                "never overflows by construction")
+        self.eviction = eviction
+        self.n_sink = int(n_sink)
+        self.evict_target = (max_len // 2 if evict_target is None
+                             else int(evict_target))
+        if eviction == "sink" and not (
+                self.n_sink + 1 <= self.evict_target <= max_len):
+            raise ValueError(
+                f"evict_target={self.evict_target} must lie in "
+                f"[n_sink+1={self.n_sink + 1}, max_len={max_len}]")
         # None -> a fresh default per engine (a dataclass default of
         # SamplerConfig() would be one shared instance across engines)
         self.sampler = SamplerConfig() if sampler is None else sampler
@@ -196,11 +236,15 @@ class Engine:
 
     # -- KV page accounting --------------------------------------------
     def _kv_sync(self, seq_key, length: int) -> None:
-        """Grow `seq_key`'s page allocation to cover `length` tokens."""
+        """Grow or shrink `seq_key`'s page allocation to cover `length`
+        tokens (shrink happens after a sink+recent eviction compacts the
+        slot)."""
         need = -(-max(length, 1) // self.kv_page)
         have = len(self.allocator.owned.get(seq_key, []))
         if need > have:
             self.allocator.alloc(seq_key, need - have)
+        elif need < have:
+            self.allocator.release_n(seq_key, have - need)
         self.stats.kv_pages_used = (self.allocator.n_pages
                                     - len(self.allocator.free))
         self.stats.kv_pages_peak = max(self.stats.kv_pages_peak,
@@ -291,7 +335,13 @@ class Engine:
                 continue
             hit_eos = req.eos_id is not None and req.output and (
                 req.output[-1] == req.eos_id)
-            full = int(self.cache["length"][slot]) >= self.max_len - 1
+            # full means the NEXT decode step has no cache row to write:
+            # prompt + committed output fills max_len (the final sampled
+            # token never needs a row, so lengths up to max_len - 1 can
+            # still take one more step).  Derived from the request's own
+            # budget, not the raw slot cache length, which on a session-
+            # pinned slot would include unrelated streaming context.
+            full = len(req.tokens) + len(req.output) - 1 >= self.max_len
             if len(req.output) >= req.max_new_tokens or hit_eos or full:
                 req.done_time = now
                 done.append(req)
@@ -418,8 +468,30 @@ class Engine:
         self._kv_sync(("sid", sid), 0)
         return slot
 
-    def close_session(self, sid: int) -> None:
-        sess = self._sessions.pop(sid)
+    def close_session(self, sid: int, discard: bool = False) -> None:
+        """Release session `sid`'s slot.
+
+        Closing is destructive: the slot's context — including an
+        in-flight query's decode state (`sess.active`) and the
+        lazy-commit final answer token (`sess.unflushed`) — dies with
+        it.  By default that is an error when such state exists, because
+        a caller that closes mid-query (or mid-flush) and keeps serving
+        would silently answer from a context missing committed tokens.
+        Callers for whom the drop is the point — churn departures,
+        explicit rollover — pass `discard=True`."""
+        sess = self._sessions[sid]
+        if not discard:
+            if sess.active is not None:
+                raise RuntimeError(
+                    f"session {sid}: close_session with an in-flight "
+                    "query would drop its decode state; drain first or "
+                    "pass discard=True")
+            if sess.unflushed is not None:
+                raise RuntimeError(
+                    f"session {sid}: close_session would drop the "
+                    "unflushed final answer token; flush it with an "
+                    "extend first or pass discard=True")
+        self._sessions.pop(sid)
         del self._slot_sids[sess.slot]
         self._kv_release(("sid", sid))
 
@@ -435,6 +507,12 @@ class Engine:
         `open_session` (nonzero only under `wait=True` contention or a
         busy clock)."""
         return self._sessions[sid].admission_delay
+
+    def session_eviction_stats(self, sid: int) -> Tuple[int, int]:
+        """(evictions, evicted_tokens) for session `sid`'s current
+        tenancy — the bridge mirrors these into `SessionTelemetry`."""
+        sess = self._sessions[sid]
+        return sess.evictions, sess.evicted_tokens
 
     def _take_unflushed(self, sess: _StreamSession) -> Optional[np.ndarray]:
         """Pop the pending final answer token as a (1, D) embedding to
@@ -455,6 +533,52 @@ class Engine:
                 f"session {sess.sid}: {what} of {n_new} tokens would "
                 f"grow the context to {sess.length + n_new} > "
                 f"max_len={self.max_len}")
+
+    def _fit_or_evict(self, sess: _StreamSession, n_new: int,
+                      what: str) -> None:
+        """Make room for `n_new` tokens (which must include any
+        unflushed answer token the caller is about to concatenate).
+
+        With `eviction=None` this is exactly the legacy capacity check.
+        With `eviction="sink"` an overflowing op first compacts the
+        session to the sink+recent skeleton: keep the first `n_sink`
+        tokens plus the most recent window, shrinking to
+        min(evict_target, max_len - n_new) so the op then fits.  The
+        compaction itself costs no simulated engine time — it is cache
+        bookkeeping, not a forward pass.  An op too large to ever fit
+        (n_new > max_len - n_sink - 1) still raises; so does eviction
+        mid-query, which would shift cache positions under an active
+        decode."""
+        if sess.length + n_new <= self.max_len:
+            return
+        if self.eviction != "sink":
+            self._check_capacity(sess, n_new, what)
+            return
+        if sess.active is not None:
+            raise RuntimeError(
+                f"session {sess.sid}: cannot evict context while a "
+                "query is in flight (drain first)")
+        allowed = min(self.evict_target, self.max_len - n_new)
+        if allowed < self.n_sink + 1 or allowed >= sess.length:
+            # either the op alone exceeds the post-eviction budget or
+            # the context is already shorter than the target — evicting
+            # cannot make this op fit
+            raise SessionOverflowError(
+                f"session {sess.sid}: {what} of {n_new} tokens cannot "
+                f"fit even after sink+recent eviction (length "
+                f"{sess.length}, n_sink {self.n_sink}, "
+                f"max_len {self.max_len})")
+        keep = kv_cache.sink_recent_indices(
+            sess.length, self.n_sink, allowed - self.n_sink)
+        self.cache = kv_cache.compact_slot_kv(
+            self.cache, sess.slot, keep, self.cfg)
+        evicted = sess.length - allowed
+        sess.length = allowed
+        self._kv_sync(("sid", sess.sid), allowed)
+        sess.evictions += 1
+        sess.evicted_tokens += evicted
+        self.stats.evictions += 1
+        self.stats.tokens_evicted += evicted
 
     def _extend_chunks(self, sess: _StreamSession, embeds: np.ndarray
                        ) -> jnp.ndarray:
@@ -504,10 +628,15 @@ class Engine:
         if embeds.shape[0] == 0 and sess.unflushed is None:
             # nothing to prefill and no lazy answer token to flush
             return 0.0
+        # capacity (and any eviction) resolves BEFORE the unflushed token
+        # is popped, so an overflow raise never drops it — and an
+        # eviction only compacts committed cache rows, so the host-side
+        # token rides through untouched and flushes into the prefill
+        self._fit_or_evict(
+            sess, embeds.shape[0] + (sess.unflushed is not None), "extend")
         pre = self._take_unflushed(sess)
         if pre is not None:
             embeds = np.concatenate([pre, embeds], axis=0)
-        self._check_capacity(sess, embeds.shape[0], "extend")
         delay = self._begin_service(now)
         self._extend_chunks(sess, embeds)
         sess.extends += 1
@@ -531,7 +660,7 @@ class Engine:
         if toks.shape[0] == 0:
             raise ValueError(
                 f"session {sid}: a query needs at least one token")
-        self._check_capacity(
+        self._fit_or_evict(
             sess, toks.shape[0] + max_new + (sess.unflushed is not None),
             "query")
         req = Request(uid=(sid if uid is None else uid), tokens=toks,

@@ -10,6 +10,16 @@ attention (the Pallas flash_decode kernel consumes tables directly on TPU).
 Paged caches beat contiguous per-slot caches at scale because memory is
 allocated in O(page) quanta: fragmentation is bounded by page_size-1
 tokens per sequence instead of (max_len - len) per slot.
+
+This module also hosts the sink+recent *compaction* primitives behind
+the engine's StreamingLLM-style context eviction (arXiv:2309.17453):
+`sink_recent_indices` picks the surviving rows (attention sinks + the
+recent window), `compact_slot_kv` gathers them to the front of one batch
+slot of the contiguous cache and re-rotates the kept keys by their
+position delta (the "KV shift" — rotate-half RoPE composes additively,
+so shifting a cached key from position p to p-d is one exact extra
+rotation by -d), and `PageAllocator.release_n` gives back the surplus
+accounting pages a shrunk sequence no longer covers.
 """
 from __future__ import annotations
 
@@ -19,6 +29,8 @@ from typing import List, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.models import rope
 
 
 class PagedState(NamedTuple):
@@ -100,6 +112,75 @@ class PageAllocator:
         for p in self.owned.pop(seq_id, []):
             self.free.append(p)
 
+    def release_n(self, seq_id: int, n: int) -> None:
+        """Give back the last `n` pages of `seq_id` (LIFO, so a later
+        re-grow reuses the same physical ids first) — the shrink half of
+        the engine's `_kv_sync` after a context eviction."""
+        owned = self.owned.get(seq_id, [])
+        if n > len(owned):
+            raise ValueError(
+                f"seq {seq_id!r}: cannot release {n} pages, owns "
+                f"{len(owned)}")
+        for _ in range(n):
+            self.free.append(owned.pop())
+        if not owned:
+            self.owned.pop(seq_id, None)
+
     @property
     def utilization(self) -> float:
         return 1.0 - len(self.free) / max(self.n_pages, 1)
+
+
+# ==========================================================================
+# Sink+recent eviction (StreamingLLM, arXiv:2309.17453)
+# ==========================================================================
+def sink_recent_indices(length: int, n_sink: int, n_recent: int
+                        ) -> np.ndarray:
+    """Row indices that survive a sink+recent eviction of a `length`-token
+    context: the first `n_sink` positions (attention sinks) plus the last
+    `n_recent` (the recent window), in order."""
+    if n_sink < 0 or n_recent < 1:
+        raise ValueError(
+            f"need n_sink >= 0 and n_recent >= 1; got {n_sink}/{n_recent}")
+    if n_sink + n_recent >= length:
+        raise ValueError(
+            f"sink+recent keeps {n_sink}+{n_recent} of {length} tokens — "
+            "nothing to evict")
+    return np.concatenate([
+        np.arange(n_sink), np.arange(length - n_recent, length),
+    ]).astype(np.int32)
+
+
+def compact_slot_kv(cache: dict, slot: int, keep: np.ndarray, cfg
+                    ) -> dict:
+    """Gather the surviving rows of batch slot `slot` to the front of a
+    contiguous (L, B, S, Hk, hd) KV cache, in place of positions
+    0..len(keep).
+
+    Kept keys are re-rotated by their position delta (new - old, <= 0):
+    rotate-half RoPE rotations compose additively, so the result is
+    bit-for-bit what a fresh prefill at the compacted positions would
+    have written — relative attention distances inside the kept context
+    stay exact (the StreamingLLM KV shift).  Holds for M-RoPE configs
+    too because the engine feeds text-fallback positions (all three
+    components equal), which degenerate to 1-D RoPE.
+
+    Rows past len(keep) are left stale: the causal mask (prefill) and the
+    per-slot length (decode) make them invisible, and the next prefill
+    overwrites them.  Updates `cache["length"][slot]`; the caller owns
+    the host-side length mirror and page accounting."""
+    keep = np.asarray(keep, np.int32)
+    n_keep = int(keep.shape[0])
+    keep_j = jnp.asarray(keep)
+    rows_k = cache["k"][:, slot][:, keep_j]      # (L, n_keep, Hk, hd)
+    rows_v = cache["v"][:, slot][:, keep_j]
+    delta = jnp.asarray(np.arange(n_keep, dtype=np.int32) - keep)
+    cos, sin = rope.rope_angles(delta, cfg.head_dim_, cfg.rope_theta)
+    # apply_rope wants (B, S, H, D) with (B, S, half) angles; the layer
+    # axis stands in for batch
+    rows_k = rope.apply_rope(rows_k, cos[None], sin[None])
+    cache = dict(cache)
+    cache["k"] = cache["k"].at[:, slot, :n_keep].set(rows_k)
+    cache["v"] = cache["v"].at[:, slot, :n_keep].set(rows_v)
+    cache["length"] = cache["length"].at[slot].set(n_keep)
+    return cache

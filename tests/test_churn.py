@@ -204,6 +204,55 @@ def test_churn_result_json_round_trip(tmp_path):
         validate_churn_result_json(bad)
 
 
+def test_engine_slot_revival_isolated_under_eviction():
+    """Churn + eviction: a tenant whose predecessor in the same engine
+    slot streamed far past max_len (forcing sink+recent compactions of
+    that slot's cache) must behave bit-identically to running in a
+    never-used slot — stale evicted rows and re-rotated keys from the
+    previous tenancy are invisible to the fresh session."""
+    from repro.core.fleet import Fleet
+
+    base = ScenarioSpec(scene="retail", frame_h=64, frame_w=64,
+                        duration=6.0, cc_kind="gcc", qa="periodic",
+                        qa_kwargs=dict(start=0.5, period=1.0,
+                                       answer_window=0.7, count=5),
+                        server="engine",
+                        engine_kwargs=dict(max_len=64, step_dt=0.004))
+    dt = 1.0 / base.fps
+    n = lambda s: int(round(s / dt))
+    engine_cfg = dict(base.engine_kwargs)
+
+    def drive(with_tenant_a: bool):
+        fleet = Fleet([build_session(
+            base.with_(scene_seed=1, trace_seed=1, seed=1), None)],
+            server="engine", engine_cfg=engine_cfg)
+        ma = None
+        if not with_tenant_a:
+            fleet.deactivate(0, 0.0)
+        for i in range(n(3.0)):                    # [0, 3): A live or dead
+            t = i * dt
+            if with_tenant_a and t >= 2.5 and fleet.alive[0]:
+                ma = fleet.deactivate(0, t)        # A departs at 2.5
+            fleet.tick(t)
+        member_b = build_session(
+            base.with_(scene_seed=9, trace_seed=9, seed=9), None)
+        fleet.activate(0, member_b, 3.0)
+        for i in range(n(3.0), n(6.0)):            # [3, 6): B live
+            fleet.tick(i * dt)
+        return ma, fleet.deactivate(0, 6.0)
+
+    ma, mb1 = drive(True)
+    _, mb2 = drive(False)
+    # tenant A really exercised the eviction path in the shared slot
+    assert ma.server_evictions > 0 and ma.server_rollovers == 0
+    assert mb1.qa_results == mb2.qa_results
+    assert mb1.server_confidences == mb2.server_confidences
+    assert mb1.server_ttfts == mb2.server_ttfts
+    assert mb1.latencies == mb2.latencies
+    assert (mb1.server_evictions, mb1.server_rollovers) == \
+        (mb2.server_evictions, mb2.server_rollovers)
+
+
 def test_engine_churn_end_to_end(tmp_path):
     spec = _churn_spec(
         duration=4.0, server="engine",

@@ -432,18 +432,65 @@ def _bridge(n=1, **kw):
 
 
 def test_bridge_rolls_context_over_at_capacity(scene64):
-    br = _bridge()
+    # eviction=False opts back into the legacy close+reopen rollover
+    br = _bridge(eviction=False)
+    assert br.engine.eviction is None
     br.open(0, scene64, fps=10.0)
     for tick in range(40):  # 160 patch tokens vs max_len 96
         br.extend(0, scene64.render(tick % 8), tick * 0.1)
     tel = br.telemetry[0]
     assert tel.rollovers >= 1
+    assert tel.evictions == 0
     assert br.engine.session_length(0) + 4 + br._reserve <= 96 + 4
     # a query still fits after heavy streaming
     class _QA:
         kind, obj_idx, t_ask = "read_code", 0, 1.0
     assert br.answer_now(0, _QA(), 5.0) in (True, False)
     assert len(tel.ttfts) == 1 and len(tel.confidences) == 1
+
+
+def test_bridge_rollover_is_clock_stamped(scene64):
+    """Regression: the rollover reopen used to call open_session with no
+    `now=`, so the reopened session was clock-blind — no admission
+    bookkeeping was stamped, unlike every other open path.  A rollover
+    behind a busy engine clock must record the admission delay in the
+    telemetry like `open` does."""
+    br = _bridge(eviction=False, step_dt=0.05, max_len=32)
+    br.open(0, scene64, fps=10.0)
+    # 4 patch tokens/extend vs max_len 32 with reserve 7: rollover on
+    # the 6th extend.  step_dt=0.05 per chunk keeps the engine clock
+    # well ahead of the (stale) fleet tick time, so the reopen queues.
+    for tick in range(7):
+        br.extend(0, scene64.render(tick), now=0.0)
+    tel = br.telemetry[0]
+    assert tel.rollovers >= 1
+    sess = br.engine._sessions[0]
+    # the reopened session is stamped on the simulated clock: it waited
+    # for the engine's earlier work, and the wait joined the telemetry
+    assert sess.admission_delay > 0.0
+    assert sess.admission_delay in tel.queue_delays
+
+
+def test_bridge_rollover_with_inflight_query_raises(scene64):
+    """Rollover (and `close`) while a query is in flight would silently
+    drop its decode state; both must refuse instead."""
+    br = _bridge(eviction=False, max_len=32)
+    br.open(0, scene64, fps=10.0)
+    class _QA:
+        kind, obj_idx, t_ask = "read_code", 0, 0.1
+    br.submit(0, _QA(), 0.1)
+    with pytest.raises(RuntimeError, match="in-flight"):
+        br.close(0)
+    # force the next extend over capacity while the query is pending
+    with pytest.raises(RuntimeError, match="in-flight"):
+        for tick in range(6):
+            br.extend(0, scene64.render(tick), 0.2 + tick * 0.1)
+    # draining clears the way: the session rolls over / closes cleanly
+    br.drain(0.5)
+    for tick in range(6):
+        br.extend(0, scene64.render(tick), 0.8 + tick * 0.1)
+    assert br.telemetry[0].rollovers >= 1
+    br.close(0)
 
 
 def test_bridge_is_deterministic(scene64):
@@ -588,6 +635,234 @@ def test_run_scenarios_engine_cohort(tmp_path):
     assert servers == {"oracle", "engine"}
 
 
+# --------------------------------------------------------------------------
+# Sink+recent eviction (StreamingLLM): kv_cache compaction, engine
+# policy, bridge parity
+# --------------------------------------------------------------------------
+def test_sink_recent_indices():
+    np.testing.assert_array_equal(
+        kv_cache.sink_recent_indices(10, 2, 3), [0, 1, 7, 8, 9])
+    np.testing.assert_array_equal(
+        kv_cache.sink_recent_indices(5, 0, 2), [3, 4])
+    with pytest.raises(ValueError, match="nothing to evict"):
+        kv_cache.sink_recent_indices(5, 2, 3)
+    with pytest.raises(ValueError, match="n_recent"):
+        kv_cache.sink_recent_indices(5, 2, 0)
+
+
+def test_page_allocator_release_n():
+    al = kv_cache.PageAllocator(8)
+    got = al.alloc("a", 5)
+    al.release_n("a", 2)
+    assert al.owned["a"] == got[:3]
+    assert al.utilization == pytest.approx(3 / 8)
+    with pytest.raises(ValueError, match="cannot release"):
+        al.release_n("a", 4)
+    al.release_n("a", 3)
+    assert "a" not in al.owned and al.utilization == 0.0
+
+
+def test_compact_slot_kv_gathers_and_rerotates():
+    """Compaction must equal gathering the surviving rows and re-rotating
+    each kept key from its old RoPE position to its new one: values move
+    untouched, sink rows (delta 0) are bit-identical, other slots and
+    the stale tail are untouched."""
+    from repro.models import rope
+
+    L, B, S, Hk, hd = TINY.n_layers, 2, 12, TINY.n_kv_heads, TINY.head_dim_
+    rng = np.random.default_rng(0)
+    k_raw = rng.standard_normal((L, B, S, Hk, hd)).astype(np.float32)
+    v_raw = rng.standard_normal((L, B, S, Hk, hd)).astype(np.float32)
+    pos = jax.numpy.arange(S)[None]  # (1, S) broadcasting over (L*B, ...)
+    cos, sin = rope.rope_angles(pos, hd, TINY.rope_theta)
+    k_cached = np.asarray(rope.apply_rope(
+        jax.numpy.asarray(k_raw.reshape(L * B, S, Hk, hd)), cos, sin)
+    ).reshape(L, B, S, Hk, hd)
+    cache = {"k": jax.numpy.asarray(k_cached),
+             "v": jax.numpy.asarray(v_raw),
+             "length": jax.numpy.full((B,), S, jax.numpy.int32)}
+    keep = kv_cache.sink_recent_indices(S, 2, 4)      # [0 1 8 9 10 11]
+    out = kv_cache.compact_slot_kv(cache, 1, keep, TINY)
+    n_keep = len(keep)
+    # expected: the ORIGINAL (unrotated) rows rotated at their NEW pos
+    new_pos = jax.numpy.arange(n_keep)[None]
+    c2, s2 = rope.rope_angles(new_pos, hd, TINY.rope_theta)
+    want_k = np.asarray(rope.apply_rope(
+        jax.numpy.asarray(k_raw[:, 1][:, keep]), c2, s2))
+    got_k = np.asarray(out["k"][:, 1, :n_keep])
+    np.testing.assert_allclose(got_k, want_k, atol=1e-5, rtol=1e-5)
+    # sink rows didn't move: delta-0 rotation is exact
+    np.testing.assert_array_equal(np.asarray(out["k"][:, 1, :2]),
+                                  k_cached[:, 1, :2])
+    # values gather without rotation, bit-exact
+    np.testing.assert_array_equal(np.asarray(out["v"][:, 1, :n_keep]),
+                                  v_raw[:, 1][:, keep])
+    # untouched: the other slot, the stale tail, and the length vector
+    np.testing.assert_array_equal(np.asarray(out["k"][:, 0]),
+                                  k_cached[:, 0])
+    np.testing.assert_array_equal(np.asarray(out["k"][:, 1, n_keep:]),
+                                  k_cached[:, 1, n_keep:])
+    assert int(out["length"][1]) == n_keep and int(out["length"][0]) == S
+
+
+def test_engine_evicts_instead_of_overflowing(tiny_params):
+    """With eviction="sink" a session streams far past max_len: every
+    overflow compacts to sink+recent, the length mirror / device length /
+    page accounting agree, and counters tally the evicted tokens."""
+    eng = _engine(tiny_params, max_len=32, eviction="sink", n_sink=4,
+                  kv_page=4)
+    eng.open_session(0)
+    rng = np.random.default_rng(0)
+    for _ in range(16):  # 128 tokens = 4x max_len
+        eng.extend_session(
+            0, rng.standard_normal((8, TINY.d_model)).astype(np.float32))
+    assert eng.session_length(0) <= 32
+    assert eng.stats.evictions > 0
+    assert eng.stats.tokens_evicted >= 128 - 32
+    sess = eng._sessions[0]
+    assert int(eng.cache["length"][sess.slot]) == sess.length
+    # page accounting shrank with the compactions: pages cover the
+    # current length, not the high-water mark
+    assert len(eng.allocator.owned[("sid", 0)]) == -(-sess.length // 4)
+    assert eng.session_eviction_stats(0) == (sess.evictions,
+                                             sess.evicted_tokens)
+    # a query still fits and decodes after heavy eviction
+    req = eng.submit_query(0, np.asarray([1, 2, 3], np.int32), max_new=4)
+    eng.drain_queries()
+    assert len(req.output) == 4
+
+
+def test_engine_eviction_limits_and_guards(tiny_params):
+    eng = _engine(tiny_params, max_len=32, eviction="sink", n_sink=4)
+    eng.open_session(0)
+    eng.extend_session(0, np.zeros((30, TINY.d_model), np.float32))
+    # an op bigger than the post-eviction budget still overflows
+    with pytest.raises(SessionOverflowError, match="even after"):
+        eng.extend_session(0, np.zeros((30, TINY.d_model), np.float32))
+    assert eng.session_length(0) == 30  # failed op didn't evict
+    # eviction mid-query would shift cache positions under the decode
+    eng2 = _engine(tiny_params, max_len=32, eviction="sink", n_sink=4)
+    eng2.open_session(0)
+    eng2.extend_session(0, np.zeros((24, TINY.d_model), np.float32))
+    eng2.submit_query(0, np.asarray([1], np.int32), max_new=2)
+    with pytest.raises(RuntimeError, match="in flight"):
+        eng2.extend_session(0, np.zeros((8, TINY.d_model), np.float32))
+    # knob validation
+    with pytest.raises(ValueError, match="eviction"):
+        _engine(tiny_params, eviction="lru")
+    with pytest.raises(ValueError, match="evict_target"):
+        _engine(tiny_params, max_len=32, eviction="sink", n_sink=8,
+                evict_target=8)
+
+
+def test_eviction_preserves_unflushed_token(tiny_params):
+    """The lazy-commit final answer token must survive an eviction: it
+    lives host-side until the next prefill, and eviction only compacts
+    committed cache rows."""
+    eng = _engine(tiny_params, max_len=32, eviction="sink", n_sink=4,
+                  step_dt=0.0)
+    eng.open_session(0)
+    rng = np.random.default_rng(1)
+    eng.extend_session(
+        0, rng.standard_normal((8, TINY.d_model)).astype(np.float32))
+    eng.submit_query(0, np.asarray([5, 6], np.int32), max_new=3)
+    eng.drain_queries()
+    sess = eng._sessions[0]
+    assert sess.unflushed is not None
+    assert eng.session_length(0) == sess.length + 1
+    # this extend overflows (12 + 1 + 24 > 32): evict, then flush
+    eng.extend_session(
+        0, rng.standard_normal((24, TINY.d_model)).astype(np.float32))
+    assert sess.unflushed is None
+    assert sess.evictions == 1
+    # post-eviction length = allowed target + unflushed + new embeds
+    assert sess.length == min(16, 32 - 25) + 1 + 24
+
+
+def test_close_session_guards_inflight_state(tiny_params):
+    eng = _engine(tiny_params, max_len=64)
+    eng.open_session(0)
+    eng.extend_session(0, np.ones((4, TINY.d_model), np.float32))
+    eng.submit_query(0, np.asarray([1, 2], np.int32), max_new=2)
+    with pytest.raises(RuntimeError, match="in-flight"):
+        eng.close_session(0)
+    eng.drain_queries()
+    # drained: the final answer token is still unflushed
+    with pytest.raises(RuntimeError, match="unflushed"):
+        eng.close_session(0)
+    # flushing it (empty extend) makes the close clean...
+    eng.extend_session(0, np.zeros((0, TINY.d_model), np.float32))
+    eng.close_session(0)
+    # ...and discard=True force-closes through either guard
+    eng.open_session(1)
+    eng.extend_session(1, np.ones((4, TINY.d_model), np.float32))
+    eng.submit_query(1, np.asarray([1], np.int32), max_new=2)
+    eng.close_session(1, discard=True)
+    assert 1 not in eng._sessions
+
+
+def test_retire_allows_decode_to_fill_max_len(tiny_params):
+    """Regression: the full-slot check retired a request one token early
+    (`>= max_len - 1`) and read the raw slot cache length.  A request
+    whose prompt+output exactly fills max_len must get that last token:
+    with prompt 8 and max_len 16, 9 output tokens fit (the final sampled
+    token needs no cache row), not 8."""
+    eng = _engine(tiny_params, max_batch=1, max_len=16)
+    eng.submit(_req(0, n=8, max_new=100))
+    done = eng.run_until_drained()
+    assert len(done) == 1
+    assert len(done[0].output) == 16 - 8 + 1
+    # the cache row budget was exactly consumed, never exceeded
+    assert int(eng.cache["length"][0]) == 16
+
+
+def test_bridge_eviction_never_rolls_over(scene64):
+    """Parity tier (a): a session streaming >= 4x max_len frame tokens
+    under the default (eviction) bridge never rolls over, keeps
+    answering, and is digest-reproducible across two runs."""
+    def run_once():
+        br = _bridge(max_len=64)
+        assert br.eviction and br.engine.eviction == "sink"
+        br.open(0, scene64, fps=10.0)
+        for tick in range(64):  # 256 patch tokens = 4x max_len
+            br.extend(0, scene64.render(tick % 8), tick * 0.1)
+        class _QA:
+            kind, obj_idx, t_ask = "read_code", 0, 3.0
+        br.submit(0, _QA(), 6.5)
+        req = br._pending[0][1]
+        br.drain(6.5)
+        tel = br.telemetry[0]
+        return (tuple(req.output), tel.evictions, tel.evicted_tokens,
+                tel.rollovers, tuple(tel.ttfts), tuple(tel.queue_delays),
+                tuple(tel.confidences))
+
+    r1, r2 = run_once(), run_once()
+    assert r1 == r2
+    _, evictions, evicted_tokens, rollovers, *_ = r1
+    assert rollovers == 0
+    assert evictions > 0
+    assert evicted_tokens >= 256 - 64
+
+
+def test_bridge_short_session_identical_with_or_without_eviction(scene64):
+    """Parity tier (b): while no overflow occurs, the eviction engine
+    path is bit-identical to the legacy (rollover-mode, i.e. pre-PR)
+    path — eviction only engages at the capacity boundary."""
+    def run_once(evict: bool):
+        br = _bridge(max_len=96, eviction=evict)
+        br.open(0, scene64, fps=10.0)
+        for tick in range(6):  # 24 tokens: far from max_len
+            br.extend(0, scene64.render(tick), tick * 0.1)
+        class _QA:
+            kind, obj_idx, t_ask = "read_code", 0, 0.3
+        result = br.answer_now(0, _QA(), 0.7)
+        tel = br.telemetry[0]
+        return (result, tuple(tel.ttfts), tuple(tel.queue_delays),
+                tuple(tel.confidences), br.engine.session_length(0))
+
+    assert run_once(True) == run_once(False)
+
+
 def test_serving_snapshot_schema():
     from benchmarks.snapshot import (check_serving_coverage,
                                      load_serving_snapshot,
@@ -597,7 +872,16 @@ def test_serving_snapshot_schema():
     validate_serving_snapshot(doc)
     assert check_serving_coverage(doc, dict(doc["metrics"])) == []
     missing = check_serving_coverage(doc, {})
-    assert len(missing) == len(doc["metrics"])
+    # one entry per committed metric, plus the structural requirement
+    # that the fresh bench produce the eviction.* stage at all
+    assert len(missing) == len(doc["metrics"]) + 1
+    assert any("eviction" in m for m in missing)
+    # a fresh bench without the eviction stage fails even if the
+    # committed document predates it
+    no_evict = {k: v for k, v in doc["metrics"].items()
+                if not k.startswith("eviction.")}
+    legacy = dict(doc, metrics=no_evict)
+    assert check_serving_coverage(legacy, no_evict) != []
     bad = dict(doc)
     bad["metrics"] = {}
     with pytest.raises(ValueError):
